@@ -1,0 +1,72 @@
+"""Paper Fig. 5 / Fig. 6 / Table 2 — checkpoint & restore latency vs model
+size, with the CRIU-style stage breakdown:
+
+  lock (Fig.5 "lock")      — device quiesce
+  ckpt (Fig.5 "ckpt")      — device→host snapshot
+  frozen                   — total time the job is paused (sync mode)
+  write                    — pack + commit to storage
+  restore / unlock (Fig.6) — unified CPU+GPU restore, resume
+
+The model ladder stands in for GPT-2 124M→1.5B; sizes scale the same way
+(checkpoint bytes ∝ params; paper's key curve).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import LADDER, POLICY, Timer, emit, ladder_config, mesh1
+from repro.core import SnapshotEngine
+from repro.optim import AdamW
+from repro.optim.schedule import constant
+from repro.models.encdec import build_model
+
+
+def run(sizes=("S", "M", "L", "XL")) -> None:
+    mesh = mesh1()
+    for size in sizes:
+        cfg = ladder_config(size)
+        model = build_model(cfg, POLICY, mesh, compute_dtype=jnp.float32,
+                            remat=False)
+        opt = AdamW(lr=constant(1e-3))
+        params = model.init(jax.random.key(0))
+        opt_state = opt.init(params)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        emit(f"fig5.{size}.params", n_params, "count")
+
+        run_dir = tempfile.mkdtemp(prefix=f"bench_ckpt_{size}_")
+        try:
+            eng = SnapshotEngine(run_dir, mesh=mesh)
+            eng.attach(lambda: {"train_state": {"params": params,
+                                                "opt": opt_state}})
+            eng.register_host_state("cursor", lambda: {"step": 1},
+                                    lambda st: None)
+            with Timer() as t:
+                eng.checkpoint(1)
+            st = eng.last_stats
+            emit(f"fig5.{size}.lock", st["lock_s"] * 1e3, "ms")
+            emit(f"fig5.{size}.ckpt_dev2host",
+                 st["device_to_host_s"] * 1e3, "ms")
+            emit(f"fig5.{size}.frozen", st["frozen_s"] * 1e3, "ms")
+            emit(f"fig5.{size}.write", st["write_s"] * 1e3, "ms")
+            emit(f"fig5.{size}.total", t.s * 1e3, "ms")
+            emit(f"fig5.{size}.bytes", st["written_bytes"] / 2**20, "MiB")
+
+            eng2 = SnapshotEngine(run_dir, mesh=mesh)
+            eng2.attach(lambda: {"train_state": None})
+            eng2.register_host_state("cursor", lambda: None, lambda st: None)
+            with Timer() as t:
+                eng2.restore()
+            st2 = eng2.last_stats
+            emit(f"fig6.{size}.restore_total", t.s * 1e3, "ms")
+            emit(f"fig6.{size}.host2device",
+                 st2["host_to_device_s"] * 1e3, "ms")
+        finally:
+            shutil.rmtree(run_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Paper Fig. 2 — steady-state overhead of API-interception checkpointing.
+
+Trains the same small network with and without the Cricket-style
+interception layer for an increasing number of epochs; reports intercepted
+call counts, per-call overhead, and total wall-time inflation.  The paper's
+claim reproduced here: the overhead is on the critical path and grows with
+iteration count, while CRIUgpu's steady state is exactly the baseline
+(no interposition — nothing to measure).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, emit
+
+
+def _make_step():
+    @jax.jit
+    def step(w, x, y):
+        def loss(w):
+            h = jnp.tanh(x @ w["w1"])
+            p = h @ w["w2"]
+            return jnp.mean((p - y) ** 2)
+        g = jax.grad(loss)(w)
+        return jax.tree.map(lambda a, b: a - 0.01 * b, w, g)
+    return step
+
+
+def run(epochs_list=(1, 2, 4, 8, 16), iters_per_epoch=32) -> None:
+    from repro.baselines.interception import InterceptionCheckpointer
+
+    key = jax.random.key(0)
+    w = {"w1": jax.random.normal(key, (10, 50)) * 0.1,
+         "w2": jax.random.normal(key, (50, 1)) * 0.1}
+    x = np.random.default_rng(0).normal(size=(64, 10)).astype(np.float32)
+    y = np.random.default_rng(1).normal(size=(64, 1)).astype(np.float32)
+    step = _make_step()
+    v = w
+    for _ in range(8):                     # compile + warm dispatch path
+        v = step(v, x, y)
+    jax.block_until_ready(v)
+
+    for epochs in epochs_list:
+        n = epochs * iters_per_epoch
+        v = w
+        with Timer() as tb:
+            for _ in range(n):
+                v = step(v, x, y)
+            jax.block_until_ready(v)
+        baseline_s = tb.s
+
+        ic = InterceptionCheckpointer()
+        ic.register_initial_state("w", w)
+        wrapped = ic.wrap(step, "step")
+        v = w
+        with Timer() as ti:
+            for _ in range(n):
+                v = wrapped(v, x, y)
+            jax.block_until_ready(v)
+        intercepted_s = ti.s
+
+        emit(f"fig2.epochs={epochs}.baseline", baseline_s, "s")
+        emit(f"fig2.epochs={epochs}.intercepted", intercepted_s, "s")
+        emit(f"fig2.epochs={epochs}.calls",
+             ic.stats["intercepted_calls"], "calls")
+        emit(f"fig2.epochs={epochs}.overhead",
+             (intercepted_s - baseline_s) / max(n, 1) * 1e6, "us/call")
+        emit(f"fig2.epochs={epochs}.logged_mb",
+             ic.stats["logged_bytes"] / 2**20, "MiB")
+        # CRIUgpu steady state == baseline by construction (no interposition)
+        emit(f"fig2.epochs={epochs}.criugpu", baseline_s, "s")
+
+
+if __name__ == "__main__":
+    run()

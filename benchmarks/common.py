@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark harness.
+
+Models are reduced same-family configs at a ladder of sizes (the paper's
+GPT-2 124M→1.5B ladder, scaled to what a CPU container trains in seconds);
+every benchmark prints ``name,value,unit`` CSV rows so benchmarks.run can
+tee one machine-readable stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.sharding import get_policy
+
+POLICY = get_policy("baseline")
+
+# size ladder: multiplier -> (d_model, layers, d_ff)
+LADDER = {
+    "S": dict(d_model=64, num_layers=2, d_ff=128),
+    "M": dict(d_model=128, num_layers=4, d_ff=256),
+    "L": dict(d_model=256, num_layers=4, d_ff=512),
+    "XL": dict(d_model=384, num_layers=6, d_ff=768),
+}
+
+
+def ladder_config(size: str, arch: str = "qwen1.5-0.5b", **extra):
+    kw = dict(LADDER[size])
+    if arch == "qwen1.5-0.5b":
+        kw["num_heads"] = kw["d_model"] // 16
+        kw["num_kv_heads"] = kw["d_model"] // 16
+        kw["head_dim"] = 16
+    kw.update(extra)
+    return get_smoke_config(arch, vocab_size=2048, **kw)
+
+
+def mesh1():
+    from jax.sharding import AxisType
+    return jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+
+
+def emit(name: str, value, unit: str = "") -> None:
+    if isinstance(value, float):
+        print(f"{name},{value:.6g},{unit}", flush=True)
+    else:
+        print(f"{name},{value},{unit}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

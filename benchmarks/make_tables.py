@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+the dry-run artifacts.  Usage: PYTHONPATH=src:. python -m benchmarks.make_tables
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load_all():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt(v, digits=3):
+    if v == 0:
+        return "0"
+    if abs(v) >= 1000 or abs(v) < 0.001:
+        return f"{v:.2e}"
+    return f"{v:.{digits}g}"
+
+
+def roofline_table(recs, mesh="pod", policy="baseline", variant="base"):
+    rows = [r for r in recs if r["mesh"] == mesh and r["policy"] == policy
+            and r.get("variant", "base") == variant]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_mem^flash | "
+           "t_coll (s) | dominant | MODEL/HLO | frac | frac^flash |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_memory_flash_s'])} | "
+            f"{fmt(r['t_collective_s'])} | {r['dominant']} | "
+            f"{fmt(r['useful_flops_ratio'])} | "
+            f"{fmt(r.get('roofline_fraction', 0), 3)} | "
+            f"{fmt(r.get('roofline_fraction_flash', 0), 3)} |")
+    return "\n".join(out)
+
+
+def memory_table(recs, mesh="pod"):
+    rows = [r for r in recs if r["mesh"] == mesh
+            and r["policy"] == "baseline"
+            and r.get("variant", "base") == "base"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | args (GiB/dev) | temp (GiB/dev) | "
+           "compile (s) |", "|---|---|---|---|---|"]
+    for r in rows:
+        m = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} | "
+            f"{r.get('compile_s', 0):.1f} |")
+    return "\n".join(out)
+
+
+def perf_rows(recs):
+    """All non-baseline runs (hillclimb iterations)."""
+    rows = [r for r in recs if r["policy"] != "baseline"
+            or r.get("variant", "base") != "base"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["policy"],
+                             r.get("variant", "")))
+    out = ["| arch | shape | policy | variant | t_comp | t_mem | "
+           "t_mem^fl | t_coll | frac | frac^fl |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']} | "
+            f"{r.get('variant','base')} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_memory_flash_s'])} | "
+            f"{fmt(r['t_collective_s'])} | "
+            f"{fmt(r.get('roofline_fraction', 0))} | "
+            f"{fmt(r.get('roofline_fraction_flash', 0))} |")
+    return "\n".join(out)
+
+
+def main():
+    recs = load_all()
+    print("## single-pod baseline roofline\n")
+    print(roofline_table(recs, "pod"))
+    print("\n## multi-pod baseline roofline\n")
+    print(roofline_table(recs, "multipod"))
+    print("\n## memory analysis (single-pod baseline)\n")
+    print(memory_table(recs))
+    print("\n## hillclimb iterations\n")
+    print(perf_rows(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Roofline report generator — reads the dry-run artifacts and prints the
+per-(arch × shape × mesh) three-term roofline table used in EXPERIMENTS.md.
+
+  compute    = HLO_FLOPs / (chips · 197 TFLOP/s)
+  memory     = HLO_bytes / (chips · 819 GB/s)
+  collective = wire_bytes / (chips · 50 GB/s)   [per-device census]
+
+Also derives MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the roofline
+fraction = max-term / sum-proxy the §Perf loop hillclimbs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load(policy: str = "baseline", mesh: str = "pod") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}__{policy}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_fraction(rec: Dict) -> float:
+    """Fraction of the dominant-term bound actually 'useful': how close the
+    compiled program is to a program that only did MODEL_FLOPS of compute at
+    peak.  ideal_s = MODEL_FLOPS/(chips*peak); actual bound = max(term)."""
+    if "roofline_fraction" in rec:
+        return rec["roofline_fraction"]
+    ideal = rec["model_flops"] / rec["n_devices"] / 197e12
+    bound = rec["roofline_bound_s"]
+    return ideal / bound if bound else 0.0
+
+
+def fmt_row(rec: Dict) -> str:
+    return (f"{rec['arch']:<22} {rec['shape']:<12} {rec['mesh']:<8} "
+            f"{rec['t_compute_s']:>11.3e} {rec['t_memory_s']:>11.3e} "
+            f"{rec['t_collective_s']:>11.3e} {rec['dominant']:<10} "
+            f"{rec['useful_flops_ratio']:>7.3f} "
+            f"{roofline_fraction(rec):>8.4f}")
+
+
+HEADER = (f"{'arch':<22} {'shape':<12} {'mesh':<8} "
+          f"{'t_compute':>11} {'t_memory':>11} {'t_coll':>11} "
+          f"{'dominant':<10} {'useful':>7} {'frac':>8}")
+
+
+def run(policy: str = "baseline") -> None:
+    print(HEADER)
+    for mesh in ("pod", "multipod"):
+        for rec in load(policy, mesh):
+            print(fmt_row(rec))
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="baseline")
+    args = ap.parse_args()
+    run(args.policy)
+
+
+if __name__ == "__main__":
+    main()

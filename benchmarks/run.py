@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fig2 t3    # subset by tag
+
+Prints ``name,value,unit`` CSV (stdout) — the EXPERIMENTS.md numbers are
+generated from this stream.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+TAGS = {
+    "fig2": ("benchmarks.bench_interception", "Fig 2: interception overhead"),
+    "fig5": ("benchmarks.bench_ckpt_restore",
+             "Fig 5/6 + Table 2: ckpt/restore vs model size"),
+    "t3": ("benchmarks.bench_scaling", "Table 3: data-parallel scaling"),
+    "t4": ("benchmarks.bench_size_breakdown",
+           "Table 4: device/host split"),
+    "t5": ("benchmarks.bench_hpc_micro", "Table 5/Fig 7: HPC micro"),
+    "beyond": ("benchmarks.bench_beyond_paper",
+               "Beyond-paper: async/incremental/compress/replicate"),
+    "roofline": ("benchmarks.roofline", "§Roofline table from dry-run"),
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    tags = argv or list(TAGS)
+    failures = []
+    for tag in tags:
+        mod_name, desc = TAGS[tag]
+        print(f"# === {tag}: {desc} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(tag)
+        print(f"# --- {tag} done in {time.perf_counter() - t0:.1f}s ---",
+              flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        return 1
+    print("# all benchmarks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from repro.baselines.interception import InterceptionCheckpointer  # noqa: F401

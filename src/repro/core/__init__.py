@@ -1,0 +1,18 @@
+"""CRIUgpu-adapted unified transparent checkpointing for JAX workloads.
+
+Public API:
+  SnapshotEngine   — lock → checkpoint → dump → unlock; restore (+elastic)
+  Plugin / Hook    — CRIU-style plugin hooks
+  DeviceLock       — cuda-checkpoint lock/unlock analogue
+  DirReplicator / MemReplicator — Gemini-style peer replication
+  MultiHostCommit  — two-phase manifest commit across hosts
+"""
+from repro.core.engine import SnapshotEngine, CheckpointAborted  # noqa: F401
+from repro.core.lock import DeviceLock, LockTimeout  # noqa: F401
+from repro.core.plugins import (Plugin, Hook, HookContext,  # noqa: F401
+                                CallbackPlugin, PluginRegistry)
+from repro.core.device_plugin import DevicePlugin  # noqa: F401
+from repro.core.snapshot_io import SnapshotStore  # noqa: F401
+from repro.core.replication import DirReplicator, MemReplicator  # noqa: F401
+from repro.core.multihost import (MultiHostCommit,  # noqa: F401
+                                  BarrierTimeout)

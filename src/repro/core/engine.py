@@ -1,0 +1,271 @@
+"""SnapshotEngine — unified, transparent CPU+device checkpointing.
+
+The CRIUgpu workflow (paper Fig. 4a), adapted to the JAX runtime:
+
+  checkpoint(step):
+    init plugins("dump")
+    ① PAUSE_DEVICES        lock: drain async dispatch (timeout → abort and
+                           leave the job running, paper §3.1.1)
+    ② CHECKPOINT_DEVICES   device→host: copy every addressable shard into
+                           host memory (replica-0 dedup)
+    ③ DUMP_EXT_STATE       host-side state via plugins (data cursor, RNG,
+                           metrics — the CRIU memory-dump analogue)
+    ④ write + commit       pack files, then MANIFEST.json atomically;
+                           sync mode: before resuming (paper-faithful —
+                           the app is "frozen" for dump+write);
+                           async mode: resume after ②/③, write in a
+                           background thread (beyond-paper, CheckFreq-style)
+    exit plugins(success)
+
+  restore(step, mesh, shardings):
+    read newest valid manifest (CRC-verified, torn images skipped)
+    RESTORE_EXT_STATE → UPDATE_TOPOLOGY_MAP → RESUME_DEVICES_LATE
+    identical topology → 1:1 shard placement; different → elastic reshard.
+
+Transparency contract: the training/serving code never defines checkpoint
+logic.  The runtime attaches a *state provider* (a zero-arg callable
+returning the live root pytrees — the "process tree"), and host-side bits
+register CallbackPlugins.  Device state is captured from the arrays
+themselves (avals + shardings + shard buffers), exactly as the driver owns
+GPU state in CRIUgpu.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.device_plugin import DevicePlugin
+from repro.core.lock import LockTimeout
+from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
+                                PluginRegistry)
+from repro.core.snapshot_io import (SnapshotStore, SnapshotReader,
+                                    SnapshotWriter, pack_host_blob)
+from repro.core.topology import mesh_fingerprint
+
+PyTree = Any
+StateProvider = Callable[[], Dict[str, PyTree]]
+
+
+class CheckpointAborted(RuntimeError):
+    pass
+
+
+class SnapshotEngine:
+    def __init__(self, run_dir: str,
+                 plugins: Optional[List[Plugin]] = None,
+                 mode: str = "sync",                # "sync" | "async"
+                 incremental: bool = False,
+                 compress: bool = False,
+                 keep: int = 0,                      # 0 = keep all
+                 lock_timeout_s: float = 10.0,
+                 replicator=None,                    # core.replication peer
+                 restore_threads: int = 0,           # parallel entry loads
+                 mesh=None):
+        assert mode in ("sync", "async")
+        self.run_dir = run_dir
+        os.makedirs(run_dir, exist_ok=True)
+        self.store = SnapshotStore(run_dir)
+        self.device_plugin = DevicePlugin(lock_timeout_s,
+                                          restore_threads=restore_threads)
+        self.registry = PluginRegistry([self.device_plugin]
+                                       + list(plugins or []))
+        self.mode = mode
+        self.incremental = incremental
+        self.compress = compress
+        self.keep = keep
+        self.replicator = replicator
+        self.mesh = mesh
+        self._provider: Optional[StateProvider] = None
+        self._pending: Optional[threading.Thread] = None
+        self._pending_err: List[BaseException] = []
+        self.last_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ wiring
+    def attach(self, provider: StateProvider) -> None:
+        """Attach the live state roots (the 'process tree')."""
+        self._provider = provider
+
+    def register_host_state(self, name: str, getter: Callable[[], Any],
+                            setter: Callable[[Any], None]) -> None:
+        self.registry.add(CallbackPlugin(name, getter, setter))
+
+    def add_plugin(self, plugin: Plugin) -> None:
+        self.registry.add(plugin)
+
+    # ------------------------------------------------------------ dump
+    def checkpoint(self, step: int) -> str:
+        """Create a unified snapshot.  Returns the snapshot directory."""
+        if self._provider is None:
+            raise RuntimeError("no state provider attached")
+        self.wait_pending()
+
+        ctx = HookContext("dump", step)
+        ctx.roots = self._provider()
+        self.registry.init_all("dump")
+        t_start = time.perf_counter()
+        try:
+            self.registry.run(Hook.PAUSE_DEVICES, ctx)       # ① lock
+            t_frozen = time.perf_counter()
+            self.registry.run(Hook.CHECKPOINT_DEVICES, ctx)  # ② dev→host
+            self.registry.run(Hook.DUMP_EXT_STATE, ctx)      # ③ host state
+            ctx.stats["frozen_s"] = time.perf_counter() - t_frozen
+        except LockTimeout as e:
+            # abort-to-running: nothing was mutated; plugins may roll back
+            self.registry.exit_all("dump", False)
+            raise CheckpointAborted(str(e)) from e
+        except Exception:
+            self.registry.exit_all("dump", False)
+            raise
+
+        if self.mode == "sync":
+            try:
+                path = self._write(ctx)                       # ④ write+commit
+            except Exception:
+                self.registry.exit_all("dump", False)
+                raise
+            ctx.stats["total_s"] = time.perf_counter() - t_start
+            self.device_plugin.lock.unlock()                  # resume
+            self.registry.exit_all("dump", True)
+            self.last_stats = dict(ctx.stats)
+            return path
+
+        # async: resume immediately, write in background (CheckFreq-style)
+        self.device_plugin.lock.unlock()
+        ctx.stats["locked_total_s"] = time.perf_counter() - t_start
+        path = self._snapshot_path(step)
+
+        def writer():
+            try:
+                self._write(ctx)
+                self.registry.exit_all("dump", True)
+            except BaseException as e:                        # pragma: no cover
+                self._pending_err.append(e)
+                self.registry.exit_all("dump", False)
+
+        self._pending = threading.Thread(target=writer, daemon=True)
+        self._pending.start()
+        self.last_stats = dict(ctx.stats)
+        return path
+
+    def _snapshot_path(self, step: int) -> str:
+        from repro.core.snapshot_io import snapshot_dir
+        return snapshot_dir(self.run_dir, step)
+
+    def _write(self, ctx: HookContext) -> str:
+        t0 = time.perf_counter()
+        prev_manifest = None
+        if self.incremental:
+            prev_step = self.store.latest_step()
+            if prev_step is not None:
+                prev_manifest = self.store.manifest(prev_step)
+        writer = SnapshotWriter(self.run_dir, ctx.step,
+                                host_id=jax.process_index(),
+                                compress=self.compress,
+                                prev_manifest=prev_manifest)
+        try:
+            writer.write_states(ctx.device_snapshot)
+            writer.write_host_state(ctx.host_state)
+            ctx.stats["write_s"] = time.perf_counter() - t0
+            ctx.stats["written_bytes"] = float(writer.written_bytes)
+            ctx.stats["reused_bytes"] = float(writer.reused_bytes)
+            ctx.stats["host_bytes"] = float(
+                len(pack_host_blob(ctx.host_state)))
+            path = writer.commit(topology=mesh_fingerprint(self.mesh),
+                                 stats=ctx.stats,
+                                 extra={"warnings": ctx.warnings,
+                                        "mode": self.mode,
+                                        "incremental": self.incremental})
+        except Exception:
+            writer.abort()
+            raise
+        if self.replicator is not None:
+            self.replicator.push(self.run_dir, ctx.step)
+        if self.keep:
+            self.store.gc(self.keep)
+        return path
+
+    def wait_pending(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+            if self._pending_err:
+                err = self._pending_err.pop()
+                raise err
+
+    # ------------------------------------------------------------ restore
+    def restore(self, step: Optional[int] = None, mesh=None,
+                shardings: Optional[Dict[str, Any]] = None,
+                verify: bool = True) -> Dict[str, Any]:
+        """Unified restore.  Returns {state_name: nested-dict pytree}; host
+        state is pushed back through the registered CallbackPlugins."""
+        self.wait_pending()
+        steps = self.store.list_steps()
+        if step is None:
+            # newest *valid* image: fall back past torn/corrupt snapshots
+            for s in reversed(steps):
+                try:
+                    reader = self.store.reader(s, verify=verify)
+                    if verify:
+                        reader.verify_all()
+                    step = s
+                    break
+                except Exception:
+                    continue
+            else:
+                if self.replicator is not None:
+                    got = self.replicator.pull_latest(self.run_dir)
+                    if got is not None:
+                        return self.restore(step=got, mesh=mesh,
+                                            shardings=shardings,
+                                            verify=verify)
+                raise FileNotFoundError(
+                    f"no restorable snapshot under {self.run_dir}")
+        else:
+            reader = self.store.reader(step, verify=verify)
+
+        ctx = HookContext("restore", step)
+        ctx.reader = reader
+        ctx.manifest = reader.manifest
+        ctx.target_mesh = mesh if mesh is not None else self.mesh
+        ctx.target_shardings = shardings or {}
+        self.registry.init_all("restore")
+        try:
+            ctx.host_state = reader.host_state()
+            self.registry.run(Hook.RESTORE_EXT_STATE, ctx)
+            self.registry.run(Hook.UPDATE_TOPOLOGY_MAP, ctx)
+            self.registry.run(Hook.RESUME_DEVICES_LATE, ctx)
+        except Exception:
+            self.registry.exit_all("restore", False)
+            raise
+        finally:
+            reader.close()
+        self.registry.exit_all("restore", True)
+        self.last_stats = dict(ctx.stats)
+        self.last_stats["topology_mode"] = ctx.topology_map.get("mode")
+        return ctx.restored
+
+    def restore_into(self, template: PyTree, state: str = "train_state",
+                     step: Optional[int] = None, mesh=None,
+                     shardings: Optional[PyTree] = None) -> PyTree:
+        """Restore one state into the caller's pytree structure (types
+        preserved — e.g. OptState dataclasses)."""
+        from repro.core.device_plugin import flatten_with_paths
+        restored = self.restore(step=step, mesh=mesh,
+                                shardings={state: shardings}
+                                if shardings is not None else None)
+        flat = flatten_with_paths(template)
+        raw = flatten_with_paths(restored[state])
+        missing = set(flat) - set(raw)
+        if missing:
+            raise KeyError(f"snapshot missing leaves: {sorted(missing)[:5]}")
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        keys = list(flatten_with_paths(template))
+        return jax.tree_util.tree_unflatten(
+            treedef, [raw[k] for k in keys])
+
+    def latest_step(self) -> Optional[int]:
+        return self.store.latest_step()

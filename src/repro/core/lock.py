@@ -1,0 +1,64 @@
+"""Device quiesce ("lock") — the cuda-checkpoint lock/unlock analogue.
+
+``cuda-checkpoint --action lock`` blocks new CUDA API calls and waits for
+in-flight work (stream callbacks etc.) to finish, with a timeout after which
+CRIUgpu rolls everything back to the running state (paper §3.1.1).
+
+The JAX runtime analogue: in-flight work is the async-dispatch queue behind
+every live ``jax.Array``; draining it (``block_until_ready``) guarantees no
+computation is mutating device state while we snapshot.  New dispatch cannot
+race us because the engine owns the only dispatching thread while locked —
+the single-controller equivalent of blocking the driver API.  The timeout +
+abort semantics are preserved: if the drain does not finish in time we raise
+and the engine restores the "running" state (i.e. gives up the checkpoint).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List
+
+import jax
+
+
+class LockTimeout(RuntimeError):
+    pass
+
+
+class DeviceLock:
+    def __init__(self, timeout_s: float = 10.0):
+        self.timeout_s = timeout_s
+        self.locked = False
+        self.lock_time_s = 0.0
+
+    def lock(self, arrays: List[Any]) -> float:
+        """Drain async dispatch for `arrays`.  Returns the drain time."""
+        t0 = time.perf_counter()
+        err: List[BaseException] = []
+
+        def drain():
+            try:
+                jax.block_until_ready(arrays)
+            except BaseException as e:               # pragma: no cover
+                err.append(e)
+
+        t = threading.Thread(target=drain, daemon=True)
+        t.start()
+        t.join(self.timeout_s)
+        if t.is_alive():
+            raise LockTimeout(
+                f"device quiesce exceeded {self.timeout_s}s "
+                f"(in-flight work still running); aborting checkpoint")
+        if err:
+            raise err[0]
+        self.locked = True
+        self.lock_time_s = time.perf_counter() - t0
+        return self.lock_time_s
+
+    def lock_all_live(self) -> float:
+        """Global quiesce over every live array in the process — the
+        whole-process lock cuda-checkpoint applies."""
+        return self.lock(list(jax.live_arrays()))
+
+    def unlock(self) -> None:
+        self.locked = False

@@ -1,0 +1,103 @@
+"""Topology fingerprints + translation (the GPUID-translation analogue).
+
+The AMD plugin translates GPUIDs so a checkpoint taken on one set of GPUs
+restores on a different (compatible) set (paper §3.1.2); the CUDA plugin
+requires identical GPU type/order (§4.4).  Our adaptation fingerprints the
+*mesh* (shape, axis names, device kind, process count) and supports three
+restore modes:
+
+  identical   — same fingerprint: shards are device_put 1:1 (fast path)
+  translated  — same logical mesh, different device ids/order: the
+                UPDATE_TOPOLOGY_MAP hook remaps shard -> device
+  resharded   — different mesh (elastic restore): global arrays are
+                reassembled from saved shards and re-laid-out onto the new
+                mesh; this is the capability the paper's GPU stack lacks and
+                flags as future work — on the JAX side it falls out of the
+                sharding model, and is our elastic-scaling path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> Dict[str, Any]:
+    if mesh is None:
+        devs = jax.devices()
+        return {"kind": devs[0].device_kind, "n_devices": len(devs),
+                "mesh_shape": None, "mesh_axes": None,
+                "process_count": jax.process_count()}
+    devs = mesh.devices.reshape(-1)
+    return {
+        "kind": devs[0].device_kind,
+        "n_devices": int(devs.size),
+        "mesh_shape": [int(s) for s in mesh.devices.shape],
+        "mesh_axes": list(mesh.axis_names),
+        "process_count": jax.process_count(),
+    }
+
+
+def compatibility(saved: Dict[str, Any], target: Dict[str, Any]) -> str:
+    if saved == target:
+        return "identical"
+    if (saved.get("mesh_shape") == target.get("mesh_shape")
+            and saved.get("mesh_axes") == target.get("mesh_axes")):
+        return "translated"
+    return "resharded"
+
+
+# ---------------------------------------------------------------- specs
+def spec_to_json(spec: PartitionSpec) -> list:
+    out = []
+    for e in tuple(spec):
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            out.append(list(e))
+        else:
+            out.append([e])
+    return out
+
+
+def spec_from_json(j) -> PartitionSpec:
+    ents = []
+    for e in j:
+        if e is None:
+            ents.append(None)
+        elif len(e) == 1:
+            ents.append(e[0])
+        else:
+            ents.append(tuple(e))
+    return PartitionSpec(*ents)
+
+
+def sharding_descriptor(arr: jax.Array) -> Dict[str, Any]:
+    sh = arr.sharding
+    if isinstance(sh, NamedSharding):
+        return {"type": "named",
+                "mesh": mesh_fingerprint(sh.mesh),
+                "spec": spec_to_json(sh.spec)}
+    return {"type": "other", "mesh": None, "spec": None}
+
+
+def resolve_sharding(desc: Dict[str, Any], target_mesh: Optional[Mesh]):
+    """Translate a saved sharding descriptor onto the target mesh (the
+    UPDATE_TOPOLOGY_MAP step).  Returns None when no mapping is possible
+    (caller falls back to replicated / single-device placement)."""
+    if target_mesh is None or desc.get("type") != "named":
+        return None
+    spec = spec_from_json(desc["spec"])
+    axes = set(target_mesh.axis_names)
+    # drop references to axes the new mesh doesn't have (elastic downsizing)
+    ents = []
+    for e in tuple(spec):
+        if e is None:
+            ents.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a in axes)
+            ents.append(kept if kept else None)
+        else:
+            ents.append(e if e in axes else None)
+    return NamedSharding(target_mesh, PartitionSpec(*ents))

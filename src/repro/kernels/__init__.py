@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the workload hot-spots (DESIGN.md §3).
+
+CRIUgpu itself has no kernel-level contribution — these serve the models
+being checkpointed:
+
+  flash_attention  — online-softmax attention (causal/SWA/cross), MXU-tiled
+  ssd_scan         — Mamba2 SSD chunked scan, VMEM-carried recurrent state
+  rmsnorm          — fused normalisation (single HBM pass)
+
+``ops`` is the jit'd dispatch layer (interpret=True on CPU); ``ref`` holds
+the deliberately-naive pure-jnp oracles used by tests/test_kernels.py.
+"""
+from repro.kernels import ops, ref  # noqa: F401

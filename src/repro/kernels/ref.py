@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately *naive* implementations (full score matrices,
+token-by-token SSM recurrence) so they are independent of both the Pallas
+kernels and the chunked pure-JAX production paths in ``repro.models`` —
+all three are cross-checked in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Naive exact attention with GQA.
+
+    q (B, Sq, H, hd); k/v (B, Sk, KV, hd); returns (B, Sq, H, hd).
+    ``window`` > 0 restricts key j to (i - window, i] (sliding window).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, rep, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kf) / np.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+            Bm: jax.Array, Cm: jax.Array,
+            h0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token SSD recurrence (the ground-truth semantics).
+
+    x (B, S, nh, P); dt (B, S, nh) post-softplus; A (nh,) negative;
+    Bm/Cm (B, S, N).  Returns y (B, S, nh, P), final state (B, nh, P, N).
+
+      h_t = exp(dt_t A) * h_{t-1} + dt_t * B_t ⊗ x_t
+      y_t = C_t · h_t
+    """
+    B, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, P, N), jnp.float32)
+
+    def step(h, tup):
+        xt, dtt, Bt, Ct = tup                       # (B,nh,P),(B,nh),(B,N)x2
+        decay = jnp.exp(dtt * Af[None])             # (B, nh)
+        contrib = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        h = h * decay[:, :, None, None] + contrib
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)                       # (B,S,nh,P)
+    return y.astype(x.dtype), h_final
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    """x (..., d), scale (d,)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,130 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): the Tri Dao SSD GPU kernel relies on warp-
+level parallel prefix products; on TPU we exploit the *sequential* grid
+instead — the recurrent state h (P×N, f32) lives in VMEM scratch carried
+across the innermost (chunk) grid dimension, while the intra-chunk work is
+three MXU matmuls per step:
+
+    CB      = C · Bᵀ                 (Q×N)·(N×Q)  -> (Q,Q)
+    y_intra = (CB ⊙ L(dt)) · (dt⊙x)  (Q,Q)·(Q,P)
+    y_inter = decay_in ⊙ (C · hᵀ)    (Q,N)·(N,P)
+    h_new   = exp(Σ dA) h + xᵀ·(decay_out⊙dt⊙B)   (P,Q)·(Q,N)
+
+Grid: (batch, heads, nChunks) — chunks innermost/sequential.
+Block shapes: Q (chunk len) and N (state) are 128-aligned; P (head dim,
+64 for mamba2-2.7b) rides the MXU at half occupancy — recorded in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import pl_scratch
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, hout_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0]                                  # scalar
+    Bm = b_ref[0].astype(jnp.float32)             # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)             # (Q, N)
+
+    dA = dt * A                                   # (Q,)
+    cum = jnp.cumsum(dA)                          # inclusive
+    total = cum[-1]
+    decay_in = jnp.exp(cum)                       # chunk entry -> i
+    decay_out = jnp.exp(total - cum)              # j -> chunk exit
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    L = jnp.where(tri, jnp.exp(diff), 0.0)        # (Q, Q)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    G = CB * L                                    # (Q, Q)
+    y_intra = jax.lax.dot_general(G * dt[None, :], x,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_inter[i] = decay_in[i] * C[i] · h_prev
+    h = h_ref[...]                                # (P, N)
+    y_inter = decay_in[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Q, P)
+
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    w = (decay_out * dt)[:, None] * Bm            # (Q, N)
+    contrib = jax.lax.dot_general(x, w, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_ref[...] = h * jnp.exp(total) + contrib
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_ref[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Pallas SSD.  Same contract as ``kernels.ref.ssd_ref``:
+
+    x (B, S, nh, P); dt (B, S, nh) post-softplus; A (nh,) negative;
+    Bm/Cm (B, S, N) -> y (B, S, nh, P), h_final (B, nh, P, N).
+
+    S is padded to a chunk multiple with dt=0 no-op steps (decay 1,
+    contribution 0) — semantics-preserving for the recurrence.
+    """
+    B, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = x.shape[1]
+    nC = S_pad // Q
+    grid = (B, nh, nC)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, nh, P), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pl_scratch((P, N))],       # carried SSM state
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+
+    return (y[:, :S] if pad else y), h_final

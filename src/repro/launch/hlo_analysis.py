@@ -1,0 +1,511 @@
+"""Trip-count-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but a
+scan-over-layers model spends n_layers trips in it — so FLOPs/bytes/
+collectives are undercounted by ~the layer count (validated in
+tests/test_hlo_analysis.py: an 8-trip scan of 512³ matmuls is reported at
+exactly 1/8 by cost_analysis and exactly right here).  This module parses
+the HLO text, builds the computation call graph (entry → while bodies →
+fusions), extracts loop trip counts (XLA's ``known_trip_count`` backend
+config, falling back to the s32 bound in the condition computation), and
+attributes every op with its effective execution count.
+
+Optimized HLO references operands by NAME ONLY (``dot(%gte.5, %bc.2)``), so
+a per-computation name→shape table is built from the op results/parameters
+and used to resolve operand shapes for flop/byte counting.
+
+Counting rules:
+  * FLOPs: dot = 2·prod(result)·prod(lhs contracting dims); convolution =
+    2·prod(result)·kernel_spatial·in_ch/groups; transcendental ≈ 2/elem,
+    elementwise ≈ 1/elem (negligible next to dots).
+  * Bytes (HBM traffic model): result + operand buffer sizes for ops at
+    fusion *boundaries* (fusion interiors never touch HBM) — the same
+    model XLA's own HloCostAnalysis uses.
+  * Collectives: ring-algorithm wire bytes per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+    "u4": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([a-z][a-z0-9\-]*)\(")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)="
+    r"(?:\{)?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)(?:\})?")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_TRIP_CFG = re.compile(r"known_trip_count.{0,8}?n.{0,4}?(\d+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    line: str
+    result: str          # result type string (may be a tuple type)
+    comp: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool = False
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _nbytes_of_type(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _args_of(line: str) -> List[str]:
+    """Operand names inside the call parens (before attribute list)."""
+    start = line.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERANDS_RE.findall(line[start:end + 1])
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", s)
+            if m:
+                cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, result, kind = m.groups()
+            cur.ops.append(Op(name, kind, line.rstrip(), result, cur.name))
+            cur.shapes[name] = result
+    return comps
+
+
+def _called_comps(line: str) -> List[str]:
+    out = []
+    for m in _CALLED.finditer(line):
+        for nm in m.group(1).split(","):
+            out.append(nm.strip().lstrip("%"))
+    return out
+
+
+def _trip_count(comps: Dict[str, Computation], op: Op,
+                cond_name: Optional[str]) -> int:
+    # preferred: XLA's own analysis, stamped into backend_config
+    m = _TRIP_CFG.search(op.line)
+    if m:
+        return int(m.group(1))
+    cond = comps.get(cond_name) if cond_name else None
+    if cond is None:
+        return 1
+    consts = []
+    for o in cond.ops:
+        consts += [int(v) for v in _CONST_S32.findall(o.line)]
+    return max(consts) if consts else 1
+
+
+def effective_counts(comps: Dict[str, Computation]
+                     ) -> Tuple[Dict[str, float], Dict[str, bool]]:
+    """computation name -> execution multiplier; and fusion-interior flag."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:                       # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+    mult: Dict[str, float] = {}
+    interior: Dict[str, bool] = {}
+
+    def visit(comp_name: str, m: float, inside_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        if comp_name in mult and mult[comp_name] >= m and \
+                interior.get(comp_name, True) <= inside_fusion:
+            return
+        mult[comp_name] = max(m, mult.get(comp_name, 0.0))
+        interior[comp_name] = inside_fusion and interior.get(comp_name, True)
+        for op in comp.ops:
+            called = _called_comps(op.line)
+            if not called:
+                continue
+            if op.kind == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                trips = _trip_count(comps, op, cm.group(1) if cm else None)
+                if bm:
+                    visit(bm.group(1), m * trips, inside_fusion)
+                if cm:
+                    visit(cm.group(1), m * trips, inside_fusion)
+            elif op.kind == "fusion":
+                for c in called:
+                    visit(c, m, True)
+            else:                            # call / conditional / reduce...
+                for c in called:
+                    visit(c, m, inside_fusion)
+
+    visit(entry.name, 1.0, False)
+    return mult, interior
+
+
+# ---------------------------------------------------------------- FLOPs
+def _resolve(comp: Computation, name: str) -> Optional[str]:
+    return comp.shapes.get(name)
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    res = _shapes(op.result)
+    if not res:
+        return 0.0
+    n = 1
+    for d in res[0][1]:
+        n *= d
+    args = _args_of(op.line)
+    k = 1
+    m = _CONTRACT_RE.search(op.line)
+    if args and m is not None:
+        lhs_t = _resolve(comp, args[0])
+        lhs_shapes = _shapes(lhs_t) if lhs_t else []
+        if lhs_shapes and m.group(1):
+            lhs = lhs_shapes[0][1]
+            for d in m.group(1).split(","):
+                i = int(d)
+                if i < len(lhs):
+                    k *= lhs[i]
+    return 2.0 * n * k
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    res = _shapes(op.result)
+    if not res:
+        return 0.0
+    n = 1
+    for d in res[0][1]:
+        n *= d
+    args = _args_of(op.line)
+    kelems = 1
+    if len(args) >= 2:
+        ker_t = _resolve(comp, args[1])
+        ker_shapes = _shapes(ker_t) if ker_t else []
+        if ker_shapes:
+            for d in ker_shapes[0][1]:
+                kelems *= d
+    out_ch = res[0][1][-1] if res[0][1] else 1
+    g = 1
+    gm = re.search(r"feature_group_count=(\d+)", op.line)
+    if gm:
+        g = int(gm.group(1))
+    return 2.0 * n * max(1, kelems // max(1, out_ch)) * max(1, out_ch // g) \
+        if g > 1 else 2.0 * n * max(1, kelems // max(1, out_ch))
+
+
+_ELEMWISE_1 = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+               "compare", "select", "and", "or", "xor", "negate", "abs"}
+_TRANSCEND = {"exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+              "power", "sine", "cosine", "expm1", "log1p"}
+
+# no HBM traffic of their own
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "iota"}
+
+
+def _elem_flops(op: Op) -> float:
+    n = 0
+    for dt, shape in _shapes(op.result):
+        e = 1
+        for d in shape:
+            e *= d
+        n += e
+    return float(n)
+
+
+_SLICING = ("slice", "dynamic-slice", "gather")
+
+
+def _fusion_param_bytes(comps: Dict[str, Computation], called: str,
+                        param_idx: int, full_bytes: int) -> int:
+    """Traffic attributable to fusion operand `param_idx`.
+
+    If every in-fusion user of the parameter is a slicing op, the fusion
+    only reads the slices (XLA emits the loads per-slice) — count those;
+    otherwise the whole operand streams in."""
+    comp = comps.get(called)
+    if comp is None:
+        return full_bytes
+    pname = None
+    for o in comp.ops:
+        if o.kind == "parameter" and f"parameter({param_idx})" in o.line:
+            pname = o.name
+            break
+    if pname is None:
+        return full_bytes
+    users = [o for o in comp.ops
+             if pname in _args_of(o.line) and o.kind != "parameter"]
+    if users and all(u.kind in _SLICING for u in users):
+        return sum(_nbytes_of_type(u.result) for u in users)
+    return full_bytes
+
+
+def _op_bytes(comp: Computation, op: Op,
+              comps: Optional[Dict[str, Computation]] = None) -> int:
+    """HBM traffic of one boundary op.
+
+    Slicing/gather/scatter ops touch only the slice/update, not the full
+    operand (XLA's HloCostAnalysis models them the same way) — without
+    this, a scan-over-layers loop that dynamic-slices its stacked params
+    appears to re-read *every* layer's weights *every* iteration."""
+    kind = op.kind
+    res = _nbytes_of_type(op.result)
+    if kind in ("slice", "dynamic-slice", "gather"):
+        return 2 * res                       # read slice + write result
+    if kind in ("dynamic-update-slice",):
+        args = _args_of(op.line)
+        upd = _resolve(comp, args[1]) if len(args) > 1 else None
+        u = _nbytes_of_type(upd) if upd else res
+        return 2 * u                         # read update + write in place
+    if kind in ("scatter",):
+        args = _args_of(op.line)
+        upd = _resolve(comp, args[2]) if len(args) > 2 else None
+        u = _nbytes_of_type(upd) if upd else res
+        return 3 * u                         # read target+update, write
+    if kind == "broadcast":
+        args = _args_of(op.line)
+        src = _resolve(comp, args[0]) if args else None
+        return res + (_nbytes_of_type(src) if src else 0)
+    if kind == "fusion" and comps is not None:
+        called = None
+        cm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        if cm:
+            called = cm.group(1)
+        ccomp = comps.get(called) if called else None
+        # fusion containing a dynamic-update-slice over a buffer the size
+        # of the fusion result: on TPU these alias in place (traffic =
+        # update read + update write); the CPU backend sometimes emits a
+        # whole-buffer convert round-trip around the DUS (a host-backend
+        # artifact the TPU scheduler provably cannot afford) — model the
+        # TPU behaviour.
+        dus_update = None
+        total = res
+        if ccomp and ccomp.ops:
+            for o in ccomp.ops:
+                if o.kind == "dynamic-update-slice" and \
+                        _nbytes_of_type(o.result) * 2 >= res:
+                    dargs = _args_of(o.line)
+                    upd = (_resolve(ccomp, dargs[1])
+                           if len(dargs) > 1 else None)
+                    if upd is not None:
+                        dus_update = _nbytes_of_type(upd)
+                    break
+        if dus_update is not None:
+            total = 2 * dus_update       # in-place: read + write the slice
+            return total
+        for i, a in enumerate(_args_of(op.line)):
+            t = _resolve(comp, a)
+            if not t:
+                continue
+            fb = _nbytes_of_type(t)
+            if called:
+                fb = _fusion_param_bytes(comps, called, i, fb)
+            total += fb
+        return total
+    total = res
+    for a in _args_of(op.line):
+        t = _resolve(comp, a)
+        if t:
+            total += _nbytes_of_type(t)
+    return total
+
+
+def _score_bytes_of(comp: Computation, op: Op, cutoff: int,
+                    seq_len: Optional[int]) -> int:
+    """Bytes of this op's result+operand tensors that are attention
+    score/prob blocks.  With ``seq_len`` known (the dry-run passes the
+    cell's key length): trailing dim == seq_len and second-to-last >= 256
+    — catches both the square (S×S) train blocks and the rectangular
+    (q_chunk × S) chunked-prefill blocks while excluding the remat stash
+    (…, S, d_model).  Fallback (no seq_len): square trailing dims >=
+    cutoff.  A flash (Pallas) attention kernel keeps exactly these in
+    VMEM; subtracting them models the kernel-substituted memory term."""
+    def match(shape) -> bool:
+        if len(shape) < 2:
+            return False
+        if seq_len is not None:
+            return shape[-1] == seq_len and shape[-2] >= 256
+        return shape[-1] == shape[-2] and shape[-1] >= cutoff
+
+    def sb(type_str: Optional[str]) -> int:
+        if not type_str:
+            return 0
+        total = 0
+        for dt, shape in _shapes(type_str):
+            if match(shape):
+                n = 1
+                for d in shape:
+                    n *= d
+                total += n * DTYPE_BYTES[dt]
+        return total
+
+    total = sb(op.result)
+    for a in _args_of(op.line):
+        total += sb(_resolve(comp, a))
+    return total
+
+
+def analyze_hlo(text: str, n_devices: int = 1,
+                score_cutoff: int = 1024,
+                seq_len: Optional[int] = None) -> Dict[str, Any]:
+    comps = parse_module(text)
+    mult, interior = effective_counts(comps)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    score_bytes = 0.0
+    flop_by_kind: Dict[str, float] = {}
+    bytes_by_kind: Dict[str, float] = {}
+    coll_tops: List[Tuple[float, str]] = []
+    byte_tops: List[Tuple[float, str]] = []
+    coll = {op: {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+            for op in COLLECTIVES}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        inside = interior.get(comp.name, False)
+        for op in comp.ops:
+            kind = op.kind
+            f = 0.0
+            if kind == "dot":
+                f = _dot_flops(comp, op)
+            elif kind == "convolution":
+                f = _conv_flops(comp, op)
+            elif kind in _TRANSCEND:
+                f = 2.0 * _elem_flops(op)
+            elif kind in _ELEMWISE_1:
+                f = _elem_flops(op)
+            if f:
+                flops += m * f
+                key = kind if kind in ("dot", "convolution") else "elemwise"
+                flop_by_kind[key] = flop_by_kind.get(key, 0.0) + m * f
+
+            if not inside and kind not in _NO_TRAFFIC:
+                b = _op_bytes(comp, op, comps)
+                bytes_hbm += m * b
+                bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + m * b
+                byte_tops.append((m * b, f"x{m:.0f} " + op.line.strip()[:110]))
+                score_bytes += m * min(b, _score_bytes_of(
+                    comp, op, score_cutoff, seq_len))
+
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVES and not kind.endswith("-done"):
+                nbytes = _nbytes_of_type(op.result)
+                if kind.endswith("-start"):
+                    nbytes //= 2        # start result is (operand, result)
+                g = n_devices
+                mg = _GROUPS_RE.search(op.line)
+                if mg:
+                    g = len(mg.group(1).split(","))
+                else:
+                    mi = _GROUPS_IOTA_RE.search(op.line)
+                    if mi:
+                        g = int(mi.group(2))
+                g = max(g, 1)
+                if base == "all-gather":
+                    wire = nbytes * (g - 1) / g
+                elif base == "all-reduce":
+                    wire = 2.0 * nbytes * (g - 1) / g
+                elif base == "reduce-scatter":
+                    wire = nbytes * (g - 1)
+                elif base == "all-to-all":
+                    wire = nbytes * (g - 1) / g
+                else:
+                    wire = float(nbytes)
+                coll[base]["count"] += m
+                coll[base]["bytes"] += m * nbytes
+                coll[base]["wire_bytes"] += m * wire
+                coll_tops.append((m * wire,
+                                  f"x{m:.0f} " + op.line.strip()[:110]))
+
+    total_wire = sum(v["wire_bytes"] for v in coll.values())
+    coll_tops.sort(key=lambda t: -t[0])
+    byte_tops.sort(key=lambda t: -t[0])
+    return {
+        "flops": flops,
+        "bytes": bytes_hbm,
+        "score_bytes": score_bytes,      # attention-score HBM traffic
+        "flops_by_kind": flop_by_kind,
+        "bytes_by_kind": bytes_by_kind,
+        "top_traffic": byte_tops[:10],
+        "top_collectives": coll_tops[:10],
+        "collectives": coll,
+        "collective_wire_bytes": total_wire,
+        "collective_count": sum(v["count"] for v in coll.values()),
+        "n_computations": len(comps),
+    }
+
+
+def top_buffers(text: str, k: int = 12) -> List[Tuple[float, str]]:
+    """Largest single result buffers in the module (MiB, op line prefix) —
+    the §Perf memory-debugging view."""
+    comps = parse_module(text)
+    mult, _ = effective_counts(comps)
+    out = []
+    for comp in comps.values():
+        if mult.get(comp.name, 0.0) == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind in ("parameter", "tuple", "get-tuple-element"):
+                continue
+            b = _nbytes_of_type(op.result)
+            if b > 0:
+                out.append((b / 2**20, op.line.strip()[:140]))
+    out.sort(key=lambda t: -t[0])
+    return out[:k]

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; "pod" is the
+DCN axis (data-parallel across slices), "data"/"model" are ICI axes.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (host) devices exist — smoke tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup_steps)
+        frac = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.full((), base_lr, jnp.float32)
+    return lr

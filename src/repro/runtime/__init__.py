@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainConfig, SimulatedFailure  # noqa: F401
+from repro.runtime.fault import StragglerMonitor, FailureDetector  # noqa: F401
+from repro.runtime.server import DecodeServer  # noqa: F401

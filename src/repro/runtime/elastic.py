@@ -1,0 +1,52 @@
+"""Elastic restart: restore a unified snapshot onto a *different* mesh.
+
+The paper's CUDA path requires identical GPU type/count/order on restore
+(§4.4); the AMD path supports GPUID translation onto a compatible subset
+(§3.1.2).  Our adaptation goes further: saved shard layouts are reassembled
+and re-laid-out for whatever mesh the replacement job brings up (scale-down
+after losing a pod, scale-up after repair) — the engine's "resharded"
+topology mode.  This module packages the recipe the runtime uses.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.core import SnapshotEngine
+
+
+def elastic_restore(run_dir: str, new_mesh, model, opt,
+                    step: Optional[int] = None) -> Dict[str, Any]:
+    """Restore ``train_state`` from `run_dir` onto `new_mesh`.
+
+    The model/optimizer must be constructed against the new mesh (their
+    sharding policies define the target layout); shapes are topology-
+    independent so any saved image can be re-laid-out.
+    Returns {"params", "opt", "step"}.
+    """
+    engine = SnapshotEngine(run_dir, mesh=new_mesh)
+    meta: Dict[str, Any] = {}
+    engine.register_host_state("trainer",
+                               lambda: {},
+                               lambda st: meta.update(st))
+    engine.register_host_state("data_cursor",
+                               lambda: {},
+                               lambda st: meta.setdefault("cursor", st))
+    params_t = model.init_abstract()
+    opt_t = opt.init_abstract(params_t)
+    shardings = {"params": model.param_shardings(),
+                 "opt": _opt_shardings(model, opt, new_mesh)}
+    restored = engine.restore_into(
+        {"params": params_t, "opt": opt_t}, state="train_state",
+        step=step, mesh=new_mesh, shardings=shardings)
+    return {"params": restored["params"], "opt": restored["opt"],
+            "step": meta.get("step"), "meta": meta,
+            "topology_mode": engine.last_stats.get("topology_mode")}
+
+
+def _opt_shardings(model, opt, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.optim.adamw import OptState
+    ps = model.param_shardings()
+    return OptState(step=NamedSharding(mesh, PartitionSpec()), m=ps, v=ps)

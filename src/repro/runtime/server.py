@@ -1,0 +1,114 @@
+"""Batched decode server with transparent serving-state snapshots.
+
+Serving state (KV/SSM caches + generated tokens + positions) is device
+state like any other — the engine checkpoints a half-finished generation
+and a fresh server resumes it token-exact.  This is the inference-side
+story of the paper (Modal/MemVerge deployments snapshot serving processes
+for fast cold-start).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SnapshotEngine
+from repro.models.config import ModelConfig
+from repro.models.encdec import build_model
+from repro.sharding.policy import ShardingPolicy
+
+
+class DecodeServer:
+    def __init__(self, cfg: ModelConfig, policy: ShardingPolicy, mesh,
+                 run_dir: str, max_seq: int = 256,
+                 compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.model = build_model(cfg, policy, mesh,
+                                 compute_dtype=compute_dtype, remat=False)
+        self.max_seq = max_seq
+        self.params = None
+        self.cache = None
+        self.tokens: Optional[np.ndarray] = None       # generated so far
+        self.pos = 0
+        self.engine = SnapshotEngine(run_dir, mesh=mesh)
+        self.engine.attach(lambda: {"serve_state": {
+            "params": self.params, "cache": self.cache}})
+        self.engine.register_host_state(
+            "decode_cursor",
+            lambda: {"pos": self.pos,
+                     "tokens": self.tokens},
+            self._restore_cursor)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def _restore_cursor(self, st):
+        self.pos = st["pos"]
+        self.tokens = st["tokens"]
+
+    def load(self, params) -> None:
+        self.params = params
+
+    # ------------------------------------------------------------- serving
+    def start(self, batch: Dict[str, Any]) -> None:
+        """Prefill a batch of prompts; cache is padded to max_seq."""
+        prompt = batch["tokens"]
+        B, S = prompt.shape
+        logits, cache = self._prefill(self.params,
+                                      {k: jnp.asarray(v)
+                                       for k, v in batch.items()})
+        self.cache = self._pad_cache(cache, self.max_seq)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.tokens = np.concatenate([np.asarray(prompt, np.int32),
+                                      nxt[:, None]], axis=1)
+        self.pos = S
+
+    def _pad_cache(self, cache, max_seq):
+        """Pad the *attention* KV seq dim (axis 2 of (L,B,S,KV,hd)) to
+        max_seq.  Keyed by leaf name — SSM states are 5-D too and must not
+        be touched."""
+        def pad(leaf):
+            if leaf.ndim == 5 and leaf.shape[2] < max_seq:
+                w = [(0, 0)] * 5
+                w[2] = (0, max_seq - leaf.shape[2])
+                return jnp.pad(leaf, w)
+            return leaf
+
+        def walk(node):
+            if isinstance(node, dict):
+                return {k: (pad(v) if k in ("k", "v", "self_k", "self_v")
+                            and hasattr(v, "ndim") else walk(v))
+                        for k, v in node.items()}
+            return node
+
+        return walk(cache)
+
+    def decode(self, n_tokens: int) -> np.ndarray:
+        for _ in range(n_tokens):
+            last = jnp.asarray(self.tokens[:, -1])
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              last, jnp.int32(self.pos))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self.tokens = np.concatenate([self.tokens, nxt[:, None]], axis=1)
+            self.pos += 1
+        return self.tokens
+
+    # ------------------------------------------------------------- ckpt
+    def checkpoint(self, tag: int = 0) -> str:
+        return self.engine.checkpoint(tag)
+
+    def restore(self, params_template=None, step: Optional[int] = None):
+        template = {"params": self.params if self.params is not None
+                    else params_template,
+                    "cache": self.cache}
+        if template["cache"] is None:
+            # rebuild an abstract cache skeleton for typed restore
+            raise RuntimeError("restore() requires a started server or "
+                               "use engine.restore() raw view")
+        restored = self.engine.restore_into(template, state="serve_state",
+                                            step=step)
+        self.params = restored["params"]
+        self.cache = restored["cache"]
+        return self.pos

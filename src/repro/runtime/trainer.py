@@ -1,0 +1,196 @@
+"""Training runtime with transparent unified checkpointing.
+
+The loop contains no checkpoint logic for its *state* — the SnapshotEngine
+is attached to a state provider and captures params/optimizer/RNG (device)
+plus data-cursor/metrics (host) through plugins.  Periodic and just-in-time
+policies both drive the same engine.  ``run_with_restarts`` demonstrates
+the full failure story: crash (SimulatedFailure or real exception) →
+re-construct a fresh Trainer → engine.restore → continue — including onto a
+*different mesh* (elastic restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SnapshotEngine
+from repro.data import TokenPipeline
+from repro.models.config import ModelConfig
+from repro.models.encdec import build_model
+from repro.optim import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault import JITCheckpointPolicy, StragglerMonitor
+from repro.sharding.policy import ShardingPolicy
+
+PyTree = Any
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    batch_size: int = 4
+    seq_len: int = 64
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 200
+    ckpt_every: int = 0             # 0 = no periodic checkpoints
+    ckpt_mode: str = "sync"         # sync | async
+    incremental: bool = False
+    seed: int = 0
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                 policy: ShardingPolicy, run_dir: str,
+                 engine: Optional[SnapshotEngine] = None,
+                 replicator=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = build_model(cfg, policy, mesh,
+                                 compute_dtype=tcfg.compute_dtype,
+                                 remat=tcfg.remat)
+        self.opt = AdamW(lr=warmup_cosine(tcfg.lr, tcfg.warmup_steps,
+                                          tcfg.total_steps))
+        self.pipeline = TokenPipeline(cfg, tcfg.batch_size, tcfg.seq_len,
+                                      seed=tcfg.seed)
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.metrics_history: Dict[str, list] = {"loss": []}
+        self.straggler = StragglerMonitor()
+
+        self.engine = engine or SnapshotEngine(
+            run_dir, mode=tcfg.ckpt_mode, incremental=tcfg.incremental,
+            mesh=mesh, replicator=replicator)
+        # transparent wiring: live state via provider, host bits via plugins
+        self.engine.attach(lambda: {"train_state": {
+            "params": self.params, "opt": self.opt_state}})
+        self.engine.register_host_state(
+            "data_cursor", lambda: self.pipeline.state(),
+            lambda st: self.pipeline.restore_state(st))
+        self.engine.register_host_state(
+            "trainer", lambda: {"step": self.step,
+                                "loss_hist": self.metrics_history["loss"][-50:]},
+            self._restore_trainer_state)
+        self.jit_ckpt = JITCheckpointPolicy(self.engine)
+
+        self._step_fn = jax.jit(
+            self._train_step,
+            donate_argnums=(0, 1),
+            in_shardings=(self.model.param_shardings(),
+                          self._opt_shardings(), None),
+        ) if mesh is not None and np.prod(mesh.devices.shape) > 1 else \
+            jax.jit(self._train_step, donate_argnums=(0, 1))
+
+    def _restore_trainer_state(self, st):
+        self.step = st["step"]
+        self.metrics_history["loss"] = list(st["loss_hist"])
+
+    def _opt_shardings(self):
+        from repro.optim.adamw import OptState
+        ps = self.model.param_shardings()
+        from jax.sharding import NamedSharding, PartitionSpec
+        scalar = NamedSharding(self.mesh, PartitionSpec())
+        return OptState(step=scalar, m=ps, v=ps)
+
+    # ------------------------------------------------------------- steps
+    def _train_step(self, params, opt_state, batch):
+        def loss_fn(p):
+            return self.model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = self.opt.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **om}
+
+    def initialize(self) -> None:
+        self.params = self.model.init(jax.random.key(self.tcfg.seed))
+        self.opt_state = self.opt.init(self.params)
+        self.step = 0
+
+    def restore(self, step: Optional[int] = None, mesh=None) -> int:
+        """Unified restore (engine pushes host state back via plugins)."""
+        if self.params is None:
+            # template for typed restore
+            self.params = self.model.init(jax.random.key(self.tcfg.seed))
+            self.opt_state = self.opt.init(self.params)
+        template = {"params": self.params, "opt": self.opt_state}
+        shardings = None
+        if self.mesh is not None:
+            shardings = {"params": self.model.param_shardings(),
+                         "opt": self._opt_shardings()}
+        restored = self.engine.restore_into(
+            template, state="train_state", step=step,
+            mesh=mesh or self.mesh, shardings=shardings)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        return self.step
+
+    # ------------------------------------------------------------- loop
+    def run(self, num_steps: int, fail_at: Optional[int] = None,
+            straggle_at: Optional[int] = None) -> Dict[str, Any]:
+        if self.params is None:
+            self.initialize()
+        t_loop = time.perf_counter()
+        for _ in range(num_steps):
+            if fail_at is not None and self.step == fail_at:
+                raise SimulatedFailure(f"injected failure at {self.step}")
+            batch_np = self.pipeline.next()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            if straggle_at is not None and self.step == straggle_at:
+                time.sleep(0.25)                       # injected straggler
+            with jax.sharding.set_mesh(self.mesh):
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            self.metrics_history["loss"].append(loss)
+            dt = time.perf_counter() - t0
+            self.step += 1
+            if self.straggler.record(dt):
+                self.jit_ckpt.on_signal(self.step)     # just-in-time ckpt
+            if (self.tcfg.ckpt_every
+                    and self.step % self.tcfg.ckpt_every == 0):
+                self.engine.checkpoint(self.step)
+        self.engine.wait_pending()
+        return {"steps": self.step,
+                "loss": self.metrics_history["loss"][-1],
+                "wall_s": time.perf_counter() - t_loop}
+
+
+def run_with_restarts(make_trainer, total_steps: int,
+                      failures: Dict[int, str]) -> Dict[str, Any]:
+    """Drive training to `total_steps`, surviving injected failures.
+
+    failures: {step: kind} — trainer is rebuilt from scratch and restored
+    from the newest valid snapshot after each crash (node-replacement
+    semantics).
+    """
+    restarts = 0
+    trainer = make_trainer()
+    trainer.initialize()
+    pending = dict(failures)
+    while trainer.step < total_steps:
+        fail_at = min((s for s in pending if s >= trainer.step),
+                      default=None)
+        try:
+            trainer.run(total_steps - trainer.step, fail_at=fail_at)
+        except SimulatedFailure:
+            pending.pop(fail_at, None)
+            restarts += 1
+            trainer = make_trainer()                   # replacement node
+            trainer.restore()                          # newest valid image
+    return {"steps": trainer.step, "restarts": restarts,
+            "loss_history": trainer.metrics_history["loss"],
+            "trainer": trainer}

@@ -1,0 +1,2 @@
+from repro.serialization.pack import PackWriter, PackReader  # noqa: F401
+from repro.serialization.integrity import atomic_write_json, read_json, crc32  # noqa: F401

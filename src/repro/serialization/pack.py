@@ -1,0 +1,174 @@
+"""Single-file pack format for snapshot payloads.
+
+Layout:  [8-byte magic][8-byte LE index length][msgpack index][blob...]
+The index maps entry name -> {offset, nbytes, crc32, dtype, shape, meta,
+codec}.  Blobs are raw little-endian array bytes, optionally zstd-compressed
+(per-entry).  Entries are append-only; the index is written last, but the
+header slot for its length is reserved up front so readers can locate it.
+
+This is deliberately self-contained (no tensorstore/orbax dependency): the
+paper's mechanism needs byte-level control for the incremental/differential
+mode (per-entry CRCs double as content hashes) and per-host shard dumps.
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+try:
+    import zstandard as zstd
+    _ZSTD = True
+except Exception:                                    # pragma: no cover
+    _ZSTD = False
+import zlib as _zlib                                 # always-available fallback
+
+from repro.serialization.integrity import crc32
+
+
+def _compress_blob(raw: bytes, level: int) -> Tuple[bytes, str]:
+    """Best-available codec: zstd if installed, else zlib."""
+    if _ZSTD:
+        return zstd.ZstdCompressor(level=level).compress(raw), "zstd"
+    return _zlib.compress(raw, min(level * 2, 9)), "zlib"
+
+
+def _decompress_blob(raw: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstd.ZstdDecompressor().decompress(raw)
+    if codec == "zlib":
+        return _zlib.decompress(raw)
+    return raw
+
+MAGIC = b"RPRPACK1"
+
+
+def dtype_to_str(dt) -> str:
+    """Name-based encoding so ml_dtypes extension types (bfloat16, fp8)
+    round-trip; their numpy ``.str`` is an opaque void type."""
+    dt = np.dtype(dt)
+    return dt.name if dt.kind == "V" else dt.str
+
+
+def dtype_from_str(s: str) -> np.dtype:
+    try:
+        return np.dtype(s)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, s))
+
+
+class PackWriter:
+    def __init__(self, path: str, compress: bool = False, level: int = 3):
+        self.path = path
+        self.tmp = path + ".tmp"
+        self._f = open(self.tmp, "wb")
+        self._f.write(MAGIC)
+        self._f.write(struct.pack("<Q", 0))          # index placeholder
+        self._index: Dict[str, Dict[str, Any]] = {}
+        self._compress = compress
+        self._level = level
+        self._closed = False
+
+    def add(self, name: str, array: np.ndarray,
+            meta: Optional[Dict[str, Any]] = None) -> None:
+        assert not self._closed
+        arr = np.asarray(array, order="C")   # ascontiguousarray 1-d-ifies 0-d
+        raw = arr.tobytes()
+        codec = "raw"
+        if self._compress:
+            comp, cname = _compress_blob(raw, self._level)
+            if len(comp) < len(raw) * 0.9:
+                raw, codec = comp, cname
+        off = self._f.tell()
+        self._f.write(raw)
+        self._index[name] = {
+            "offset": off, "nbytes": len(raw), "crc32": crc32(raw),
+            "dtype": dtype_to_str(arr.dtype), "shape": list(arr.shape),
+            "codec": codec, "meta": meta or {},
+        }
+
+    def add_bytes(self, name: str, raw: bytes,
+                  meta: Optional[Dict[str, Any]] = None) -> None:
+        assert not self._closed
+        off = self._f.tell()
+        self._f.write(raw)
+        self._index[name] = {
+            "offset": off, "nbytes": len(raw), "crc32": crc32(raw),
+            "dtype": None, "shape": None, "codec": "raw", "meta": meta or {},
+        }
+
+    def close(self) -> Dict[str, Any]:
+        assert not self._closed
+        idx = msgpack.packb(self._index, use_bin_type=True)
+        idx_off = self._f.tell()
+        self._f.write(idx)
+        self._f.seek(len(MAGIC))
+        self._f.write(struct.pack("<Q", idx_off))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        os.rename(self.tmp, self.path)
+        self._closed = True
+        return self._index
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if not self._closed:
+            if exc[0] is None:
+                self.close()
+            else:                                    # failed write: no commit
+                self._f.close()
+                try:
+                    os.remove(self.tmp)
+                except OSError:
+                    pass
+
+
+class PackReader:
+    def __init__(self, path: str, verify: bool = True):
+        self.path = path
+        self._f = open(path, "rb")
+        magic = self._f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (idx_off,) = struct.unpack("<Q", self._f.read(8))
+        self._f.seek(idx_off)
+        self.index: Dict[str, Dict[str, Any]] = msgpack.unpackb(
+            self._f.read(), raw=False)
+        self._verify = verify
+
+    def names(self):
+        return list(self.index)
+
+    def entry(self, name: str) -> Dict[str, Any]:
+        return self.index[name]
+
+    def read_bytes(self, name: str) -> bytes:
+        e = self.index[name]
+        self._f.seek(e["offset"])
+        raw = self._f.read(e["nbytes"])
+        if self._verify and crc32(raw) != e["crc32"]:
+            raise IOError(f"{self.path}:{name}: CRC mismatch (torn write?)")
+        return _decompress_blob(raw, e["codec"])
+
+    def read_array(self, name: str) -> np.ndarray:
+        e = self.index[name]
+        raw = self.read_bytes(name)
+        return np.frombuffer(raw, dtype=dtype_from_str(e["dtype"])
+                             ).reshape(e["shape"]).copy()
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

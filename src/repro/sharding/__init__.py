@@ -1,0 +1,6 @@
+from repro.sharding.policy import (  # noqa: F401
+    ShardingPolicy,
+    POLICIES,
+    get_policy,
+    logical_spec,
+)

@@ -1,0 +1,26 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess); keep CPU math deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def run_dir(tmp_path):
+    return str(tmp_path / "run")
+
+
+@pytest.fixture
+def mesh1():
+    """Trivial 1-device mesh with the production axis names."""
+    from jax.sharding import AxisType
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(AxisType.Auto,))
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,142 @@
+"""Dry-run machinery tests: collective parsing, roofline terms, and a
+reduced-mesh lower+compile through the real dryrun code path (subprocess,
+8 host devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import (DTYPE_BYTES, PEAK_FLOPS, analyse,
+                                 parse_collectives)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HLO_SAMPLE = """
+  %ag = bf16[8,256,1024]{2,1,0} all-gather(bf16[1,256,1024]{2,1,0} %p0), replica_groups=[16,8]<=[128] last
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[128,64]{1,0} reduce-scatter(f32[1024,64]{1,0} %p2), replica_groups=[2,8]<=[16]
+  %a2a = bf16[64,64]{1,0} all-to-all(bf16[64,64]{1,0} %p3), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %p4), source_target_pairs={{0,1}}
+  %noise = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    out = parse_collectives(HLO_SAMPLE, n_devices=128)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-reduce"]["count"] == 1
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+    assert out["collective-permute"]["count"] == 1
+    assert out["total_count"] == 5
+
+    ag_bytes = 8 * 256 * 1024 * 2
+    assert out["all-gather"]["bytes"] == ag_bytes
+    # iota groups [16,8]: group size 8 -> ring wire = bytes*(g-1)/g
+    assert abs(out["all-gather"]["wire_bytes"]
+               - ag_bytes * 7 / 8) < 1
+    ar_bytes = 1024 * 1024 * 4
+    assert out["all-reduce"]["bytes"] == ar_bytes
+    assert abs(out["all-reduce"]["wire_bytes"]
+               - 2 * ar_bytes * 3 / 4) < 1
+    # reduce-scatter result is the shard: wire = result*(g-1)
+    assert out["reduce-scatter"]["wire_bytes"] == 128 * 64 * 4 * 7
+    assert out["collective-permute"]["wire_bytes"] == 16 * 4
+
+
+def test_parse_collectives_async_start_variant():
+    hlo = ("%ags = (f32[4]{0}, f32[16]{0}) all-gather-start(f32[4]{0} %x), "
+           "replica_groups={{0,1,2,3}}")
+    out = parse_collectives(hlo, n_devices=4)
+    assert out["all-gather"]["count"] == 1
+
+
+def test_dtype_bytes_table():
+    assert DTYPE_BYTES["bf16"] == 2
+    assert DTYPE_BYTES["f32"] == 4
+    assert DTYPE_BYTES["s32"] == 4
+    assert DTYPE_BYTES["pred"] == 1
+
+
+_DRYRUN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from jax.sharding import AxisType
+import repro.launch.dryrun as dr
+
+# shrink the production mesh for the in-test compile
+import repro.launch.mesh as mesh_mod
+def small_mesh(*, multi_pod=False):
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+mesh_mod.make_production_mesh = small_mesh
+
+# reduce every config lookup to its smoke variant (fast compile)
+import repro.configs as C
+from repro.models.config import reduced
+_real_get = C.get_config
+def smoke_get(arch):
+    return reduced(_real_get(arch), vocab_size=512)
+C.get_config = smoke_get
+
+# drive the real build_lowered/analyse path with small cells
+from repro.launch.shapes import SHAPES, ShapeCell
+SHAPES["smoke_train"] = ShapeCell("smoke_train", "train", 64, 8)
+SHAPES["smoke_decode"] = ShapeCell("smoke_decode", "decode", 64, 8)
+for mesh_kind in ("pod", "multipod"):
+    mesh = small_mesh(multi_pod=(mesh_kind == "multipod"))
+    for cell_name in ("smoke_train", "smoke_decode"):
+        lowered, cfg, cell = dr.build_lowered(
+            "qwen1.5-0.5b", cell_name, mesh, "baseline")
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        assert cost.get("flops", 0) > 0, (mesh_kind, cell_name)
+        rec = dr.analyse(lowered, compiled, cfg, cell,
+                         int(mesh.devices.size))
+        assert rec["t_compute_s"] > 0
+        assert rec["dominant"] in ("compute", "memory", "collective")
+        assert rec["memory"].get("temp_size_in_bytes") is not None
+print("DRYRUN_SMOKE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_on_reduced_mesh(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               OUT_DIR=str(tmp_path), JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _DRYRUN_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DRYRUN_SMOKE_OK" in r.stdout
+
+
+def test_all_baseline_artifacts_present_and_ok():
+    """The committed dry-run sweep must cover every assigned cell × both
+    meshes (33 cells × 2) with ok=True."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("dry-run artifacts not generated yet")
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.shapes import cells_for
+    missing, bad = [], []
+    for a in ARCH_IDS:
+        for c in cells_for(get_config(a)):
+            for mk in ("pod", "multipod"):
+                p = os.path.join(art, f"{a}__{c}__{mk}__baseline.json")
+                if not os.path.exists(p):
+                    missing.append((a, c, mk))
+                    continue
+                rec = json.load(open(p))
+                if not rec.get("ok"):
+                    bad.append((a, c, mk))
+    assert not missing, f"missing cells: {missing[:8]}"
+    assert not bad, f"failed cells: {bad[:8]}"

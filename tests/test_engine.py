@@ -1,0 +1,287 @@
+"""SnapshotEngine unit + integration tests: the paper's checkpoint/restore
+workflow (lock → checkpoint → dump → unlock; restore), plugin hook ordering,
+abort semantics, async mode, incremental mode, GC, corruption fallback."""
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SnapshotEngine
+from repro.core.engine import CheckpointAborted
+from repro.core.lock import DeviceLock, LockTimeout
+from repro.core.plugins import Hook, HookContext, Plugin
+from repro.core.snapshot_io import MANIFEST, SnapshotStore, snapshot_dir
+
+
+def make_state(key=0, n=4):
+    ks = jax.random.split(jax.random.key(key), n)
+    return {f"w{i}": jax.random.normal(ks[i], (8, 16), jnp.float32)
+            for i in range(n)}
+
+
+def attach_basic(engine, state_holder, host_holder):
+    engine.attach(lambda: {"train_state": state_holder["state"]})
+    engine.register_host_state(
+        "host", lambda: host_holder["v"],
+        lambda v: host_holder.__setitem__("v", v))
+
+
+# ------------------------------------------------------------ round trip
+def test_checkpoint_restore_bitwise(run_dir):
+    state = make_state()
+    holder = {"state": state}
+    host = {"v": {"step": 7, "note": "hello"}}
+    eng = SnapshotEngine(run_dir)
+    attach_basic(eng, holder, host)
+    path = eng.checkpoint(7)
+    assert os.path.exists(os.path.join(path, MANIFEST))
+
+    host2 = {"v": None}
+    eng2 = SnapshotEngine(run_dir)
+    attach_basic(eng2, {"state": None}, host2)
+    restored = eng2.restore()
+    assert host2["v"] == {"step": 7, "note": "hello"}
+    for k, v in state.items():
+        np.testing.assert_array_equal(
+            np.asarray(restored["train_state"][k]), np.asarray(v))
+
+
+def test_restore_into_preserves_types(run_dir):
+    from repro.optim import AdamW
+    from repro.optim.adamw import OptState
+    from repro.optim.schedule import constant
+    params = make_state()
+    opt = AdamW(lr=constant(1e-3))
+    opt_state = opt.init(params)
+    holder = {"state": {"params": params, "opt": opt_state}}
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": holder["state"]})
+    eng.checkpoint(1)
+
+    eng2 = SnapshotEngine(run_dir)
+    eng2.attach(lambda: {"train_state": None})
+    template = {"params": params, "opt": opt.init(params)}
+    out = eng2.restore_into(template, state="train_state")
+    assert isinstance(out["opt"], OptState)
+    np.testing.assert_array_equal(np.asarray(out["opt"].step),
+                                  np.asarray(opt_state.step))
+
+
+def test_missing_leaf_raises(run_dir):
+    params = make_state()
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": {"params": params}})
+    eng.checkpoint(1)
+    eng2 = SnapshotEngine(run_dir)
+    eng2.attach(lambda: {"train_state": None})
+    bigger = {"params": dict(params, extra=jnp.zeros((2,)))}
+    with pytest.raises(KeyError):
+        eng2.restore_into(bigger, state="train_state")
+
+
+# ------------------------------------------------------------ hook order
+class OrderPlugin(Plugin):
+    name = "order"
+
+    def __init__(self, log):
+        self.log = log
+
+    def init(self, op):
+        self.log.append(("init", op))
+
+    def exit(self, op, success):
+        self.log.append(("exit", op, success))
+
+    def pause_devices(self, ctx):
+        self.log.append("pause_devices")
+
+    def checkpoint_devices(self, ctx):
+        self.log.append("checkpoint_devices")
+
+    def dump_ext_state(self, ctx):
+        self.log.append("dump_ext_state")
+
+    def restore_ext_state(self, ctx):
+        self.log.append("restore_ext_state")
+
+    def update_topology_map(self, ctx):
+        self.log.append("update_topology_map")
+
+    def resume_devices_late(self, ctx):
+        self.log.append("resume_devices_late")
+
+
+def test_hook_ordering_contract(run_dir):
+    """The paper's workflow ordering (Fig. 4a): PAUSE → CHECKPOINT → DUMP
+    on dump; RESTORE_EXT → UPDATE_TOPOLOGY → RESUME_LATE on restore."""
+    log = []
+    eng = SnapshotEngine(run_dir, plugins=[OrderPlugin(log)])
+    eng.attach(lambda: {"train_state": make_state()})
+    eng.checkpoint(1)
+    assert log == [("init", "dump"), "pause_devices", "checkpoint_devices",
+                   "dump_ext_state", ("exit", "dump", True)]
+    log.clear()
+    eng.restore()
+    assert log == [("init", "restore"), "restore_ext_state",
+                   "update_topology_map", "resume_devices_late",
+                   ("exit", "restore", True)]
+
+
+def test_lock_timeout_aborts_to_running(run_dir):
+    """cuda-checkpoint's 10s lock timeout analogue: if the drain exceeds
+    the deadline the checkpoint aborts and exit(success=False) fires."""
+    log = []
+
+    class SlowLock(DeviceLock):
+        def lock(self, arrays):
+            raise LockTimeout("injected")
+
+    eng = SnapshotEngine(run_dir, plugins=[OrderPlugin(log)])
+    eng.device_plugin.lock = SlowLock()
+    eng.attach(lambda: {"train_state": make_state()})
+    with pytest.raises(CheckpointAborted):
+        eng.checkpoint(5)
+    assert ("exit", "dump", False) in log
+    assert SnapshotStore(run_dir).list_steps() == []     # nothing committed
+
+
+def test_leftover_reference_warning(run_dir):
+    """NVML-leftover analogue (§4.4): live device arrays outside the
+    registered roots are detected and recorded, not captured."""
+    leftover = jnp.ones((128, 128), jnp.float32)          # intentionally live
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": make_state()})
+    eng.checkpoint(1)
+    man = SnapshotStore(run_dir).manifest(1)
+    assert man["stats"]["leftover_device_bytes"] >= leftover.nbytes
+    assert any("outside the registered roots" in w
+               for w in man.get("warnings", []))
+
+
+# ------------------------------------------------------------ async mode
+def test_async_checkpoint_resumes_before_write(run_dir):
+    state = make_state()
+    eng = SnapshotEngine(run_dir, mode="async")
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(3)
+    # wait_pending joins the background writer; manifest must then exist
+    eng.wait_pending()
+    assert SnapshotStore(run_dir).list_steps() == [3]
+    assert "locked_total_s" in eng.last_stats
+
+
+def test_async_overlapping_checkpoints_serialize(run_dir):
+    state = make_state()
+    eng = SnapshotEngine(run_dir, mode="async")
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(1)
+    eng.checkpoint(2)          # must join the pending write first
+    eng.wait_pending()
+    assert SnapshotStore(run_dir).list_steps() == [1, 2]
+
+
+# ------------------------------------------------------------ incremental
+def test_incremental_reuses_unchanged_entries(run_dir):
+    state = make_state()
+    holder = {"state": state}
+    eng = SnapshotEngine(run_dir, incremental=True)
+    eng.attach(lambda: {"train_state": holder["state"]})
+    eng.checkpoint(1)
+    # change exactly one tensor
+    holder["state"] = dict(state, w0=state["w0"] + 1.0)
+    eng.checkpoint(2)
+    man2 = SnapshotStore(run_dir).manifest(2)
+    assert man2["parent"] == 1
+    assert man2["reused_bytes"] > 0
+    # unchanged entries point at the step-1 pack
+    locs = man2["locations"]
+    assert any(loc.startswith("step_00000001") for loc in locs.values())
+    assert any(loc.startswith("step_00000002") for loc in locs.values())
+
+    # restore resolves the delta chain transparently
+    eng2 = SnapshotEngine(run_dir)
+    eng2.attach(lambda: {"train_state": None})
+    restored = eng2.restore()
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["w0"]),
+        np.asarray(state["w0"] + 1.0))
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["w1"]), np.asarray(state["w1"]))
+
+
+def test_gc_preserves_incremental_parents(run_dir):
+    state = make_state()
+    holder = {"state": state}
+    eng = SnapshotEngine(run_dir, incremental=True, keep=1)
+    eng.attach(lambda: {"train_state": holder["state"]})
+    eng.checkpoint(1)
+    holder["state"] = dict(state, w0=state["w0"] + 1.0)
+    eng.checkpoint(2)          # keep=1 would drop step 1, but 2 references it
+    steps = SnapshotStore(run_dir).list_steps()
+    assert 1 in steps and 2 in steps
+
+    # a full (non-incremental) snapshot lets GC actually collect
+    eng.incremental = False
+    holder["state"] = dict(state, w0=state["w0"] + 2.0)
+    eng.checkpoint(3)
+    assert SnapshotStore(run_dir).list_steps() == [3]
+
+
+# ------------------------------------------------------------ corruption
+def test_restore_falls_back_past_torn_snapshot(run_dir):
+    state = make_state()
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(1)
+    eng.checkpoint(2)
+    # corrupt the newest image's payload (torn write)
+    pack = os.path.join(snapshot_dir(run_dir, 2), "host0000.pack")
+    with open(pack, "r+b") as f:
+        f.seek(40)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    eng2 = SnapshotEngine(run_dir)
+    eng2.attach(lambda: {"train_state": None})
+    restored = eng2.restore()            # CRC check skips step 2 -> step 1
+    for k, v in state.items():
+        np.testing.assert_array_equal(
+            np.asarray(restored["train_state"][k]), np.asarray(v))
+
+
+def test_uncommitted_snapshot_is_invisible(run_dir):
+    """No MANIFEST => the snapshot does not exist (atomic commit)."""
+    state = make_state()
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(1)
+    d = snapshot_dir(run_dir, 99)
+    os.makedirs(d)
+    with open(os.path.join(d, "host0000.pack"), "wb") as f:
+        f.write(b"garbage")
+    assert SnapshotStore(run_dir).list_steps() == [1]
+
+
+def test_manifest_inventory_flags(run_dir):
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": make_state()})
+    eng.checkpoint(4)
+    man = SnapshotStore(run_dir).manifest(4)
+    assert man["has_device_state"] is True       # paper §3.1.1 inventory flag
+    assert man["states"] == ["train_state"]
+    assert man["step"] == 4
+    assert "topology" in man and man["topology"]["n_devices"] >= 1
+    assert man["stats"]["device_bytes"] > 0
+
+
+def test_checkpoint_stats_reported(run_dir):
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": make_state()})
+    eng.checkpoint(1)
+    st = eng.last_stats
+    for key in ("lock_s", "device_to_host_s", "frozen_s", "write_s",
+                "written_bytes", "device_bytes"):
+        assert key in st, key

@@ -1,0 +1,178 @@
+"""Trip-count-aware HLO analyzer tests — the §Roofline measurement tool
+must itself be validated (cost_analysis undercounts while bodies; the
+analyzer must not)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (analyze_hlo, parse_module,
+                                       effective_counts, top_buffers)
+
+
+def _compile_text(f, *avals):
+    return jax.jit(f).lower(*avals).compile().as_text()
+
+
+def test_scan_flops_counted_per_trip():
+    """8-trip scan of 512x512 matmuls: analytic = 8 * 2 * 512^3."""
+    W = jnp.zeros((512, 512), jnp.float32)
+
+    def step(c, _):
+        return jnp.tanh(c @ W), None
+
+    def f(x):
+        y, _ = jax.lax.scan(step, x, None, length=8)
+        return y
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    rec = analyze_hlo(txt, 1)
+    analytic = 8 * 2 * 512 ** 3
+    assert rec["flops_by_kind"]["dot"] == pytest.approx(analytic, rel=1e-6)
+
+    # and cost_analysis really does undercount (the reason this exists)
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((512, 512), jnp.float32)).compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    assert cost["flops"] < analytic / 2
+
+
+def test_single_matmul_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                        jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    rec = analyze_hlo(txt, 1)
+    assert rec["flops_by_kind"]["dot"] == pytest.approx(2 * 64 * 128 * 32)
+
+
+def test_nested_scan_multiplies():
+    W = jnp.zeros((128, 128), jnp.float32)
+
+    def inner(c, _):
+        return c @ W, None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=3)
+        return c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    rec = analyze_hlo(txt, 1)
+    analytic = 5 * 3 * 2 * 128 ** 3
+    assert rec["flops_by_kind"]["dot"] == pytest.approx(analytic, rel=1e-6)
+
+
+def test_memory_traffic_scales_with_trips():
+    W = jnp.zeros((256, 256), jnp.float32)
+
+    def f_n(n):
+        def step(c, _):
+            return jnp.tanh(c @ W), None
+
+        def f(x):
+            y, _ = jax.lax.scan(step, x, None, length=n)
+            return y
+        return f
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b4 = analyze_hlo(_compile_text(f_n(4), a), 1)["bytes"]
+    b16 = analyze_hlo(_compile_text(f_n(16), a), 1)["bytes"]
+    assert 2.5 < b16 / b4 < 5.5          # ~4x, modulo fixed I/O
+
+
+def test_dynamic_slice_counts_slice_not_operand():
+    """A scan that slices one row per step out of a big table must not be
+    charged the full table per step."""
+    table = jnp.zeros((1024, 1024), jnp.float32)
+
+    def step(c, i):
+        row = jax.lax.dynamic_slice_in_dim(table, i, 1, axis=0)
+        return c + row[0], None
+
+    def f(x):
+        y, _ = jax.lax.scan(step, x, jnp.arange(64, dtype=jnp.int32))
+        return y
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((1024,), jnp.float32))
+    rec = analyze_hlo(txt, 1)
+    full_table_per_step = 64 * 1024 * 1024 * 4
+    assert rec["bytes"] < full_table_per_step          # would be 256 MB
+
+
+def test_collectives_inside_loops_multiply():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[256] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[256] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[256]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[256])) -> pred[] {
+  %p = (s32[], f32[256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[256]) -> f32[256] {
+  %x = f32[256] parameter(0)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[256]) tuple(%zero, %x)
+  %w = (s32[], f32[256]) while(%t), condition=%cond, body=%body
+  ROOT %out = f32[256] get-tuple-element(%w), index=1
+}
+"""
+    rec = analyze_hlo(hlo, 4)
+    assert rec["collectives"]["all-reduce"]["count"] == 10
+    # ring all-reduce: 2 * nbytes * (g-1)/g per trip
+    expect = 10 * 2 * 256 * 4 * 3 / 4
+    assert rec["collective_wire_bytes"] == pytest.approx(expect)
+
+
+def test_known_trip_count_backend_config_preferred():
+    hlo = """
+ENTRY %main () -> s32[] {
+  %c = s32[] constant(0)
+  %t = (s32[]) tuple(%c)
+  %w = (s32[]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %o = s32[] get-tuple-element(%w), index=0
+}
+
+%body (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %j = s32[] add(%i, %one)
+  ROOT %t = (s32[]) tuple(%j)
+}
+
+%cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(99)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+"""
+    comps = parse_module(hlo)
+    mult, _ = effective_counts(comps)
+    assert mult["body"] == 7.0           # config wins over constant 99
+
+
+def test_top_buffers_finds_big_tensors():
+    def f(x):
+        return jnp.einsum("ij,kj->ik", x, x)
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((512, 256), jnp.float32))
+    bufs = top_buffers(txt, 3)
+    assert bufs and bufs[0][0] >= 1.0    # >= 1 MiB result

@@ -1,0 +1,221 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures: instantiate the REDUCED
+same-family config, run one forward and one train step on CPU, assert
+output shapes and no NaNs.  Decode/prefill consistency is covered for one
+representative of each mixer family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.data import TokenPipeline
+from repro.models.encdec import build_model
+from repro.optim import AdamW
+from repro.optim.schedule import constant
+from repro.sharding import get_policy
+
+POLICY = get_policy("baseline")
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    return {k: jnp.asarray(v)
+            for k, v in TokenPipeline(cfg, B, S, seed=seed).next().items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+    # padded vocab columns are masked to -inf-like values
+    if cfg.padded_vocab > cfg.vocab_size:
+        assert float(jnp.max(logits[..., cfg.vocab_size:])) < -1e29
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    opt = AdamW(lr=constant(1e-3))
+    params = model.init(jax.random.key(0))
+    opt_state = opt.init(params)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, s, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(p, b)
+        p, s, om = opt.update(grads, s, p)
+        return p, s, loss, om["grad_norm"]
+
+    p1, s1, loss, gnorm = step(params, opt_state, batch)
+    assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+    assert float(gnorm) > 0.0
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1)))
+    assert moved
+    # a few more steps on the same batch lower the loss (sanity descent)
+    p, s = p1, s1
+    last = None
+    for _ in range(3):
+        p, s, last, _ = step(p, s, batch)
+    assert float(last) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b",      # dense GQA
+                                  "h2o-danube-1.8b",   # SWA
+                                  "mamba2-2.7b",       # SSM
+                                  "jamba-v0.1-52b",    # hybrid + MoE
+                                  "qwen3-moe-30b-a3b",  # MoE
+                                  "whisper-tiny"])     # enc-dec
+def test_prefill_decode_matches_forward(arch):
+    """prefill(prompt) + decode_step(tok) must agree with a full forward
+    over prompt+tok — the KV/SSM cache semantics are exact."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 24
+    batch = _batch(cfg, B=B, S=S + 1, seed=3)
+    full_logits = model.forward(params, batch)          # (B, S+1, V)
+
+    prompt = {k: (v[:, :S] if k in ("tokens", "loss_mask") else v)
+              for k, v in batch.items()}
+    logits_p, cache = model.prefill(params, prompt)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, S - 1]),
+                               rtol=2e-4, atol=2e-4)
+
+    # pad the cache seq dim (axis 2 of (L,B,S,KV,hd)) so pos S fits
+    def pad(leaf):
+        if hasattr(leaf, "ndim") and leaf.ndim == 5 and leaf.shape[2] == S:
+            w = [(0, 0)] * 5
+            w[2] = (0, 8)
+            return jnp.pad(leaf, w)
+        return leaf
+    cache = jax.tree.map(pad, cache)
+    logits_d, _ = model.decode_step(params, cache, batch["tokens"][:, S],
+                                    jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full_logits[:, S]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-2.7b"])
+def test_decode_chain_matches_forward(arch):
+    """N successive decode steps stay exact (cache update correctness)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(1))
+    B, S, N = 1, 16, 4
+    batch = _batch(cfg, B=B, S=S + N, seed=5)
+    full_logits = model.forward(params, batch)
+
+    prompt = {"tokens": batch["tokens"][:, :S]}
+    _, cache = model.prefill(params, prompt)
+
+    def pad(leaf):
+        if hasattr(leaf, "ndim") and leaf.ndim == 5 and leaf.shape[2] == S:
+            w = [(0, 0)] * 5
+            w[2] = (0, N)
+            return jnp.pad(leaf, w)
+        return leaf
+    cache = jax.tree.map(pad, cache)
+    for i in range(N):
+        logits_d, cache = model.decode_step(
+            params, cache, batch["tokens"][:, S + i], jnp.int32(S + i))
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(full_logits[:, S + i]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_vlm_vision_embeds_override():
+    """Qwen2-VL stub frontend: vision embeddings replace the first P
+    token embeddings and change the logits."""
+    cfg = get_smoke_config("qwen2-vl-7b")
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    l1 = model.forward(params, batch)
+    b2 = dict(batch)
+    b2["vision_embeds"] = batch["vision_embeds"] + 1.0
+    l2 = model.forward(params, b2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_mrope_positions_affect_logits():
+    cfg = get_smoke_config("qwen2-vl-7b")
+    assert cfg.mrope
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    B, S = batch["tokens"].shape
+    base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    l1 = model.forward(params, {**batch, "positions": base})
+    shifted = base.at[1].add(7)          # move the "height" component
+    l2 = model.forward(params, {**batch, "positions": shifted})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_swa_vs_full_attention_differs():
+    """h2o-danube SWA: tokens beyond the window are invisible."""
+    import dataclasses
+    cfg = get_smoke_config("h2o-danube-1.8b", sliding_window=8)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    full_cfg = dataclasses.replace(cfg, layer_pattern=("attn",),
+                                   sliding_window=0)
+    model_full = build_model(full_cfg, POLICY, None,
+                             compute_dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    l_swa = model.forward(params, batch)
+    l_full = model_full.forward(params, batch)
+    # identical for early positions (inside the window), different later
+    assert float(jnp.max(jnp.abs(l_swa[:, :8] - l_full[:, :8]))) < 1e-4
+    assert float(jnp.max(jnp.abs(l_swa[:, -1] - l_full[:, -1]))) > 1e-6
+
+
+def test_whisper_frames_affect_decoder():
+    cfg = get_smoke_config("whisper-tiny")
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    l1 = model.forward(params, batch)
+    b2 = dict(batch)
+    b2["frames"] = batch["frames"] * 2.0 + 0.5
+    l2 = model.forward(params, b2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_use_kernels_path_matches_reference_path(arch):
+    """Pallas-kernel path == pure-jnp path end-to-end per architecture."""
+    cfg = get_smoke_config(arch)
+    m0 = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                     remat=False)
+    m1 = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                     remat=False, use_kernels=True)
+    params = m0.init(jax.random.key(0))
+    batch = _batch(cfg)
+    l0 = m0.forward(params, batch)
+    l1 = m1.forward(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(l0[..., :cfg.vocab_size]),
+        np.asarray(l1[..., :cfg.vocab_size]), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,167 @@
+"""Multi-host two-phase commit + interval planner + parallel restore."""
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SnapshotEngine
+from repro.core.multihost import (BarrierTimeout, MultiHostCommit,
+                                  merge_host_manifests)
+from repro.core.snapshot_io import (MANIFEST, SnapshotStore, SnapshotWriter,
+                                    snapshot_dir)
+from repro.runtime.interval import (IntervalPlanner, expected_overhead_fraction,
+                                    young_daly)
+from repro.serialization.integrity import atomic_write_json
+
+
+# ---------------------------------------------------------------- 2PC
+def _write_host_pack(run_dir, step, host_id, arr):
+    w = SnapshotWriter(run_dir, step, host_id=host_id)
+    w.write_states({"train_state": {
+        f"w{host_id}": {"kind": "device_array",
+                        "shape": list(arr.shape), "dtype": "<f4",
+                        "sharding": {"type": "other", "mesh": None,
+                                     "spec": None},
+                        "shards": [{"index": [[0, s] for s in arr.shape],
+                                    "data": arr}]}}})
+    w.write_host_state({})
+    w._writer.add_bytes("__commit_meta__", b"{}")
+    w._writer.close()
+    return {"locations": w.locations, "entry_crcs": w.entry_crcs,
+            "states": sorted(w.meta), "files": [w.pack_name]}
+
+
+def test_two_phase_commit_all_hosts(tmp_path):
+    run = str(tmp_path)
+    num_hosts = 4
+    metas = {}
+    commits = [MultiHostCommit(run, 1, h, num_hosts, deadline_s=10)
+               for h in range(num_hosts)]
+
+    def host_work(h):
+        arr = np.full((4, 4), float(h), np.float32)
+        metas[h] = _write_host_pack(run, 1, h, arr)
+        time.sleep(0.02 * h)              # stagger phase-1 completion
+        commits[h].prepare()
+
+    threads = [threading.Thread(target=host_work, args=(h,))
+               for h in range(1, num_hosts)]
+    for t in threads:
+        t.start()
+    host_work(0)
+
+    def writer():
+        man = merge_host_manifests(run, 1, num_hosts, {"n_devices": 4},
+                                   metas)
+        path = snapshot_dir(run, 1)
+        atomic_write_json(os.path.join(path, MANIFEST), man)
+        return path
+
+    path = commits[0].commit(writer)
+    for t in threads:
+        t.join()
+    assert os.path.exists(os.path.join(path, MANIFEST))
+    # markers cleaned after commit
+    assert commits[0].prepared_hosts() == []
+    # non-coordinators observe the commit
+    commits[2].wait_committed()
+    man = json.load(open(os.path.join(path, MANIFEST)))
+    assert man["num_hosts"] == 4
+    assert len(man["files"]) == 4
+    # every host's entries are reachable in the merged locations table
+    assert any("w2" in k for k in man["locations"])
+
+
+def test_barrier_timeout_lists_missing_hosts(tmp_path):
+    c = MultiHostCommit(str(tmp_path), 2, 0, num_hosts=3, deadline_s=0.2)
+    os.makedirs(c.dir, exist_ok=True)
+    c.prepare()                            # only host 0 prepares
+    with pytest.raises(BarrierTimeout) as e:
+        c.wait_all_prepared()
+    assert "1, 2" in str(e.value)
+
+
+def test_no_manifest_before_commit_means_no_snapshot(tmp_path):
+    """Phase-1 crash: packs + markers present, no manifest → the snapshot
+    is invisible to the store (torn-image guarantee across hosts)."""
+    run = str(tmp_path)
+    _write_host_pack(run, 5, 0, np.zeros((2, 2), np.float32))
+    MultiHostCommit(run, 5, 0, 2).prepare()
+    assert SnapshotStore(run).list_steps() == []
+
+
+def test_wait_committed_times_out(tmp_path):
+    c = MultiHostCommit(str(tmp_path), 3, 1, 2, deadline_s=0.2)
+    os.makedirs(c.dir, exist_ok=True)
+    with pytest.raises(BarrierTimeout):
+        c.wait_committed()
+
+
+# ---------------------------------------------------------------- τ*
+def test_young_daly_formula():
+    assert young_daly(60.0, 6 * 3600.0) == pytest.approx(
+        (2 * 60 * 6 * 3600) ** 0.5)
+    # async engine shrinks δ -> τ* shrinks with sqrt(δ)
+    assert young_daly(1.0, 6 * 3600.0) == pytest.approx(
+        young_daly(100.0, 6 * 3600.0) / 10.0)
+
+
+def test_overhead_minimised_at_tau_star():
+    d, m = 30.0, 4 * 3600.0
+    tau = young_daly(d, m)
+    f_star = expected_overhead_fraction(tau, d, m)
+    for factor in (0.25, 0.5, 2.0, 4.0):
+        assert f_star <= expected_overhead_fraction(tau * factor, d, m)
+
+
+def test_planner_adapts_to_measurements():
+    p = IntervalPlanner(mtbf_guess_s=3600.0)
+    base = p.interval_s()
+    for _ in range(4):
+        p.record_checkpoint_cost(1.0)      # async-engine-class cost
+    fast = p.interval_s()
+    assert fast < base                     # cheaper ckpt -> shorter interval
+    # two failures an hour apart -> MTBF measured at 1h
+    p.record_failure(1000.0)
+    p.record_failure(1000.0 + 3600.0)
+    assert p.mtbf_s == pytest.approx(3600.0)
+    assert p.steps_between_checkpoints(step_time_s=2.0) >= 1
+
+
+def test_planner_clamps_interval():
+    p = IntervalPlanner(min_interval_s=30, max_interval_s=60)
+    p.record_checkpoint_cost(1e-9)
+    assert p.interval_s() == 30
+    p2 = IntervalPlanner(min_interval_s=30, max_interval_s=60,
+                         mtbf_guess_s=1e12)
+    p2.record_checkpoint_cost(1e6)
+    assert p2.interval_s() == 60
+
+
+# ---------------------------------------------------------------- ||-restore
+def test_parallel_restore_bitwise_equal(tmp_path):
+    state = {f"w{i}": jax.random.normal(jax.random.key(i), (32, 32))
+             for i in range(12)}
+    eng = SnapshotEngine(str(tmp_path))
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(1)
+
+    eng_seq = SnapshotEngine(str(tmp_path), restore_threads=0)
+    eng_seq.attach(lambda: {"train_state": None})
+    seq = eng_seq.restore()
+
+    eng_par = SnapshotEngine(str(tmp_path), restore_threads=8)
+    eng_par.attach(lambda: {"train_state": None})
+    par = eng_par.restore()
+
+    for k in state:
+        np.testing.assert_array_equal(
+            np.asarray(seq["train_state"][k]),
+            np.asarray(par["train_state"][k]))
+        np.testing.assert_array_equal(
+            np.asarray(par["train_state"][k]), np.asarray(state[k]))

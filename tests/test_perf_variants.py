@@ -1,0 +1,120 @@
+"""§Perf hillclimb knobs must be semantics-preserving: every variant is a
+layout/traffic change, never a numerics change (beyond dtype rounding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import TokenPipeline
+from repro.models import layers as L
+from repro.models.encdec import build_model
+from repro.sharding import get_policy
+
+POLICY = get_policy("baseline")
+
+
+@pytest.fixture(autouse=True)
+def reset_knobs():
+    yield
+    L.SCORE_DTYPE = jnp.float32
+    L.XENT_SEQ_CHUNK = 0
+    L.GQA_EXPAND = False
+    L.CAST_PARAMS_ONCE = False
+
+
+def _model_and_batch(arch="qwen1.5-0.5b", B=2, S=32):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, POLICY, None, compute_dtype=jnp.float32,
+                        remat=False)
+    params = model.init(jax.random.key(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in TokenPipeline(cfg, B, S, seed=1).next().items()}
+    return cfg, model, params, batch
+
+
+def test_gqa_expand_is_exact():
+    """MHA expansion (repeat K/V over the group dim) == grouped attention."""
+    cfg, model, params, batch = _model_and_batch("phi3-medium-14b")
+    assert cfg.num_kv_heads < cfg.num_heads       # GQA smoke (kv=2, H=4)
+    l0 = model.forward(params, batch)
+    L.GQA_EXPAND = True
+    l1 = model.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_xent_chunking_is_exact():
+    cfg, model, params, batch = _model_and_batch(B=2, S=32)
+    loss0 = float(model.loss(params, batch)[1]["loss"])
+    L.XENT_SEQ_CHUNK = 8
+    loss1 = float(model.loss(params, batch)[1]["loss"])
+    assert loss0 == loss1                         # bitwise on CPU
+
+
+def test_rolled_loss_equals_sliced_loss():
+    """The full-length rolled-target loss == the classic [:-1]/[1:] loss."""
+    cfg, model, params, batch = _model_and_batch()
+    logits = model.forward(params, batch)
+    tok = batch["tokens"]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, -1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+    tgt = jnp.sum(jnp.where(iota == tok[:, 1:, None], lg, 0.0), -1)
+    sliced = float(jnp.mean(lse - tgt))
+    rolled = float(model.loss(params, batch)[1]["loss"])
+    assert abs(sliced - rolled) < 1e-6
+
+
+def test_bf16_scores_close_to_f32():
+    cfg, model, params, batch = _model_and_batch()
+    l0 = model.forward(params, batch)
+    L.SCORE_DTYPE = jnp.bfloat16
+    l1 = model.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l0[..., :cfg.vocab_size]),
+                               np.asarray(l1[..., :cfg.vocab_size]),
+                               rtol=0.1, atol=0.2)
+
+
+def test_cast_params_once_close_to_master():
+    cfg, model, params, batch = _model_and_batch()
+    l0 = model.forward(params, batch)
+    L.CAST_PARAMS_ONCE = True
+    # compute_dtype is f32 in smokes -> cast is identity there; force bf16
+    model_bf16 = build_model(cfg, POLICY, None,
+                             compute_dtype=jnp.bfloat16, remat=False)
+    l_ref = model_bf16.forward(params, batch)
+    L.CAST_PARAMS_ONCE = False
+    l_base = model_bf16.forward(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(l_ref, np.float32)[..., :cfg.vocab_size],
+        np.asarray(l_base, np.float32)[..., :cfg.vocab_size],
+        rtol=0.1, atol=0.3)
+
+
+def test_apply_variant_sets_and_composes():
+    from repro.launch.dryrun import apply_variant, variant_parts
+    assert variant_parts("gqaexpand_bf16cast") == {"gqaexpand", "bf16cast"}
+    remat = apply_variant("gqaexpand_bf16score")
+    assert remat is True
+    assert L.GQA_EXPAND and L.SCORE_DTYPE == jnp.bfloat16
+    remat = apply_variant("noremat")
+    assert remat is False and not L.GQA_EXPAND
+    apply_variant("base")
+    assert L.SCORE_DTYPE == jnp.float32 and L.XENT_SEQ_CHUNK == 0
+
+
+def test_seq_par_policy_spec():
+    p = get_policy("seq_par")
+    assert p.spec("batch", "seq", "act_d")[1] == "model"
+    # logits keep vocab on the TP axis (logit_seq never claims it)
+    assert p.spec("batch", "logit_seq", "vocab")[2] == "model"
+
+
+def test_fsdp_all_policy_spec():
+    p = get_policy("fsdp_all")
+    assert p.spec("heads") == jax.sharding.PartitionSpec(None)   # no TP
+    assert p.spec("experts")[0] == "model"                       # EP kept
+    # expert weights: d_model drops the contested "model" axis
+    s = p.spec("experts", "d_model", "moe_ff")
+    assert s[0] == "model" and s[1] == "data"

@@ -1,0 +1,105 @@
+"""Sharding-policy unit + property tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+from repro.sharding.policy import (POLICIES, ShardingPolicy, fit_sharding,
+                                   get_policy)
+
+
+def mesh_11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def test_baseline_table_roles():
+    p = get_policy("baseline")
+    assert p.spec("batch") == P(("pod", "data"))
+    assert p.spec("heads") == P("model")
+    assert p.spec("d_model") == P("data")        # ZeRO-3 FSDP
+    assert p.spec("experts") == P("model")       # EP
+    assert p.spec(None, "vocab") == P(None, "model")
+
+
+def test_spec_dedup_first_wins():
+    p = get_policy("baseline")
+    # batch takes (pod,data); cache_seq would also want data -> dropped
+    s = p.spec("batch", "cache_seq")
+    assert s == P(("pod", "data"), None)
+
+
+def test_zero_stage_1_keeps_params_replicated():
+    p = get_policy("tp_only")
+    assert p.spec("d_model") == P(None)
+    assert p.spec("heads") == P("model")
+
+
+def test_for_mesh_drops_missing_axes():
+    p = get_policy("baseline").for_mesh(mesh_11())
+    assert p.dp == ("data",)                     # "pod" dropped
+    assert p.tp == ("model",)
+
+
+def test_unknown_logical_axis_raises():
+    with pytest.raises(KeyError):
+        get_policy("baseline").spec("nonsense")
+
+
+def test_all_named_policies_build_specs():
+    for name, p in POLICIES.items():
+        for ax in ("batch", "heads", "d_model", "experts", "cache_seq",
+                   "vocab", "ssm_inner"):
+            p.spec(ax)
+
+
+# -------------------------------------------------------- fit_sharding
+@settings(max_examples=60, deadline=None)
+@given(
+    dim=st.integers(1, 64),
+    data=st.sampled_from([1, 2, 4, 8, 16]),
+    model=st.sampled_from([1, 2, 4, 8, 16]),
+)
+def test_fit_spec_divisibility_property(dim, data, model):
+    """After fitting, every sharded dim is divisible by its axes product,
+    and the kept prefix is maximal."""
+    from repro.sharding.policy import fit_spec
+    sizes = {"data": data, "model": model}
+    fitted = fit_spec(P(("data", "model")), (dim,), sizes)
+    spec = fitted[0]
+    if spec is None:
+        prod, kept = 1, ()
+    elif isinstance(spec, str):
+        prod, kept = sizes[spec], (spec,)
+    else:
+        prod, kept = int(np.prod([sizes[a] for a in spec])), tuple(spec)
+    assert dim % prod == 0
+    axes = ("data", "model")
+    if len(kept) < len(axes):
+        nxt = axes[len(kept)]
+        assert dim % (prod * sizes[nxt]) != 0 or sizes[nxt] == 1 \
+            or nxt in kept
+
+
+def test_fit_sharding_pads_missing_spec_dims():
+    mesh = mesh_11()
+    sh = NamedSharding(mesh, P("data"))
+    fitted = fit_sharding(sh, (2, 3, 4), mesh)
+    assert len(fitted.spec) >= 1
+
+
+def test_cache_policy_batch_vs_seq(monkeypatch):
+    """_cache_policy picks batch sharding when divisible, else seq."""
+    from repro.models.lm import _cache_policy
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    base = get_policy("baseline")
+    p128 = _cache_policy(base, FakeMesh(), 128)     # 128 % 32 == 0
+    assert p128.shard_seq_decode is False
+    p1 = _cache_policy(base, FakeMesh(), 1)         # batch unshardable
+    assert p1.dp == () and p1.seq == ("pod", "data")
+    assert p1.shard_seq_decode is True

@@ -1,0 +1,130 @@
+"""Pack-format + integrity property tests (hypothesis)."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serialization.integrity import (atomic_write_json, crc32,
+                                           file_crc32, read_json)
+from repro.serialization.pack import (PackReader, PackWriter, dtype_from_str,
+                                      dtype_to_str)
+
+DTYPES = ["float32", "float16", "bfloat16", "int32", "int8", "uint8",
+          "float64", "bool"]
+
+
+def _arr(rng, dtype, shape):
+    if dtype == "bool":
+        return rng.random(shape) > 0.5
+    if dtype.startswith(("int", "uint")):
+        return rng.integers(0, 100, size=shape).astype(dtype)
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return rng.normal(size=shape).astype(ml_dtypes.bfloat16)
+    return rng.normal(size=shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dtype=st.sampled_from(DTYPES),
+    shape=st.lists(st.integers(0, 7), min_size=0, max_size=4).map(tuple),
+    compress=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_roundtrip_property(tmp_path_factory, dtype, shape, compress,
+                                 seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, dtype, shape)
+    path = str(tmp_path_factory.mktemp("pk") / "t.pack")
+    with PackWriter(path, compress=compress) as w:
+        w.add("a", a)
+        w.add_bytes("raw", b"\x00\x01\x02")
+    with PackReader(path) as r:
+        b = r.read_array("a")
+        assert r.read_bytes("raw") == b"\x00\x01\x02"
+    assert b.dtype == np.asarray(a).dtype
+    assert b.shape == tuple(shape)
+    np.testing.assert_array_equal(np.asarray(a), b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dtype=st.sampled_from(DTYPES))
+def test_dtype_str_roundtrip(dtype):
+    import ml_dtypes
+    dt = (np.dtype(ml_dtypes.bfloat16) if dtype == "bfloat16"
+          else np.dtype(dtype))
+    assert dtype_from_str(dtype_to_str(dt)) == dt
+
+
+def test_corruption_detected(tmp_path):
+    path = str(tmp_path / "t.pack")
+    a = np.arange(1024, dtype=np.float32)
+    with PackWriter(path) as w:
+        w.add("a", a)
+    with open(path, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xff\xff")
+    with PackReader(path) as r:
+        with pytest.raises(IOError):
+            r.read_array("a")
+    # verify=False bypasses (used by benchmarks, not restore)
+    with PackReader(path, verify=False) as r:
+        r.read_array("a")
+
+
+def test_failed_write_leaves_no_file(tmp_path):
+    path = str(tmp_path / "t.pack")
+    try:
+        with PackWriter(path) as w:
+            w.add("a", np.zeros(4))
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_compression_reduces_size(tmp_path):
+    a = np.zeros((1 << 16,), np.float32)          # highly compressible
+    p1, p2 = str(tmp_path / "r.pack"), str(tmp_path / "c.pack")
+    with PackWriter(p1) as w:
+        w.add("a", a)
+    with PackWriter(p2, compress=True) as w:
+        w.add("a", a)
+    assert os.path.getsize(p2) < os.path.getsize(p1) / 2
+    with PackReader(p2) as r:
+        np.testing.assert_array_equal(r.read_array("a"), a)
+
+
+def test_atomic_json(tmp_path):
+    p = str(tmp_path / "m.json")
+    atomic_write_json(p, {"a": 1})
+    assert read_json(p) == {"a": 1}
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_zero_dim_and_scalar_arrays(tmp_path):
+    path = str(tmp_path / "t.pack")
+    with PackWriter(path) as w:
+        w.add("scalar", np.float32(3.5))
+        w.add("empty", np.zeros((0, 4), np.int32))
+    with PackReader(path) as r:
+        assert r.read_array("scalar") == np.float32(3.5)
+        assert r.read_array("empty").shape == (0, 4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(max_size=256), prefix=st.binary(max_size=64))
+def test_crc32_incremental_property(data, prefix):
+    """crc32(prefix+data) == crc32(data, crc32(prefix)) — the streaming
+    form file_crc32 relies on."""
+    assert crc32(prefix + data) == crc32(data, crc32(prefix))
+
+
+def test_file_crc_matches_bytes_crc(tmp_path):
+    p = str(tmp_path / "f.bin")
+    data = os.urandom(3 << 20)
+    with open(p, "wb") as f:
+        f.write(data)
+    assert file_crc32(p) == crc32(data)

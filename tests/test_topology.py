@@ -1,0 +1,54 @@
+"""Topology fingerprinting + GPUID-translation analogue tests."""
+import jax
+import pytest
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+from repro.core.topology import (compatibility, mesh_fingerprint,
+                                 resolve_sharding, sharding_descriptor,
+                                 spec_from_json, spec_to_json)
+
+
+def mesh(names=("data",), shape=(1,)):
+    return jax.make_mesh(shape, names,
+                         axis_types=(AxisType.Auto,) * len(names))
+
+
+def test_fingerprint_fields():
+    fp = mesh_fingerprint(mesh())
+    assert fp["n_devices"] == 1
+    assert fp["mesh_axes"] == ["data"]
+    assert fp["mesh_shape"] == [1]
+    assert fp["process_count"] == 1
+
+
+def test_compatibility_modes():
+    a = mesh_fingerprint(mesh())
+    assert compatibility(a, dict(a)) == "identical"
+    b = dict(a, kind="other-chip")
+    assert compatibility(a, b) == "translated"      # same mesh, new devices
+    c = dict(a, mesh_shape=[2], n_devices=2)
+    assert compatibility(a, c) == "resharded"       # elastic restore
+
+
+@pytest.mark.parametrize("spec", [
+    P(), P("data"), P(None, "data"), P(("data", "model"), None),
+    P(None, None, "model"),
+])
+def test_spec_json_roundtrip(spec):
+    assert spec_from_json(spec_to_json(spec)) == spec
+
+
+def test_resolve_sharding_drops_missing_axes():
+    m1 = mesh(("data", "model"), (1, 1))
+    arr = jax.device_put(jax.numpy.zeros((4, 4)),
+                         NamedSharding(m1, P("data", "model")))
+    desc = sharding_descriptor(arr)
+    m2 = mesh(("data",), (1,))                     # scaled-down mesh
+    sh = resolve_sharding(desc, m2)
+    assert sh.spec == P("data", None)
+
+
+def test_resolve_sharding_none_without_mesh():
+    m1 = mesh()
+    arr = jax.device_put(jax.numpy.zeros((4,)), NamedSharding(m1, P("data")))
+    assert resolve_sharding(sharding_descriptor(arr), None) is None
