@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import POLICY, Timer, emit, ladder_config, mesh1
-from repro.core import SnapshotEngine
+from repro.api import CheckpointOptions, CheckpointSession
 from repro.core.replication import MemReplicator
 from repro.models.encdec import build_model
 from repro.optim import AdamW
@@ -41,7 +41,7 @@ def run() -> None:
     for mode in ("sync", "async"):
         d = tempfile.mkdtemp(prefix=f"bp_{mode}_")
         try:
-            eng = SnapshotEngine(d, mode=mode, mesh=mesh)
+            eng = CheckpointSession(d, CheckpointOptions(mode=mode), mesh=mesh)
             eng.attach(lambda: holder["s"])
             with Timer() as t:
                 eng.checkpoint(1)
@@ -57,7 +57,8 @@ def run() -> None:
     # ---- incremental: only the optimizer moments change ----
     d = tempfile.mkdtemp(prefix="bp_incr_")
     try:
-        eng = SnapshotEngine(d, incremental=True, mesh=mesh)
+        eng = CheckpointSession(d, CheckpointOptions(incremental=True),
+                                mesh=mesh)
         eng.attach(lambda: {"train_state": holder["s"]})
         eng.checkpoint(1)
         full = eng.last_stats["written_bytes"]
@@ -80,7 +81,8 @@ def run() -> None:
     for compress in (False, True):
         d = tempfile.mkdtemp(prefix="bp_z_")
         try:
-            eng = SnapshotEngine(d, compress=compress, mesh=mesh)
+            eng = CheckpointSession(d, CheckpointOptions(compress=compress),
+                                    mesh=mesh)
             eng.attach(lambda: {"train_state": holder["s"]})
             with Timer() as t:
                 eng.checkpoint(1)
@@ -95,7 +97,7 @@ def run() -> None:
     d = tempfile.mkdtemp(prefix="bp_rep_")
     try:
         rep = MemReplicator()
-        eng = SnapshotEngine(d, replicator=rep, mesh=mesh)
+        eng = CheckpointSession(d, replicator=rep, mesh=mesh)
         eng.attach(lambda: {"train_state": holder["s"]})
         with Timer() as t:
             eng.checkpoint(1)

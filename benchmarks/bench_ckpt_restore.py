@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import LADDER, POLICY, Timer, emit, ladder_config, mesh1
-from repro.core import SnapshotEngine
+from repro.api import CheckpointSession
 from repro.optim import AdamW
 from repro.optim.schedule import constant
 from repro.models.encdec import build_model
@@ -39,7 +39,7 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
 
         run_dir = tempfile.mkdtemp(prefix=f"bench_ckpt_{size}_")
         try:
-            eng = SnapshotEngine(run_dir, mesh=mesh)
+            eng = CheckpointSession(run_dir, mesh=mesh)
             eng.attach(lambda: {"train_state": {"params": params,
                                                 "opt": opt_state}})
             eng.register_host_state("cursor", lambda: {"step": 1},
@@ -55,7 +55,7 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
             emit(f"fig5.{size}.total", t.s * 1e3, "ms")
             emit(f"fig5.{size}.bytes", st["written_bytes"] / 2**20, "MiB")
 
-            eng2 = SnapshotEngine(run_dir, mesh=mesh)
+            eng2 = CheckpointSession(run_dir, mesh=mesh)
             eng2.attach(lambda: {"train_state": None})
             eng2.register_host_state("cursor", lambda: None, lambda st: None)
             with Timer() as t:

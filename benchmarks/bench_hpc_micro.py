@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit, mesh1
-from repro.core import SnapshotEngine
+from repro.api import CheckpointSession
 
 # scale factor: the container is CPU-only; the paper's GB-scale buffers
 # become MiB-scale with identical relative ordering.
@@ -220,7 +220,7 @@ def run() -> None:
         jax.block_until_ready(state)
         run_dir = tempfile.mkdtemp(prefix=f"hpc_{name}_")
         try:
-            eng = SnapshotEngine(run_dir, mesh=mesh)
+            eng = CheckpointSession(run_dir, mesh=mesh)
             eng.attach(lambda: {"hpc_state": state})
             with Timer() as t:
                 eng.checkpoint(1)
@@ -231,7 +231,7 @@ def run() -> None:
                  st["device_to_host_s"] * 1e3, "ms")
             emit(f"fig7.{name}.mem_write", st["write_s"] * 1e3, "ms")
 
-            eng2 = SnapshotEngine(run_dir, mesh=mesh)
+            eng2 = CheckpointSession(run_dir, mesh=mesh)
             eng2.attach(lambda: {"hpc_state": None})
             with Timer() as tr:
                 restored = eng2.restore()

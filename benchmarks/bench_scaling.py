@@ -25,16 +25,17 @@ _WORKER = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + os.environ["NDEV"])
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from benchmarks.common import ladder_config, POLICY, Timer
-    from repro.core import SnapshotEngine
+    from repro.api import CheckpointSession
+    from repro.launch.mesh import make_mesh
     from repro.core.device_plugin import capture_pytree
     from repro.models.encdec import build_model
     from repro.optim import AdamW
     from repro.optim.schedule import constant
 
     n = int(os.environ["NDEV"])
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((n,), ("data",))
     cfg = ladder_config("L")
     model = build_model(cfg, POLICY, mesh, compute_dtype=jnp.float32,
                         remat=False)
@@ -45,7 +46,7 @@ _WORKER = textwrap.dedent("""
     opt_state = jax.device_put(opt.init(params), NamedSharding(mesh, P()))
 
     run_dir = tempfile.mkdtemp(prefix=f"scale{n}_")
-    eng = SnapshotEngine(run_dir, mesh=mesh)
+    eng = CheckpointSession(run_dir, mesh=mesh)
     eng.attach(lambda: {"train_state": {"params": params,
                                         "opt": opt_state}})
     with Timer() as t:
@@ -59,7 +60,7 @@ _WORKER = textwrap.dedent("""
             if isinstance(leaf, jax.Array):
                 naive += sum(s.data.nbytes for s in leaf.addressable_shards)
 
-    eng2 = SnapshotEngine(run_dir, mesh=mesh)
+    eng2 = CheckpointSession(run_dir, mesh=mesh)
     eng2.attach(lambda: {"train_state": None})
     with Timer() as tr:
         eng2.restore()

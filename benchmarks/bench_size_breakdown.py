@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import POLICY, emit, ladder_config, mesh1
 from repro.configs import get_smoke_config
-from repro.core import SnapshotEngine
+from repro.api import CheckpointSession
 from repro.core.snapshot_io import SnapshotStore
 from repro.data import TokenPipeline
 from repro.models.encdec import build_model
@@ -42,7 +42,7 @@ def run() -> None:
 
         run_dir = tempfile.mkdtemp(prefix="bench_t4_")
         try:
-            eng = SnapshotEngine(run_dir, mesh=mesh)
+            eng = CheckpointSession(run_dir, mesh=mesh)
             eng.attach(lambda: {"train_state": {"params": params,
                                                 "opt": opt_state}})
             eng.register_host_state("data_cursor", pipe.state,

@@ -39,8 +39,8 @@ def ladder_config(size: str, arch: str = "qwen1.5-0.5b", **extra):
 
 
 def mesh1():
-    from jax.sharding import AxisType
-    return jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1,), ("data",))
 
 
 def emit(name: str, value, unit: str = "") -> None:

@@ -17,10 +17,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.api import CheckpointSession
 from repro.configs import get_smoke_config
-from repro.core import SnapshotEngine
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models.encdec import build_model
 from repro.optim import AdamW
 from repro.optim.schedule import constant
@@ -29,8 +29,7 @@ from repro.sharding import get_policy
 
 
 def mesh_of(shape):
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh(shape, ("data", "model"))
 
 
 def main():
@@ -44,20 +43,20 @@ def main():
     mesh_a = mesh_of((4, 2))
     model_a = build_model(cfg, policy, mesh_a, compute_dtype=jnp.float32,
                           remat=False)
-    with jax.sharding.set_mesh(mesh_a):
+    with use_mesh(mesh_a):
         params = jax.jit(model_a.init,
                          out_shardings=model_a.param_shardings())(
             jax.random.key(0))
     opt_state = opt.init(params)
 
-    eng = SnapshotEngine(run_dir, mesh=mesh_a)
-    eng.attach(lambda: {"train_state": {"params": params,
-                                        "opt": opt_state}})
-    eng.register_host_state("trainer", lambda: {"step": 100},
-                            lambda st: None)
-    eng.register_host_state("data_cursor", lambda: {"step": 100},
-                            lambda st: None)
-    eng.checkpoint(100)
+    session = CheckpointSession(run_dir, mesh=mesh_a)
+    session.attach(lambda: {"train_state": {"params": params,
+                                            "opt": opt_state}})
+    session.register_host_state("trainer", lambda: {"step": 100},
+                                lambda st: None)
+    session.register_host_state("data_cursor", lambda: {"step": 100},
+                                lambda st: None)
+    session.checkpoint(100)
     print(f"snapshot taken on mesh (4,2): 8 devices")
 
     print("=== node loss: restore onto mesh (2,2) — 4 devices ===")
@@ -78,7 +77,7 @@ def main():
     from repro.data import TokenPipeline
     batch = {k: jnp.asarray(v)
              for k, v in TokenPipeline(cfg, 4, 16).next().items()}
-    with jax.sharding.set_mesh(mesh_b):
+    with use_mesh(mesh_b):
         loss = jax.jit(lambda p, b: model_b.loss(p, b)[0])(out["params"],
                                                            batch)
     print(f"first loss on the replacement mesh: {float(loss):.4f}")

@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.api import CheckpointOptions
 from repro.configs import get_smoke_config
 from repro.core.snapshot_io import SnapshotStore
 from repro.launch.mesh import make_host_mesh
@@ -27,7 +28,9 @@ def main():
     policy = get_policy("baseline")
     run_dir = tempfile.mkdtemp(prefix="ft_train_")
     tcfg = TrainConfig(batch_size=4, seq_len=32, total_steps=40,
-                       ckpt_every=5, ckpt_mode="async", incremental=True,
+                       ckpt_every=5,
+                       ckpt=CheckpointOptions(mode="async",
+                                              incremental=True),
                        compute_dtype=jnp.float32, remat=False)
 
     def make_trainer():

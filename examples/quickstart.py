@@ -17,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.api import CheckpointOptions
 from repro.configs import get_smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.trainer import TrainConfig, Trainer
@@ -28,15 +29,22 @@ def main():
     mesh = make_host_mesh(data=len(jax.devices()))
     policy = get_policy("baseline")
     tcfg = TrainConfig(batch_size=4, seq_len=32, total_steps=30,
-                       ckpt_every=10, ckpt_mode="async",
+                       ckpt_every=10,
+                       ckpt=CheckpointOptions(mode="async"),
                        compute_dtype=jnp.float32, remat=False)
-    run_dir = tempfile.mkdtemp(prefix="quickstart_")
+    run_dir = (sys.argv[1] if len(sys.argv) > 1
+               else tempfile.mkdtemp(prefix="quickstart_"))
 
     print("=== phase 1: train 20 steps with periodic unified snapshots ===")
     t = Trainer(cfg, tcfg, mesh, policy, run_dir)
+    report = t.session.check()                    # `criu check` preflight
+    print(f"preflight: ok={report.ok} "
+          f"(backend={t.session.backend_name}, "
+          f"jax {report.capabilities['jax']['version']})")
+    assert report.ok, report.summary()
     out = t.run(20)
     print(f"steps={out['steps']} loss={out['loss']:.4f}")
-    print(f"snapshots: {t.engine.store.list_steps()}")
+    print(f"snapshots: {t.session.store.list_steps()}")
     ref_losses = t.metrics_history["loss"][10:]   # steps 11..20
 
     print("=== phase 2: fresh process state, restore, replay 10 steps ===")
@@ -52,6 +60,8 @@ def main():
     bitwise = all(a == b for a, b in zip(ref_losses, got_losses))
     print(f"deterministic restore: losses bitwise identical = {bitwise}")
     assert bitwise
+    print(f"images live in {run_dir} — inspect them offline with:")
+    print(f"  python -m repro inspect {run_dir}")
     print("OK")
 
 

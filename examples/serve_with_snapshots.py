@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CheckpointOptions
 from repro.configs import get_smoke_config
 from repro.data import TokenPipeline
 from repro.launch.mesh import make_host_mesh
@@ -29,7 +30,8 @@ def main():
     policy = get_policy("baseline")
     run_dir = tempfile.mkdtemp(prefix="serve_")
 
-    srv = DecodeServer(cfg, policy, mesh, run_dir, max_seq=64)
+    srv = DecodeServer(cfg, policy, mesh, run_dir, max_seq=64,
+                       options=CheckpointOptions())
     model = build_model(cfg, policy, mesh, compute_dtype=jnp.float32,
                         remat=False)
     srv.load(model.init(jax.random.key(0)))

@@ -1,0 +1,19 @@
+"""repro — CRIUgpu-style transparent checkpointing for JAX workloads.
+
+Public surface: ``repro.api`` (CheckpointOptions / CheckpointSession),
+``python -m repro`` (image CLI).  Kept import-light: pulling in the heavy
+runtime (jax) is deferred until an API symbol is actually touched.
+"""
+__version__ = "0.2.0"
+
+_API = ("CheckpointOptions", "CheckpointSession", "FrozenCheckpoint",
+        "CheckReport", "OptionsError", "capabilities", "check")
+
+__all__ = list(_API) + ["__version__"]
+
+
+def __getattr__(name):
+    if name in _API:
+        import repro.api as _api
+        return getattr(_api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

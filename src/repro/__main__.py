@@ -1,0 +1,7 @@
+"""Entry point: ``python -m repro <check|inspect|verify|gc|restore>``."""
+import sys
+
+from repro.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""repro.api — the stable checkpointing surface (paper §3.1).
+
+    from repro.api import CheckpointOptions, CheckpointSession
+
+    opts = CheckpointOptions(mode="async", incremental=True, keep=3)
+    session = CheckpointSession(run_dir, opts, mesh=mesh)
+    assert session.check().ok                 # `criu check`
+    session.attach(lambda: {"train_state": state})
+    session.checkpoint(step)                  # `criu dump`
+    session.restore()                         # `criu restore`
+
+Everything else (SnapshotEngine, plugins, backends) is mechanism; this
+package is policy + lifecycle.  The image directories it produces are
+operable offline via ``python -m repro`` (the CRIT analogue).
+"""
+from repro.api.options import CheckpointOptions, OptionsError  # noqa: F401
+from repro.api.capabilities import (CheckReport, capabilities,  # noqa: F401
+                                    check)
+from repro.api.session import (CheckpointSession,  # noqa: F401
+                               FrozenCheckpoint)

@@ -1,0 +1,127 @@
+"""CheckpointOptions — the declarative `criu_set_*` analogue.
+
+CRIU's libcriu configures a dump/restore with ``criu_set_*`` calls before
+the operation runs; everything about *how* a checkpoint is taken lives in
+one options object, not scattered across call sites.  This is our
+equivalent: a frozen dataclass carrying every knob the engine understands,
+validated at construction, round-trippable through the environment (so
+schedulers can configure checkpointing without touching code).
+
+Deliberately dependency-free: importable from the CLI, tests, and config
+tooling without pulling in jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional
+
+_MODES = ("sync", "async")
+
+# env-var names, one per field (the `criu_set_*` <-> CRIU_* convention)
+_ENV_PREFIX = "REPRO_CKPT_"
+
+
+class OptionsError(ValueError):
+    """An invalid CheckpointOptions field combination."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointOptions:
+    """Declarative checkpoint configuration.
+
+    mode             "sync" (paper-faithful: frozen through dump+write) or
+                     "async" (resume after device capture, write in
+                     background — CheckFreq-style).
+    incremental      delta images: unchanged entries point at the parent
+                     snapshot's pack (Check-N-Run-style).
+    compress         per-entry compression in the pack files.
+    keep             GC: retain the newest N images (0 = keep all); parent
+                     chains of kept images are never broken.
+    lock_timeout_s   device-lock acquisition deadline; on timeout the dump
+                     aborts and the job keeps running (paper §3.1.1).
+    restore_threads  parallel pack-entry loads on restore (>1 enables the
+                     on-demand-parallelism optimization).
+    replicate_to     peer directory for snapshot replication (Gemini-style);
+                     None disables.
+    verify_restore   CRC-verify images before restoring from them (both the
+                     newest-valid scan and explicitly requested steps).
+    """
+
+    mode: str = "sync"
+    incremental: bool = False
+    compress: bool = False
+    keep: int = 0
+    lock_timeout_s: float = 10.0
+    restore_threads: int = 0
+    replicate_to: Optional[str] = None
+    verify_restore: bool = True
+
+    def __post_init__(self):
+        self.validate()
+
+    # ------------------------------------------------------------ checks
+    def validate(self) -> None:
+        if self.mode not in _MODES:
+            raise OptionsError(f"mode must be one of {_MODES}, "
+                               f"got {self.mode!r}")
+        if not isinstance(self.keep, int) or self.keep < 0:
+            raise OptionsError(f"keep must be an int >= 0, got {self.keep!r}")
+        if self.lock_timeout_s <= 0:
+            raise OptionsError("lock_timeout_s must be > 0, "
+                               f"got {self.lock_timeout_s!r}")
+        if not isinstance(self.restore_threads, int) or \
+                self.restore_threads < 0:
+            raise OptionsError("restore_threads must be an int >= 0, "
+                               f"got {self.restore_threads!r}")
+        if self.replicate_to is not None and not self.replicate_to:
+            raise OptionsError("replicate_to must be a path or None")
+
+    def replace(self, **changes) -> "CheckpointOptions":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------ env i/o
+    @classmethod
+    def from_env(cls, env: Optional[Dict[str, str]] = None
+                 ) -> "CheckpointOptions":
+        """Build options from REPRO_CKPT_* variables (missing = default)."""
+        env = os.environ if env is None else env
+
+        def get(name, conv, default):
+            raw = env.get(_ENV_PREFIX + name)
+            if raw is None:
+                return default
+            return conv(raw)
+
+        def as_bool(raw: str) -> bool:
+            return raw.strip().lower() in ("1", "true", "yes", "on")
+
+        return cls(
+            mode=get("MODE", str, cls.mode),
+            incremental=get("INCREMENTAL", as_bool, cls.incremental),
+            compress=get("COMPRESS", as_bool, cls.compress),
+            keep=get("KEEP", int, cls.keep),
+            lock_timeout_s=get("LOCK_TIMEOUT_S", float, cls.lock_timeout_s),
+            restore_threads=get("RESTORE_THREADS", int, cls.restore_threads),
+            replicate_to=get("REPLICATE_TO", str, cls.replicate_to),
+            verify_restore=get("VERIFY_RESTORE", as_bool, cls.verify_restore),
+        )
+
+    def to_env(self) -> Dict[str, str]:
+        """Inverse of from_env: CheckpointOptions.from_env(o.to_env()) == o."""
+        out = {
+            _ENV_PREFIX + "MODE": self.mode,
+            _ENV_PREFIX + "INCREMENTAL": "1" if self.incremental else "0",
+            _ENV_PREFIX + "COMPRESS": "1" if self.compress else "0",
+            _ENV_PREFIX + "KEEP": str(self.keep),
+            _ENV_PREFIX + "LOCK_TIMEOUT_S": repr(self.lock_timeout_s),
+            _ENV_PREFIX + "RESTORE_THREADS": str(self.restore_threads),
+            _ENV_PREFIX + "VERIFY_RESTORE": "1" if self.verify_restore
+            else "0",
+        }
+        if self.replicate_to is not None:
+            out[_ENV_PREFIX + "REPLICATE_TO"] = self.replicate_to
+        return out
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)

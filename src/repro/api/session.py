@@ -1,0 +1,188 @@
+"""CheckpointSession — the libcriu-style façade over the snapshot engine.
+
+One object owns the whole checkpoint lifecycle the way a ``criu_*`` session
+does: configured by a :class:`CheckpointOptions` (the ``criu_set_*``
+analogue), preflighted with :meth:`check` (``criu check``), driven with
+:meth:`checkpoint` / :meth:`restore` (``criu dump`` / ``criu restore``),
+and inspectable via :meth:`capabilities`.  The engine, backend plugin, and
+replicator wiring that callers used to hand-assemble from nine keyword
+arguments live here.
+
+The :meth:`frozen` context manager exposes the dump phases that
+``SnapshotEngine.checkpoint`` runs privately::
+
+    with session.frozen(step) as snap:      # ①–③ quiesce + capture done
+        ...                                 # job is frozen; inspect snap
+    # ④ on exit: write + commit + resume (abort on exception)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.api.capabilities import CheckReport, capabilities, check
+from repro.api.options import CheckpointOptions
+
+PyTree = Any
+
+
+class FrozenCheckpoint:
+    """Handle to a dump frozen between capture (①–③) and commit (④)."""
+
+    def __init__(self, engine, ctx):
+        self._engine = engine
+        self._ctx = ctx
+        self._done = False
+        self.path: Optional[str] = None
+
+    @property
+    def step(self) -> int:
+        return self._ctx.step
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        return self._ctx.stats
+
+    @property
+    def warnings(self) -> List[str]:
+        return self._ctx.warnings
+
+    def commit(self) -> str:
+        """Phase ④: write + manifest-commit the capture, resume the job."""
+        if self._done:
+            raise RuntimeError("frozen checkpoint already finished")
+        self._done = True
+        self.path = self._engine.commit_dump(self._ctx)
+        return self.path
+
+    def abort(self) -> None:
+        """Resume the job without writing an image."""
+        if self._done:
+            return
+        self._done = True
+        self._engine.abort_dump(self._ctx)
+
+
+class CheckpointSession:
+    """Owns engine construction + lifecycle for one run directory."""
+
+    def __init__(self, run_dir: str,
+                 options: Optional[CheckpointOptions] = None, *,
+                 mesh=None,
+                 plugins: Optional[List[Any]] = None,
+                 replicator=None,
+                 backend: str = "jax"):
+        from repro.core.engine import SnapshotEngine
+        self.run_dir = run_dir
+        self.options = options if options is not None else CheckpointOptions()
+        self.backend_name = backend
+        self.engine = SnapshotEngine(run_dir, plugins=plugins,
+                                     options=self.options, mesh=mesh,
+                                     replicator=replicator, backend=backend)
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def from_env(cls, run_dir: str, **kwargs) -> "CheckpointSession":
+        """Session configured from REPRO_CKPT_* environment variables."""
+        return cls(run_dir, CheckpointOptions.from_env(), **kwargs)
+
+    @classmethod
+    def from_engine(cls, engine) -> "CheckpointSession":
+        """Wrap an already-built SnapshotEngine (migration aid)."""
+        self = cls.__new__(cls)
+        self.run_dir = engine.run_dir
+        self.options = engine.options
+        # registry name stamped by create_backend ("jax"/"host"), not the
+        # plugin's own .name ("device")
+        self.backend_name = getattr(engine.device_plugin, "backend_name",
+                                    "jax")
+        self.engine = engine
+        return self
+
+    # ------------------------------------------------------- preflight
+    def capabilities(self) -> Dict[str, Any]:
+        caps = capabilities()
+        caps["session"] = {
+            "run_dir": self.run_dir,
+            "backend": self.backend_name,
+            "options": self.options.to_dict(),
+            "plugins": [p.name for p in self.engine.registry.plugins],
+            "plugin_features": sorted(self.engine.registry.features()),
+        }
+        return caps
+
+    def check(self) -> CheckReport:
+        """`criu check` for this session's run_dir + options + backend."""
+        return check(run_dir=self.run_dir, options=self.options)
+
+    # ------------------------------------------------------- wiring
+    def attach(self, provider: Callable[[], Dict[str, PyTree]]) -> None:
+        self.engine.attach(provider)
+
+    def register_host_state(self, name: str, getter: Callable[[], Any],
+                            setter: Callable[[Any], None]) -> None:
+        self.engine.register_host_state(name, getter, setter)
+
+    def add_plugin(self, plugin) -> None:
+        self.engine.add_plugin(plugin)
+
+    # ------------------------------------------------------- lifecycle
+    def checkpoint(self, step: int) -> str:
+        return self.engine.checkpoint(step)
+
+    @contextlib.contextmanager
+    def frozen(self, step: int):
+        """Freeze, yield the in-memory capture, commit (or abort) on exit.
+
+        The body runs with the job quiesced and the image captured in host
+        memory: inspect ``snap.stats``/``snap.warnings``, decide to
+        ``snap.abort()``, or call ``snap.commit()`` early to time the
+        write yourself.  An exception in the body aborts the dump (the
+        job resumes; no image is written) and propagates.  In async mode
+        the commit follows ``checkpoint()``'s contract: the write lands
+        in the background and is drained by ``wait_pending()`` / session
+        exit.
+        """
+        snap = FrozenCheckpoint(self.engine, self.engine.freeze(step))
+        try:
+            yield snap
+        except BaseException:
+            snap.abort()
+            raise
+        else:
+            if not snap._done:
+                snap.commit()
+
+    def restore(self, step: Optional[int] = None, mesh=None,
+                shardings: Optional[Dict[str, Any]] = None,
+                verify: Optional[bool] = None) -> Dict[str, Any]:
+        return self.engine.restore(step=step, mesh=mesh,
+                                   shardings=shardings, verify=verify)
+
+    def restore_into(self, template: PyTree, state: str = "train_state",
+                     step: Optional[int] = None, mesh=None,
+                     shardings: Optional[PyTree] = None) -> PyTree:
+        return self.engine.restore_into(template, state=state, step=step,
+                                        mesh=mesh, shardings=shardings)
+
+    # ------------------------------------------------------- queries
+    @property
+    def store(self):
+        return self.engine.store
+
+    @property
+    def last_stats(self) -> Dict[str, Any]:
+        return self.engine.last_stats
+
+    def latest_step(self) -> Optional[int]:
+        return self.engine.latest_step()
+
+    def wait_pending(self) -> None:
+        self.engine.wait_pending()
+
+    # session is a context manager: exiting drains async writers
+    def __enter__(self) -> "CheckpointSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.wait_pending()

@@ -1,0 +1,311 @@
+"""``python -m repro`` — operate on snapshot images from outside the
+training process (the CRIT analogue).
+
+CRIUgpu images are plain files that CRIT can decode, verify, and edit
+without the checkpointed process; schedulers and CI lean on that.  Our
+images (``<run_dir>/snapshots/step_*/`` with a MANIFEST.json + pack files)
+get the same treatment:
+
+  python -m repro check [--run-dir D]        `criu check`: preflight
+  python -m repro inspect RUN_DIR [--step N] manifest / size / parent chain
+  python -m repro verify RUN_DIR [--step N]  CRC-verify every entry
+  python -m repro gc RUN_DIR --keep N        retire old images (chain-safe)
+  python -m repro restore RUN_DIR --dry-run  full restore path, host backend
+
+Exit status is 0 on success, 1 on any problem — scriptable from cron,
+GitHub Actions, or a cluster scheduler's health hook.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+
+# ------------------------------------------------------------------ util
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024 or unit == "TiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}TiB"
+
+
+def _fmt_time(ts: Optional[float]) -> str:
+    if not ts:
+        return "-"
+    import datetime
+    return datetime.datetime.fromtimestamp(ts).strftime("%Y-%m-%d %H:%M:%S")
+
+
+def _table(rows: List[List[str]], header: List[str]) -> str:
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    def line(cells):
+        return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+    out = [line(header), line(["-" * w for w in widths])]
+    out.extend(line(r) for r in rows)
+    return "\n".join(out)
+
+
+def _store(run_dir: str):
+    from repro.core.snapshot_io import SnapshotStore
+    if not os.path.isdir(run_dir):
+        raise SystemExit(f"error: {run_dir!r} is not a directory")
+    store = SnapshotStore(run_dir)
+    if not store.list_steps():
+        raise SystemExit(f"error: no snapshots under {run_dir!r} "
+                         f"(expected {run_dir}/snapshots/step_*)")
+    return store
+
+
+def _parent_chain(store, step: int, limit: int = 16) -> List[int]:
+    """step -> [step, parent, grandparent, ...] (incremental delta chain)."""
+    chain = [step]
+    seen = {step}
+    while len(chain) < limit:
+        parent = store.manifest(chain[-1]).get("parent")
+        if parent is None or parent in seen:
+            break
+        chain.append(parent)
+        seen.add(parent)
+    return chain
+
+
+# ------------------------------------------------------------------ check
+def cmd_check(args) -> int:
+    from repro.api import check
+    report = check(run_dir=args.run_dir)
+    if args.json:
+        print(json.dumps({"ok": report.ok, "problems": report.problems,
+                          "warnings": report.warnings,
+                          "capabilities": report.capabilities},
+                         indent=2, default=str))
+    else:
+        caps = report.capabilities
+        print(report.summary())
+        print(f"  jax {caps['jax']['version']} "
+              f"({caps['jax']['platform']}, "
+              f"{caps['jax']['device_count']} device(s))")
+        print(f"  plugin api v{caps['plugin_api_version']}; backends: "
+              + ", ".join(f"{n} (v{b['api_version']})"
+                          for n, b in caps["backends"].items()))
+    return 0 if report.ok else 1
+
+
+# ---------------------------------------------------------------- inspect
+def cmd_inspect(args) -> int:
+    store = _store(args.run_dir)
+    if args.step is not None:
+        m = store.manifest(args.step)
+        if args.json:
+            print(json.dumps(m, indent=2, default=str))
+            return 0
+        print(f"snapshot step {m['step']}  ({_fmt_time(m.get('timestamp'))})")
+        print(f"  dir:         snapshots/step_{m['step']:08d}")
+        print(f"  mode:        {m.get('mode', '-')}   "
+              f"incremental: {m.get('incremental', False)}")
+        print(f"  states:      {', '.join(m.get('states', []))}")
+        print(f"  written:     {_fmt_bytes(m.get('written_bytes', 0))}   "
+              f"reused: {_fmt_bytes(m.get('reused_bytes', 0))}")
+        chain = _parent_chain(store, args.step)
+        print(f"  parent chain: {' -> '.join(map(str, chain))}")
+        topo = m.get("topology") or {}
+        if topo:
+            print(f"  topology:    {topo.get('n_devices', '?')} device(s), "
+                  f"axes {topo.get('mesh_axes')} shape "
+                  f"{topo.get('mesh_shape')}")
+        entries = m.get("locations", {})
+        print(f"  entries:     {len(entries)} "
+              f"({sum(1 for v in entries.values() if not v.startswith('step_' + format(m['step'], '08d')))} "
+              f"inherited from parents)")
+        for w in m.get("warnings", []) or []:
+            print(f"  warning:     {w}")
+        return 0
+
+    rows = []
+    for s in store.list_steps():
+        m = store.manifest(s)
+        chain = _parent_chain(store, s)
+        rows.append([
+            s, _fmt_time(m.get("timestamp")), m.get("mode", "-"),
+            ",".join(m.get("states", [])),
+            _fmt_bytes(m.get("written_bytes", 0)),
+            _fmt_bytes(m.get("reused_bytes", 0)),
+            " -> ".join(map(str, chain)) if len(chain) > 1 else "-",
+        ])
+    if args.json:
+        hdr = ["step", "time", "mode", "states", "written", "reused",
+               "parent_chain"]
+        print(json.dumps([dict(zip(hdr, r)) for r in rows], indent=2))
+    else:
+        print(f"{args.run_dir}: {len(rows)} snapshot(s)")
+        print(_table(rows, ["step", "time", "mode", "states", "written",
+                            "reused", "parent chain"]))
+    return 0
+
+
+# ----------------------------------------------------------------- verify
+def cmd_verify(args) -> int:
+    store = _store(args.run_dir)
+    steps = [args.step] if args.step is not None else store.list_steps()
+    bad = 0
+    for s in steps:
+        try:
+            reader = store.reader(s, verify=True)
+            try:
+                reader.verify_all()
+            finally:
+                reader.close()
+            n = len(store.manifest(s).get("locations", {}))
+            print(f"step {s}: OK ({n} entries CRC-verified)")
+        except Exception as e:
+            bad += 1
+            print(f"step {s}: CORRUPT — {e}")
+    if bad:
+        print(f"{bad}/{len(steps)} snapshot(s) failed verification")
+    return 1 if bad else 0
+
+
+# --------------------------------------------------------------------- gc
+def cmd_gc(args) -> int:
+    store = _store(args.run_dir)
+    steps = store.list_steps()
+    if args.keep < 1:
+        raise SystemExit("error: --keep must be >= 1")
+    if args.dry_run:
+        # mirror SnapshotStore.gc's keep-set without deleting: a snapshot
+        # survives if kept directly or if any kept manifest still points
+        # into its pack files (delta chains reference packs, not parents)
+        keep = set(steps[-args.keep:])
+        changed = True
+        while changed:
+            changed = False
+            for s in list(keep):
+                refs = {int(loc.split("/")[0][5:])
+                        for loc in store.manifest(s)["locations"].values()}
+                for n in refs:
+                    if n not in keep:
+                        keep.add(n)
+                        changed = True
+        removable = [s for s in steps if s not in keep]
+        print(f"would remove {len(removable)} snapshot(s): {removable}")
+        print(f"would keep: {sorted(keep)}")
+        return 0
+    removed = store.gc(args.keep)
+    print(f"removed {len(removed)} snapshot(s): {removed}")
+    print(f"remaining: {store.list_steps()}")
+    return 0
+
+
+# ---------------------------------------------------------------- restore
+def cmd_restore(args) -> int:
+    if not args.dry_run:
+        raise SystemExit(
+            "error: only --dry-run restores are supported from the CLI; a "
+            "real restore needs the owning process (use "
+            "repro.api.CheckpointSession.restore there)")
+    # Full restore pipeline on the host-numpy backend: manifest selection,
+    # CRC verification, entry loading, tree reassembly — everything except
+    # device placement.  What `criu restore --check-only` would be.
+    from repro.core.engine import SnapshotEngine
+    from repro.core.plugins import Plugin
+
+    class _RestoreProbe(Plugin):
+        """Observes what the restore pipeline actually loaded."""
+        name = "cli-probe"
+        host_names: List[str] = []
+        step = None
+
+        def restore_ext_state(self, ctx):
+            _RestoreProbe.host_names = sorted(ctx.host_state)
+            _RestoreProbe.step = ctx.step
+
+    _store(args.run_dir)                              # friendly errors first
+    eng = SnapshotEngine(args.run_dir, backend="host")
+    eng.add_plugin(_RestoreProbe())
+    restored = eng.restore(step=args.step, verify=True)
+    print(f"step {_RestoreProbe.step}: restore pipeline ran on the "
+          f"'host' backend")
+    host_names = _RestoreProbe.host_names
+    total = 0
+    rows = []
+    import numpy as np
+    for state, tree in restored.items():
+        leaves = [(k, v) for k, v in _iter_leaves(tree)]
+        nbytes = sum(v.nbytes for _, v in leaves
+                     if isinstance(v, np.ndarray))
+        total += nbytes
+        rows.append([state, len(leaves), _fmt_bytes(nbytes)])
+    print(_table(rows, ["state", "leaves", "bytes"]))
+    print(f"host state present: {host_names}")
+    print(f"restore --dry-run OK: {_fmt_bytes(total)} reassembled on the "
+          f"host backend (no device placement)")
+    return 0
+
+
+def _iter_leaves(node, prefix=""):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _iter_leaves(v, f"{prefix}/{k}" if prefix else str(k))
+    else:
+        yield prefix, node
+
+
+# ------------------------------------------------------------------- main
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Operate on repro snapshot images (the CRIT analogue).")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("check", help="preflight: can checkpointing work "
+                       "here? (`criu check`)")
+    p.add_argument("--run-dir", default=None,
+                   help="also prove this image directory is writable")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_check)
+
+    p = sub.add_parser("inspect", help="list snapshots / show one manifest")
+    p.add_argument("run_dir")
+    p.add_argument("--step", type=int, default=None)
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_inspect)
+
+    p = sub.add_parser("verify", help="CRC-verify image entries")
+    p.add_argument("run_dir")
+    p.add_argument("--step", type=int, default=None)
+    p.set_defaults(fn=cmd_verify)
+
+    p = sub.add_parser("gc", help="remove old snapshots (parent-chain safe)")
+    p.add_argument("run_dir")
+    p.add_argument("--keep", type=int, required=True)
+    p.add_argument("--dry-run", action="store_true")
+    p.set_defaults(fn=cmd_gc)
+
+    p = sub.add_parser("restore", help="dry-run the restore path on the "
+                       "host backend")
+    p.add_argument("run_dir")
+    p.add_argument("--step", type=int, default=None)
+    p.add_argument("--dry-run", action="store_true")
+    p.set_defaults(fn=cmd_restore)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except SystemExit:
+        raise
+    except KeyboardInterrupt:                          # pragma: no cover
+        return 130
+    except Exception as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":                             # pragma: no cover
+    sys.exit(main())

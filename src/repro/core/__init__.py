@@ -10,8 +10,12 @@ Public API:
 from repro.core.engine import SnapshotEngine, CheckpointAborted  # noqa: F401
 from repro.core.lock import DeviceLock, LockTimeout  # noqa: F401
 from repro.core.plugins import (Plugin, Hook, HookContext,  # noqa: F401
-                                CallbackPlugin, PluginRegistry)
+                                CallbackPlugin, PluginRegistry,
+                                PLUGIN_API_VERSION, PluginVersionError)
 from repro.core.device_plugin import DevicePlugin  # noqa: F401
+from repro.core.backends import (DeviceBackend, BackendError,  # noqa: F401
+                                 HostNumpyBackend, available_backends,
+                                 create_backend, register_backend)
 from repro.core.snapshot_io import SnapshotStore  # noqa: F401
 from repro.core.replication import DirReplicator, MemReplicator  # noqa: F401
 from repro.core.multihost import (MultiHostCommit,  # noqa: F401

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import JAX_BACKEND_FEATURES
 from repro.core.lock import DeviceLock
 from repro.core.plugins import Hook, HookContext, Plugin
 from repro.core.topology import (resolve_sharding, sharding_descriptor)
@@ -151,7 +152,11 @@ def restore_array(entry: Dict[str, Any], target_mesh=None,
 
 # ---------------------------------------------------------------- plugin
 class DevicePlugin(Plugin):
+    """The "jax" device backend (see ``repro.core.backends``)."""
+
     name = "device"
+    api_version = 1
+    features = JAX_BACKEND_FEATURES
 
     def __init__(self, lock_timeout_s: float = 10.0,
                  restore_threads: int = 0):

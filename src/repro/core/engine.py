@@ -34,11 +34,11 @@ from __future__ import annotations
 import os
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
-from repro.core.device_plugin import DevicePlugin
 from repro.core.lock import LockTimeout
 from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
                                 PluginRegistry)
@@ -49,40 +49,84 @@ from repro.core.topology import mesh_fingerprint
 PyTree = Any
 StateProvider = Callable[[], Dict[str, PyTree]]
 
+_UNSET = object()          # sentinel: legacy kwarg not explicitly passed
+
 
 class CheckpointAborted(RuntimeError):
     pass
 
 
 class SnapshotEngine:
+    """Checkpoint/restore mechanism.
+
+    Canonical construction is ``SnapshotEngine(run_dir, options=opts)``
+    where `opts` is a :class:`repro.api.CheckpointOptions`; most callers
+    should go one level higher and use :class:`repro.api.CheckpointSession`.
+    The historical per-knob keyword form still works but is a deprecated
+    shim over the options object.
+    """
+
     def __init__(self, run_dir: str,
                  plugins: Optional[List[Plugin]] = None,
-                 mode: str = "sync",                # "sync" | "async"
-                 incremental: bool = False,
-                 compress: bool = False,
-                 keep: int = 0,                      # 0 = keep all
-                 lock_timeout_s: float = 10.0,
+                 mode=_UNSET,                        # "sync" | "async"
+                 incremental=_UNSET,
+                 compress=_UNSET,
+                 keep=_UNSET,                        # 0 = keep all
+                 lock_timeout_s=_UNSET,
                  replicator=None,                    # core.replication peer
-                 restore_threads: int = 0,           # parallel entry loads
-                 mesh=None):
-        assert mode in ("sync", "async")
+                 restore_threads=_UNSET,             # parallel entry loads
+                 mesh=None,
+                 options=None,                       # api.CheckpointOptions
+                 backend=None):                      # name | Plugin instance
+        from repro.api.options import CheckpointOptions
+        legacy = {k: v for k, v in dict(
+            mode=mode, incremental=incremental, compress=compress,
+            keep=keep, lock_timeout_s=lock_timeout_s,
+            restore_threads=restore_threads).items() if v is not _UNSET}
+        if legacy:
+            if options is not None:
+                raise TypeError(
+                    "pass either options=CheckpointOptions(...) or legacy "
+                    f"keyword(s) {sorted(legacy)}, not both")
+            warnings.warn(
+                "SnapshotEngine(mode=..., incremental=..., ...) keyword "
+                "soup is deprecated; pass "
+                "options=repro.api.CheckpointOptions(...) or use "
+                "repro.api.CheckpointSession",
+                DeprecationWarning, stacklevel=2)
+            options = CheckpointOptions(**legacy)
+        self.options = options if options is not None else CheckpointOptions()
+        self.options.validate()
+
         self.run_dir = run_dir
         os.makedirs(run_dir, exist_ok=True)
         self.store = SnapshotStore(run_dir)
-        self.device_plugin = DevicePlugin(lock_timeout_s,
-                                          restore_threads=restore_threads)
+        self.device_plugin = self._make_backend(backend)
         self.registry = PluginRegistry([self.device_plugin]
                                        + list(plugins or []))
-        self.mode = mode
-        self.incremental = incremental
-        self.compress = compress
-        self.keep = keep
+        self.mode = self.options.mode
+        self.incremental = self.options.incremental
+        self.compress = self.options.compress
+        self.keep = self.options.keep
         self.replicator = replicator
+        if replicator is None and self.options.replicate_to:
+            from repro.core.replication import DirReplicator
+            self.replicator = DirReplicator(self.options.replicate_to)
         self.mesh = mesh
         self._provider: Optional[StateProvider] = None
         self._pending: Optional[threading.Thread] = None
         self._pending_err: List[BaseException] = []
         self.last_stats: Dict[str, Any] = {}
+
+    def _make_backend(self, backend) -> Plugin:
+        from repro.core.backends import create_backend
+        if backend is None:
+            backend = "jax"
+        if isinstance(backend, str):
+            return create_backend(
+                backend, lock_timeout_s=self.options.lock_timeout_s,
+                restore_threads=self.options.restore_threads)
+        return backend                     # pre-built DeviceBackend plugin
 
     # ------------------------------------------------------------ wiring
     def attach(self, provider: StateProvider) -> None:
@@ -99,6 +143,16 @@ class SnapshotEngine:
     # ------------------------------------------------------------ dump
     def checkpoint(self, step: int) -> str:
         """Create a unified snapshot.  Returns the snapshot directory."""
+        return self.commit_dump(self.freeze(step))
+
+    def freeze(self, step: int) -> HookContext:
+        """Phases ①–③: quiesce devices and capture device+host state.
+
+        On return the image exists *in host memory* and the job is frozen
+        (device lock held).  Finish with :meth:`commit_dump` (write +
+        manifest + resume) or :meth:`abort_dump` (resume, no image) — the
+        session's ``frozen()`` context manager wraps exactly this pair.
+        """
         if self._provider is None:
             raise RuntimeError("no state provider attached")
         self.wait_pending()
@@ -106,7 +160,7 @@ class SnapshotEngine:
         ctx = HookContext("dump", step)
         ctx.roots = self._provider()
         self.registry.init_all("dump")
-        t_start = time.perf_counter()
+        ctx.stats["t_start"] = time.perf_counter()
         try:
             self.registry.run(Hook.PAUSE_DEVICES, ctx)       # ① lock
             t_frozen = time.perf_counter()
@@ -118,9 +172,19 @@ class SnapshotEngine:
             self.registry.exit_all("dump", False)
             raise CheckpointAborted(str(e)) from e
         except Exception:
+            self.device_plugin.lock.unlock()
             self.registry.exit_all("dump", False)
             raise
+        return ctx
 
+    def abort_dump(self, ctx: HookContext) -> None:
+        """Abandon a frozen dump: resume the job, write nothing."""
+        self.device_plugin.lock.unlock()
+        self.registry.exit_all("dump", False)
+
+    def commit_dump(self, ctx: HookContext) -> str:
+        """Phase ④: write + commit the frozen capture, resume the job."""
+        t_start = ctx.stats.pop("t_start", time.perf_counter())
         if self.mode == "sync":
             try:
                 path = self._write(ctx)                       # ④ write+commit
@@ -136,7 +200,7 @@ class SnapshotEngine:
         # async: resume immediately, write in background (CheckFreq-style)
         self.device_plugin.lock.unlock()
         ctx.stats["locked_total_s"] = time.perf_counter() - t_start
-        path = self._snapshot_path(step)
+        path = self._snapshot_path(ctx.step)
 
         def writer():
             try:
@@ -199,14 +263,17 @@ class SnapshotEngine:
     # ------------------------------------------------------------ restore
     def restore(self, step: Optional[int] = None, mesh=None,
                 shardings: Optional[Dict[str, Any]] = None,
-                verify: bool = True) -> Dict[str, Any]:
+                verify: Optional[bool] = None) -> Dict[str, Any]:
         """Unified restore.  Returns {state_name: nested-dict pytree}; host
         state is pushed back through the registered CallbackPlugins."""
+        if verify is None:
+            verify = self.options.verify_restore
         self.wait_pending()
         steps = self.store.list_steps()
         if step is None:
             # newest *valid* image: fall back past torn/corrupt snapshots
             for s in reversed(steps):
+                reader = None
                 try:
                     reader = self.store.reader(s, verify=verify)
                     if verify:
@@ -214,6 +281,8 @@ class SnapshotEngine:
                     step = s
                     break
                 except Exception:
+                    if reader is not None:
+                        reader.close()
                     continue
             else:
                 if self.replicator is not None:
@@ -225,7 +294,16 @@ class SnapshotEngine:
                 raise FileNotFoundError(
                     f"no restorable snapshot under {self.run_dir}")
         else:
+            # explicitly requested step: verify with the same rigor as the
+            # newest-valid scan — a torn image must raise, not restore
+            # garbage (historically this path skipped verify_all()).
             reader = self.store.reader(step, verify=verify)
+            if verify:
+                try:
+                    reader.verify_all()
+                except Exception:
+                    reader.close()
+                    raise
 
         ctx = HookContext("restore", step)
         ctx.reader = reader

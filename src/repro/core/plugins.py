@@ -15,7 +15,17 @@ where a failed dump rolls the target back to its original running state.
 from __future__ import annotations
 
 import enum
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, FrozenSet, List, Optional
+
+#: Version of the plugin/hook contract (hook vocabulary + HookContext
+#: fields + init/exit semantics).  Bump on incompatible change; the
+#: registry rejects plugins stamped with a different major version the way
+#: CRIU rejects plugins built against a different plugin API.
+PLUGIN_API_VERSION = 1
+
+
+class PluginVersionError(RuntimeError):
+    """Plugin was built against an incompatible plugin API version."""
 
 
 class Hook(enum.Enum):
@@ -28,9 +38,16 @@ class Hook(enum.Enum):
 
 
 class Plugin:
-    """Base plugin.  Subclasses override the hooks they care about."""
+    """Base plugin.  Subclasses override the hooks they care about.
+
+    Every plugin is stamped with the ``api_version`` it was written against
+    and a set of ``features`` it provides (capability flags surfaced by
+    ``repro.api`` capabilities reports and checked by backend selection).
+    """
 
     name = "plugin"
+    api_version: int = PLUGIN_API_VERSION
+    features: FrozenSet[str] = frozenset()
 
     def init(self, op: str) -> None:               # "dump" | "restore"
         pass
@@ -81,10 +98,24 @@ class HookContext:
 
 class PluginRegistry:
     def __init__(self, plugins: Optional[List[Plugin]] = None):
-        self.plugins: List[Plugin] = list(plugins or [])
+        self.plugins: List[Plugin] = []
+        for p in plugins or []:
+            self.add(p)
 
     def add(self, plugin: Plugin) -> None:
+        version = getattr(plugin, "api_version", None)
+        if version != PLUGIN_API_VERSION:
+            raise PluginVersionError(
+                f"plugin {getattr(plugin, 'name', plugin)!r} declares "
+                f"api_version={version!r}; this engine speaks "
+                f"api_version={PLUGIN_API_VERSION}")
         self.plugins.append(plugin)
+
+    def features(self) -> FrozenSet[str]:
+        out: set = set()
+        for p in self.plugins:
+            out |= getattr(p, "features", frozenset())
+        return frozenset(out)
 
     def init_all(self, op: str) -> None:
         for p in self.plugins:

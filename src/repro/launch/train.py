@@ -42,6 +42,7 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.api import CheckpointOptions
     from repro.configs import get_config, get_smoke_config
     from repro.launch.mesh import make_host_mesh
     from repro.runtime.trainer import TrainConfig, Trainer
@@ -54,12 +55,13 @@ def main(argv=None) -> int:
     tcfg = TrainConfig(
         batch_size=args.batch_size, seq_len=args.seq_len, lr=args.lr,
         total_steps=args.steps, ckpt_every=args.ckpt_every,
-        ckpt_mode=args.ckpt_mode, incremental=args.incremental,
+        ckpt=CheckpointOptions(mode=args.ckpt_mode,
+                               incremental=args.incremental,
+                               keep=args.keep),
         seed=args.seed,
         compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
 
     trainer = Trainer(cfg, tcfg, mesh, policy, args.run_dir)
-    trainer.engine.keep = args.keep
     if args.restore:
         step = trainer.restore()
         print(f"[train] restored unified snapshot at step {step}")
@@ -74,7 +76,7 @@ def main(argv=None) -> int:
     print(json.dumps({
         "arch": cfg.name, "steps": out["steps"], "final_loss": out["loss"],
         "wall_s": round(out["wall_s"], 2),
-        "snapshots": trainer.engine.store.list_steps(),
+        "snapshots": trainer.session.store.list_steps(),
     }, indent=1))
     return 0
 

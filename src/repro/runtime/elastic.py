@@ -13,11 +13,13 @@ from typing import Any, Dict, Optional
 
 import jax
 
-from repro.core import SnapshotEngine
+from repro.api import CheckpointOptions, CheckpointSession
 
 
 def elastic_restore(run_dir: str, new_mesh, model, opt,
-                    step: Optional[int] = None) -> Dict[str, Any]:
+                    step: Optional[int] = None,
+                    options: Optional[CheckpointOptions] = None
+                    ) -> Dict[str, Any]:
     """Restore ``train_state`` from `run_dir` onto `new_mesh`.
 
     The model/optimizer must be constructed against the new mesh (their
@@ -25,24 +27,24 @@ def elastic_restore(run_dir: str, new_mesh, model, opt,
     independent so any saved image can be re-laid-out.
     Returns {"params", "opt", "step"}.
     """
-    engine = SnapshotEngine(run_dir, mesh=new_mesh)
+    session = CheckpointSession(run_dir, options, mesh=new_mesh)
     meta: Dict[str, Any] = {}
-    engine.register_host_state("trainer",
-                               lambda: {},
-                               lambda st: meta.update(st))
-    engine.register_host_state("data_cursor",
-                               lambda: {},
-                               lambda st: meta.setdefault("cursor", st))
+    session.register_host_state("trainer",
+                                lambda: {},
+                                lambda st: meta.update(st))
+    session.register_host_state("data_cursor",
+                                lambda: {},
+                                lambda st: meta.setdefault("cursor", st))
     params_t = model.init_abstract()
     opt_t = opt.init_abstract(params_t)
     shardings = {"params": model.param_shardings(),
                  "opt": _opt_shardings(model, opt, new_mesh)}
-    restored = engine.restore_into(
+    restored = session.restore_into(
         {"params": params_t, "opt": opt_t}, state="train_state",
         step=step, mesh=new_mesh, shardings=shardings)
     return {"params": restored["params"], "opt": restored["opt"],
             "step": meta.get("step"), "meta": meta,
-            "topology_mode": engine.last_stats.get("topology_mode")}
+            "topology_mode": session.last_stats.get("topology_mode")}
 
 
 def _opt_shardings(model, opt, mesh):

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SnapshotEngine
+from repro.api import CheckpointOptions, CheckpointSession
 from repro.models.config import ModelConfig
 from repro.models.encdec import build_model
 from repro.sharding.policy import ShardingPolicy
@@ -24,7 +24,9 @@ from repro.sharding.policy import ShardingPolicy
 class DecodeServer:
     def __init__(self, cfg: ModelConfig, policy: ShardingPolicy, mesh,
                  run_dir: str, max_seq: int = 256,
-                 compute_dtype=jnp.float32):
+                 compute_dtype=jnp.float32,
+                 options: Optional[CheckpointOptions] = None,
+                 session: Optional[CheckpointSession] = None):
         self.cfg = cfg
         self.model = build_model(cfg, policy, mesh,
                                  compute_dtype=compute_dtype, remat=False)
@@ -33,10 +35,12 @@ class DecodeServer:
         self.cache = None
         self.tokens: Optional[np.ndarray] = None       # generated so far
         self.pos = 0
-        self.engine = SnapshotEngine(run_dir, mesh=mesh)
-        self.engine.attach(lambda: {"serve_state": {
+        self.session = session or CheckpointSession(run_dir, options,
+                                                    mesh=mesh)
+        self.engine = self.session.engine              # back-compat alias
+        self.session.attach(lambda: {"serve_state": {
             "params": self.params, "cache": self.cache}})
-        self.engine.register_host_state(
+        self.session.register_host_state(
             "decode_cursor",
             lambda: {"pos": self.pos,
                      "tokens": self.tokens},
@@ -97,7 +101,7 @@ class DecodeServer:
 
     # ------------------------------------------------------------- ckpt
     def checkpoint(self, tag: int = 0) -> str:
-        return self.engine.checkpoint(tag)
+        return self.session.checkpoint(tag)
 
     def restore(self, params_template=None, step: Optional[int] = None):
         template = {"params": self.params if self.params is not None
@@ -107,8 +111,8 @@ class DecodeServer:
             # rebuild an abstract cache skeleton for typed restore
             raise RuntimeError("restore() requires a started server or "
                                "use engine.restore() raw view")
-        restored = self.engine.restore_into(template, state="serve_state",
-                                            step=step)
+        restored = self.session.restore_into(template, state="serve_state",
+                                             step=step)
         self.params = restored["params"]
         self.cache = restored["cache"]
         return self.pos

@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CheckpointOptions, CheckpointSession
 from repro.core import SnapshotEngine
 from repro.data import TokenPipeline
+from repro.launch.mesh import use_mesh
 from repro.models.config import ModelConfig
 from repro.models.encdec import build_model
 from repro.optim import AdamW
@@ -43,18 +45,28 @@ class TrainConfig:
     warmup_steps: int = 20
     total_steps: int = 200
     ckpt_every: int = 0             # 0 = no periodic checkpoints
-    ckpt_mode: str = "sync"         # sync | async
-    incremental: bool = False
+    ckpt: Optional[CheckpointOptions] = None   # how snapshots are taken
+    ckpt_mode: str = "sync"         # deprecated: use ckpt=CheckpointOptions
+    incremental: bool = False       # deprecated: use ckpt=CheckpointOptions
     seed: int = 0
     compute_dtype: Any = jnp.bfloat16
     remat: bool = True
+
+    def checkpoint_options(self) -> CheckpointOptions:
+        """Resolve the effective options (explicit `ckpt` wins over the
+        deprecated per-field knobs)."""
+        if self.ckpt is not None:
+            return self.ckpt
+        return CheckpointOptions(mode=self.ckpt_mode,
+                                 incremental=self.incremental)
 
 
 class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh,
                  policy: ShardingPolicy, run_dir: str,
                  engine: Optional[SnapshotEngine] = None,
-                 replicator=None):
+                 replicator=None,
+                 session: Optional[CheckpointSession] = None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
@@ -71,20 +83,26 @@ class Trainer:
         self.metrics_history: Dict[str, list] = {"loss": []}
         self.straggler = StragglerMonitor()
 
-        self.engine = engine or SnapshotEngine(
-            run_dir, mode=tcfg.ckpt_mode, incremental=tcfg.incremental,
-            mesh=mesh, replicator=replicator)
+        if session is None:
+            if engine is not None:       # migration aid: wrap a bare engine
+                session = CheckpointSession.from_engine(engine)
+            else:
+                session = CheckpointSession(
+                    run_dir, tcfg.checkpoint_options(), mesh=mesh,
+                    replicator=replicator)
+        self.session = session
+        self.engine = session.engine     # back-compat alias
         # transparent wiring: live state via provider, host bits via plugins
-        self.engine.attach(lambda: {"train_state": {
+        self.session.attach(lambda: {"train_state": {
             "params": self.params, "opt": self.opt_state}})
-        self.engine.register_host_state(
+        self.session.register_host_state(
             "data_cursor", lambda: self.pipeline.state(),
             lambda st: self.pipeline.restore_state(st))
-        self.engine.register_host_state(
+        self.session.register_host_state(
             "trainer", lambda: {"step": self.step,
                                 "loss_hist": self.metrics_history["loss"][-50:]},
             self._restore_trainer_state)
-        self.jit_ckpt = JITCheckpointPolicy(self.engine)
+        self.jit_ckpt = JITCheckpointPolicy(self.session)
 
         self._step_fn = jax.jit(
             self._train_step,
@@ -130,7 +148,7 @@ class Trainer:
         if self.mesh is not None:
             shardings = {"params": self.model.param_shardings(),
                          "opt": self._opt_shardings()}
-        restored = self.engine.restore_into(
+        restored = self.session.restore_into(
             template, state="train_state", step=step,
             mesh=mesh or self.mesh, shardings=shardings)
         self.params = restored["params"]
@@ -151,7 +169,7 @@ class Trainer:
             t0 = time.perf_counter()
             if straggle_at is not None and self.step == straggle_at:
                 time.sleep(0.25)                       # injected straggler
-            with jax.sharding.set_mesh(self.mesh):
+            with use_mesh(self.mesh):
                 self.params, self.opt_state, metrics = self._step_fn(
                     self.params, self.opt_state, batch)
             loss = float(metrics["loss"])
@@ -162,8 +180,8 @@ class Trainer:
                 self.jit_ckpt.on_signal(self.step)     # just-in-time ckpt
             if (self.tcfg.ckpt_every
                     and self.step % self.tcfg.ckpt_every == 0):
-                self.engine.checkpoint(self.step)
-        self.engine.wait_pending()
+                self.session.checkpoint(self.step)
+        self.session.wait_pending()
         return {"steps": self.step,
                 "loss": self.metrics_history["loss"][-1],
                 "wall_s": time.perf_counter() - t_loop}

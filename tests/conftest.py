@@ -16,9 +16,8 @@ def run_dir(tmp_path):
 @pytest.fixture
 def mesh1():
     """Trivial 1-device mesh with the production axis names."""
-    from jax.sharding import AxisType
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1,), ("data",))
 
 
 @pytest.fixture

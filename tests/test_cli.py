@@ -1,0 +1,126 @@
+"""`python -m repro` CLI against real image directories (the CRIT
+analogue): check, inspect, verify, gc, restore --dry-run, and the
+corresponding failure exit codes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import CheckpointOptions, CheckpointSession
+from repro.cli import main
+from repro.core.snapshot_io import snapshot_dir
+
+
+@pytest.fixture
+def populated_run(run_dir):
+    """Three incremental snapshots with device + host state."""
+    ks = jax.random.split(jax.random.key(0), 2)
+    state = {"w": jax.random.normal(ks[0], (8, 8), jnp.float32),
+             "b": jax.random.normal(ks[1], (8,), jnp.float32)}
+    s = CheckpointSession(run_dir, CheckpointOptions(incremental=True))
+    s.attach(lambda: {"train_state": state})
+    s.register_host_state("cursor", lambda: {"pos": 5}, lambda v: None)
+    s.checkpoint(1)
+    s.checkpoint(2)
+    state["w"] = state["w"] + 1.0       # make step 3 actually differ
+    s.checkpoint(3)
+    return run_dir
+
+
+def test_check_ok(capsys):
+    assert main(["check"]) == 0
+    out = capsys.readouterr().out
+    assert "repro check: OK" in out
+    assert "backends" in out or "jax" in out
+
+
+def test_check_json(capsys, tmp_path):
+    assert main(["check", "--run-dir", str(tmp_path / "x"),
+                 "--json"]) == 0
+    import json
+    data = json.loads(capsys.readouterr().out)
+    assert data["ok"] is True
+    assert "backends" in data["capabilities"]
+
+
+def test_inspect_table(populated_run, capsys):
+    assert main(["inspect", populated_run]) == 0
+    out = capsys.readouterr().out
+    assert "3 snapshot(s)" in out
+    for col in ("step", "written", "parent chain"):
+        assert col in out
+    # incremental deltas: step 2 reuses everything from step 1
+    assert "2 -> 1" in out
+
+
+def test_inspect_single_step(populated_run, capsys):
+    assert main(["inspect", populated_run, "--step", "3"]) == 0
+    out = capsys.readouterr().out
+    assert "snapshot step 3" in out
+    assert "parent chain: 3 -> 2 -> 1" in out
+    assert "train_state" in out
+
+
+def test_inspect_missing_dir(tmp_path):
+    with pytest.raises(SystemExit):
+        main(["inspect", str(tmp_path / "nope")])
+
+
+def test_verify_ok_and_corrupt(populated_run, capsys):
+    assert main(["verify", populated_run]) == 0
+    assert "OK" in capsys.readouterr().out
+    pack = os.path.join(snapshot_dir(populated_run, 3), "host0000.pack")
+    with open(pack, "r+b") as f:
+        f.seek(40)
+        f.write(b"\xde\xad\xbe\xef" * 4)
+    assert main(["verify", populated_run]) == 1
+    out = capsys.readouterr().out
+    assert "step 3: CORRUPT" in out
+    assert "step 1: OK" in out
+    # single-step form
+    assert main(["verify", populated_run, "--step", "3"]) == 1
+
+
+def test_restore_dry_run(populated_run, capsys):
+    assert main(["restore", populated_run, "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "restore --dry-run OK" in out
+    assert "train_state" in out
+    assert "cursor" in out
+
+
+def test_restore_without_dry_run_refuses(populated_run):
+    with pytest.raises(SystemExit):
+        main(["restore", populated_run])
+
+
+def test_gc_keeps_referenced_parents(populated_run, capsys):
+    # step 3 still reads unchanged entries out of step 1's pack, so gc
+    # must keep 1; step 2's pack is referenced by nobody and goes.
+    assert main(["gc", populated_run, "--keep", "1", "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "would remove 1 snapshot(s): [2]" in out
+    assert main(["gc", populated_run, "--keep", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "removed 1 snapshot(s): [2]" in out
+    assert "remaining: [1, 3]" in out
+    # the kept delta image still dry-run-restores after gc
+    assert main(["restore", populated_run, "--dry-run", "--step", "3"]) == 0
+
+
+def test_gc_removes_independent_images(run_dir, capsys):
+    state = {"w": jnp.ones((4, 4))}
+    s = CheckpointSession(run_dir)                 # full images, no deltas
+    s.attach(lambda: {"train_state": state})
+    for step in (1, 2, 3):
+        s.checkpoint(step)
+    assert main(["gc", run_dir, "--keep", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "removed 2 snapshot(s): [1, 2]" in out
+    assert s.store.list_steps() == [3]
+
+
+def test_cli_unknown_command_exits():
+    with pytest.raises(SystemExit):
+        main(["frobnicate"])

@@ -1,6 +1,8 @@
 """Deterministic, checkpointable data pipeline tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config

@@ -65,7 +65,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
-from jax.sharding import AxisType
 import repro.launch.dryrun as dr
 
 # shrink the production mesh for the in-test compile
@@ -73,8 +72,7 @@ import repro.launch.mesh as mesh_mod
 def small_mesh(*, multi_pod=False):
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_mod.make_mesh(shape, axes)
 mesh_mod.make_production_mesh = small_mesh
 
 # reduce every config lookup to its smoke variant (fast compile)

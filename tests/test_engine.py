@@ -252,6 +252,29 @@ def test_restore_falls_back_past_torn_snapshot(run_dir):
             np.asarray(restored["train_state"][k]), np.asarray(v))
 
 
+def test_explicit_step_restore_rejects_torn_pack(run_dir):
+    """An explicitly requested step must get the same CRC rigor as the
+    newest-valid scan: a torn image raises instead of restoring garbage."""
+    state = make_state()
+    eng = SnapshotEngine(run_dir)
+    eng.attach(lambda: {"train_state": state})
+    eng.checkpoint(1)
+    eng.checkpoint(2)
+    pack = os.path.join(snapshot_dir(run_dir, 2), "host0000.pack")
+    with open(pack, "r+b") as f:
+        f.seek(40)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    eng2 = SnapshotEngine(run_dir)
+    eng2.attach(lambda: {"train_state": None})
+    with pytest.raises(Exception) as ei:
+        eng2.restore(step=2)                 # explicit step, torn image
+    assert "CRC" in str(ei.value) or "crc" in str(ei.value)
+    # the untouched image still restores explicitly
+    restored = eng2.restore(step=1)
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["w0"]), np.asarray(state["w0"]))
+
+
 def test_uncommitted_snapshot_is_invisible(run_dir):
     """No MANIFEST => the snapshot does not exist (atomic commit)."""
     state = make_state()

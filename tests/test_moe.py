@@ -4,9 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
-
 from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
 from repro.models import moe as MOE
 from repro.sharding import get_policy
 
@@ -62,10 +61,10 @@ def test_fallback_matches_dense_reference():
 
 def test_shard_map_path_matches_fallback():
     cfg, params, x = _setup()
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     y0, aux0 = MOE.moe_block(params, cfg, x, POLICY, None, dropless=True)
-    with jax.sharding.set_mesh(mesh):
+    from repro.launch.mesh import use_mesh
+    with use_mesh(mesh):
         y1, aux1 = MOE.moe_block(params, cfg, x, POLICY.for_mesh(mesh),
                                  mesh, dropless=True)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),

@@ -38,7 +38,8 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh, use_mesh
     from repro.configs import get_smoke_config
     from repro.optim import AdamW
     from repro.optim.schedule import constant
@@ -58,10 +59,9 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
                             remat=False)
         return model
 
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_a = make_mesh((4, 2), ("data", "model"))
     model_a = build(mesh_a)
-    with jax.sharding.set_mesh(mesh_a):
+    with use_mesh(mesh_a):
         params = jax.jit(model_a.init,
                          out_shardings=model_a.param_shardings())(
             jax.random.key(0))
@@ -76,8 +76,7 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     engine.checkpoint(3)
 
     # ---- restore onto a *smaller* mesh (scale-down after node loss) ----
-    mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_b = make_mesh((2, 2), ("data", "model"))
     model_b = build(mesh_b)
     out = elastic_restore(run_dir, mesh_b, model_b, opt)
     assert out["topology_mode"] == "resharded", out["topology_mode"]
@@ -95,7 +94,7 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
              for k, v in TokenPipeline(cfg, 4, 16).next().items()}
     def loss_fn(p, b):
         return model_b.loss(p, b)[0]
-    with jax.sharding.set_mesh(mesh_b):
+    with use_mesh(mesh_b):
         loss, grads = jax.jit(jax.value_and_grad(loss_fn))(out["params"],
                                                            batch)
     assert np.isfinite(float(loss))

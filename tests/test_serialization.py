@@ -3,6 +3,8 @@ import os
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.serialization.integrity import (atomic_write_json, crc32,

@@ -1,16 +1,16 @@
 """Topology fingerprinting + GPUID-translation analogue tests."""
 import jax
 import pytest
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.topology import (compatibility, mesh_fingerprint,
                                  resolve_sharding, sharding_descriptor,
                                  spec_from_json, spec_to_json)
+from repro.launch.mesh import make_mesh
 
 
 def mesh(names=("data",), shape=(1,)):
-    return jax.make_mesh(shape, names,
-                         axis_types=(AxisType.Auto,) * len(names))
+    return make_mesh(shape, names)
 
 
 def test_fingerprint_fields():
