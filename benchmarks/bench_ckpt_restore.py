@@ -6,26 +6,49 @@ size, with the CRIU-style stage breakdown:
   frozen                   — total time the job is paused (sync mode)
   write                    — pack + commit to storage
   restore / unlock (Fig.6) — unified CPU+GPU restore, resume
+    read / decompress / place — streaming-restore stage split (pack v2)
 
 The model ladder stands in for GPT-2 124M→1.5B; sizes scale the same way
 (checkpoint bytes ∝ params; paper's key curve).
+
+Data-plane benchmarks (``--dataplane`` / ``--sweep``) compare the
+serial-compat mode (pack v1, one writer thread, serial restore) against
+the pipelined mode (pack v2: chunked packs, compress workers, striped
+appenders, parallel chunk restore) on a synthetic multi-entry image, and
+sweep stripes × io_threads.  ``--json PATH`` additionally dumps every
+record as JSON (the ``BENCH_*.json`` perf-trajectory artifacts CI
+uploads).
 """
 from __future__ import annotations
 
+import json
 import shutil
+import statistics
 import tempfile
+import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import LADDER, POLICY, Timer, emit, ladder_config, mesh1
-from repro.api import CheckpointSession
-from repro.optim import AdamW
-from repro.optim.schedule import constant
-from repro.models.encdec import build_model
+RECORDS: dict = {}
+
+
+def _emit(name, value, unit=""):
+    from benchmarks.common import emit
+    emit(name, value, unit)
+    RECORDS[name] = value
 
 
 def run(sizes=("S", "M", "L", "XL")) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import (LADDER, POLICY, Timer, ladder_config,
+                                   mesh1)
+    from repro.api import CheckpointSession
+    from repro.optim import AdamW
+    from repro.optim.schedule import constant
+    from repro.models.encdec import build_model
+
     mesh = mesh1()
     for size in sizes:
         cfg = ladder_config(size)
@@ -35,7 +58,7 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
         params = model.init(jax.random.key(0))
         opt_state = opt.init(params)
         n_params = sum(x.size for x in jax.tree.leaves(params))
-        emit(f"fig5.{size}.params", n_params, "count")
+        _emit(f"fig5.{size}.params", n_params, "count")
 
         run_dir = tempfile.mkdtemp(prefix=f"bench_ckpt_{size}_")
         try:
@@ -47,13 +70,13 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
             with Timer() as t:
                 eng.checkpoint(1)
             st = eng.last_stats
-            emit(f"fig5.{size}.lock", st["lock_s"] * 1e3, "ms")
-            emit(f"fig5.{size}.ckpt_dev2host",
-                 st["device_to_host_s"] * 1e3, "ms")
-            emit(f"fig5.{size}.frozen", st["frozen_s"] * 1e3, "ms")
-            emit(f"fig5.{size}.write", st["write_s"] * 1e3, "ms")
-            emit(f"fig5.{size}.total", t.s * 1e3, "ms")
-            emit(f"fig5.{size}.bytes", st["written_bytes"] / 2**20, "MiB")
+            _emit(f"fig5.{size}.lock", st["lock_s"] * 1e3, "ms")
+            _emit(f"fig5.{size}.ckpt_dev2host",
+                  st["device_to_host_s"] * 1e3, "ms")
+            _emit(f"fig5.{size}.frozen", st["frozen_s"] * 1e3, "ms")
+            _emit(f"fig5.{size}.write", st["write_s"] * 1e3, "ms")
+            _emit(f"fig5.{size}.total", t.s * 1e3, "ms")
+            _emit(f"fig5.{size}.bytes", st["written_bytes"] / 2**20, "MiB")
 
             eng2 = CheckpointSession(run_dir, mesh=mesh)
             eng2.attach(lambda: {"train_state": None})
@@ -61,12 +84,139 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
             with Timer() as t:
                 eng2.restore()
             st2 = eng2.last_stats
-            emit(f"fig6.{size}.restore_total", t.s * 1e3, "ms")
-            emit(f"fig6.{size}.host2device",
-                 st2["host_to_device_s"] * 1e3, "ms")
+            _emit(f"fig6.{size}.restore_total", t.s * 1e3, "ms")
+            _emit(f"fig6.{size}.host2device",
+                  st2["host_to_device_s"] * 1e3, "ms")
+            # streaming-restore breakdown (thread-time across the pool)
+            _emit(f"fig6.{size}.read", st2.get("read_s", 0) * 1e3, "ms")
+            _emit(f"fig6.{size}.decompress",
+                  st2.get("decompress_s", 0) * 1e3, "ms")
+            _emit(f"fig6.{size}.place", st2.get("place_s", 0) * 1e3, "ms")
         finally:
             shutil.rmtree(run_dir, ignore_errors=True)
 
 
+# ------------------------------------------------------------- data plane
+def _synthetic_state(n_entries: int, entry_kb: int, seed: int = 0):
+    """Low-entropy float payloads: compressible enough that compress=True
+    exercises the codec stages (the pipelined plane's dominant cost)."""
+    rng = np.random.default_rng(seed)
+    return {f"t{i:03d}": rng.integers(0, 8, size=entry_kb * 256)
+            .astype(np.float32)
+            for i in range(n_entries)}
+
+
+def _measure(opts, state, repeats: int = 3):
+    """Best-of-`repeats` write/restore/frozen seconds for one options
+    config (min, not median: the box running CI is shared, and the
+    fastest run is the least contaminated by neighbors)."""
+    from repro.api import CheckpointSession
+
+    writes, restores, frozens, details = [], [], [], {}
+    for rep in range(repeats):
+        run_dir = tempfile.mkdtemp(prefix="bench_dp_")
+        try:
+            s = CheckpointSession(run_dir, opts, backend="host")
+            s.attach(lambda: {"train_state": state})
+            s.checkpoint(1)
+            writes.append(s.last_stats["write_s"])
+            frozens.append(s.last_stats["frozen_s"])
+            r = CheckpointSession(run_dir, opts, backend="host")
+            r.attach(lambda: {"train_state": None})
+            t0 = time.perf_counter()
+            r.restore()
+            restores.append(time.perf_counter() - t0)
+            details = {k: r.last_stats.get(k, 0.0)
+                       for k in ("read_s", "decompress_s", "place_s")}
+        finally:
+            shutil.rmtree(run_dir, ignore_errors=True)
+    return {"write_s": min(writes),
+            "restore_s": min(restores),
+            "frozen_s": statistics.median(frozens), **details}
+
+
+def run_dataplane(n_entries: int = 64, entry_kb: int = 384,
+                  repeats: int = 3) -> dict:
+    """Serial-compat vs pipelined on a synthetic multi-entry image."""
+    from repro.api import CheckpointOptions
+
+    state = _synthetic_state(n_entries, entry_kb)
+    total_mb = sum(v.nbytes for v in state.values()) / 2**20
+    _emit("dataplane.entries", n_entries, "count")
+    _emit("dataplane.bytes", total_mb, "MiB")
+
+    configs = {
+        "serial": CheckpointOptions(compress=True, pack_format=1,
+                                    io_threads=1),
+        "pipelined": CheckpointOptions(compress=True, pack_format=2),
+    }
+    out = {}
+    for mode, opts in configs.items():
+        res = _measure(opts, state, repeats)
+        out[mode] = res
+        for k, v in res.items():
+            _emit(f"dataplane.{mode}.{k}", v * 1e3, "ms")
+    _emit("dataplane.speedup.write",
+          out["serial"]["write_s"] / out["pipelined"]["write_s"], "x")
+    _emit("dataplane.speedup.restore",
+          out["serial"]["restore_s"] / out["pipelined"]["restore_s"], "x")
+    return out
+
+
+def run_sweep(n_entries: int = 64, entry_kb: int = 128,
+              stripes=(1, 2, 4), threads=(1, 2, 4),
+              repeats: int = 3) -> list:
+    """stripes × io_threads grid on the pipelined plane (make_tables.py
+    renders this as the data-plane sweep table)."""
+    from repro.api import CheckpointOptions
+
+    state = _synthetic_state(n_entries, entry_kb)
+    rows = []
+    for n_stripes in stripes:
+        for n_threads in threads:
+            opts = CheckpointOptions(compress=True, pack_format=2,
+                                     stripes=n_stripes,
+                                     io_threads=n_threads)
+            res = _measure(opts, state, repeats)
+            row = {"stripes": n_stripes, "io_threads": n_threads, **res}
+            rows.append(row)
+            _emit(f"sweep.s{n_stripes}.t{n_threads}.write",
+                  res["write_s"] * 1e3, "ms")
+            _emit(f"sweep.s{n_stripes}.t{n_threads}.restore",
+                  res["restore_s"] * 1e3, "ms")
+    RECORDS["sweep"] = rows
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sizes", default="S,M,L,XL",
+                    help="ladder sizes for the fig5/fig6 run ('' = skip)")
+    ap.add_argument("--dataplane", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serial-compat vs pipelined comparison")
+    ap.add_argument("--sweep", action="store_true",
+                    help="stripes x io_threads grid")
+    ap.add_argument("--entries", type=int, default=64)
+    ap.add_argument("--entry-kb", type=int, default=384)
+    ap.add_argument("--repeats", type=int, default=4)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all records as JSON (BENCH_*.json artifact)")
+    args = ap.parse_args(argv)
+
+    if args.sizes:
+        run(sizes=tuple(s for s in args.sizes.split(",") if s))
+    if args.dataplane:
+        run_dataplane(args.entries, args.entry_kb, args.repeats)
+    if args.sweep:
+        run_sweep(repeats=args.repeats)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RECORDS, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -81,6 +81,47 @@ def perf_rows(recs):
     return "\n".join(out)
 
 
+def load_bench(patterns=("BENCH_*.json", "artifacts/bench/*.json")):
+    """Perf-trajectory artifacts written by bench_ckpt_restore --json."""
+    recs = []
+    for pat in patterns:
+        for f in sorted(glob.glob(pat)):
+            recs.append((os.path.basename(f), json.load(open(f))))
+    return recs
+
+
+def dataplane_table(recs):
+    """Serial-compat vs pipelined + stripes × io_threads sweep (from
+    BENCH_*.json)."""
+    out = []
+    for name, r in recs:
+        if "dataplane.speedup.write" in r:
+            out.append(f"### {name}: serial-compat vs pipelined\n")
+            out.append("| mode | write (ms) | restore (ms) | frozen (ms) |")
+            out.append("|---|---|---|---|")
+            for mode in ("serial", "pipelined"):
+                out.append(
+                    f"| {mode} | {fmt(r[f'dataplane.{mode}.write_s'])} | "
+                    f"{fmt(r[f'dataplane.{mode}.restore_s'])} | "
+                    f"{fmt(r[f'dataplane.{mode}.frozen_s'])} |")
+            out.append(
+                f"\nspeedup: write "
+                f"{fmt(r['dataplane.speedup.write'])}x, restore "
+                f"{fmt(r['dataplane.speedup.restore'])}x\n")
+        sweep = r.get("sweep")
+        if sweep:
+            out.append(f"### {name}: stripes × io_threads sweep\n")
+            out.append("| stripes | io_threads | write (ms) | restore (ms) |")
+            out.append("|---|---|---|---|")
+            for row in sweep:
+                out.append(
+                    f"| {row['stripes']} | {row['io_threads']} | "
+                    f"{fmt(row['write_s'] * 1e3)} | "
+                    f"{fmt(row['restore_s'] * 1e3)} |")
+            out.append("")
+    return "\n".join(out) if out else "(no BENCH_*.json artifacts found)"
+
+
 def main():
     recs = load_all()
     print("## single-pod baseline roofline\n")
@@ -91,6 +132,8 @@ def main():
     print(memory_table(recs))
     print("\n## hillclimb iterations\n")
     print(perf_rows(recs))
+    print("\n## snapshot data plane (serial vs pipelined)\n")
+    print(dataplane_table(load_bench()))
 
 
 if __name__ == "__main__":

@@ -57,12 +57,17 @@ def capabilities() -> Dict[str, Any]:
         },
         "backends": available_backends(),
         "modes": ["sync", "async"],
+        "pack_formats": [1, 2],
         "features": {
             "incremental": True,
             "compression": True,
             "replication": True,
             "elastic_restore": True,
             "parallel_restore": True,
+            "chunked_packs": True,        # pack v2: per-chunk CRC + codec
+            "striped_io": True,           # N pack files/host, appender each
+            "pipelined_writer": True,     # capture → compress → write stages
+            "chunk_dedup": True,          # incremental reuse at chunk grain
         },
     }
 

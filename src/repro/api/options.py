@@ -26,6 +26,12 @@ class OptionsError(ValueError):
     """An invalid CheckpointOptions field combination."""
 
 
+def auto_io_threads() -> int:
+    """The io_threads=0 auto-sizing policy — the single source of truth
+    for every data-plane consumer (engine, snapshot writer, CLI)."""
+    return min(8, max(2, os.cpu_count() or 2))
+
+
 @dataclasses.dataclass(frozen=True)
 class CheckpointOptions:
     """Declarative checkpoint configuration.
@@ -46,6 +52,16 @@ class CheckpointOptions:
                      None disables.
     verify_restore   CRC-verify images before restoring from them (both the
                      newest-valid scan and explicitly requested steps).
+    pack_format      2 (default): chunked/striped packs written by the
+                     pipelined data plane; 1: serial-compat single-file
+                     packs, byte-compatible with images from older code.
+    io_threads       data-plane worker threads (compress/CRC on dump,
+                     chunk read/decompress on restore); 0 = auto-size
+                     from the host's CPU count.
+    chunk_mb         pack-v2 chunk size in MiB (per-chunk CRC doubles as
+                     the incremental content hash).
+    stripes          pack files per host; each stripe gets its own
+                     appender thread, so writes overlap compression.
     """
 
     mode: str = "sync"
@@ -56,6 +72,10 @@ class CheckpointOptions:
     restore_threads: int = 0
     replicate_to: Optional[str] = None
     verify_restore: bool = True
+    pack_format: int = 2
+    io_threads: int = 0
+    chunk_mb: int = 4
+    stripes: int = 2
 
     def __post_init__(self):
         self.validate()
@@ -76,9 +96,25 @@ class CheckpointOptions:
                                f"got {self.restore_threads!r}")
         if self.replicate_to is not None and not self.replicate_to:
             raise OptionsError("replicate_to must be a path or None")
+        if self.pack_format not in (1, 2):
+            raise OptionsError(f"pack_format must be 1 or 2, "
+                               f"got {self.pack_format!r}")
+        if not isinstance(self.io_threads, int) or self.io_threads < 0:
+            raise OptionsError("io_threads must be an int >= 0, "
+                               f"got {self.io_threads!r}")
+        if not isinstance(self.chunk_mb, int) or self.chunk_mb < 1:
+            raise OptionsError("chunk_mb must be an int >= 1, "
+                               f"got {self.chunk_mb!r}")
+        if not isinstance(self.stripes, int) or not 1 <= self.stripes <= 64:
+            raise OptionsError("stripes must be an int in [1, 64], "
+                               f"got {self.stripes!r}")
 
     def replace(self, **changes) -> "CheckpointOptions":
         return dataclasses.replace(self, **changes)
+
+    def effective_io_threads(self) -> int:
+        """io_threads with 0 resolved against this host's CPU count."""
+        return self.io_threads or auto_io_threads()
 
     # ------------------------------------------------------------ env i/o
     @classmethod
@@ -105,6 +141,10 @@ class CheckpointOptions:
             restore_threads=get("RESTORE_THREADS", int, cls.restore_threads),
             replicate_to=get("REPLICATE_TO", str, cls.replicate_to),
             verify_restore=get("VERIFY_RESTORE", as_bool, cls.verify_restore),
+            pack_format=get("PACK_FORMAT", int, cls.pack_format),
+            io_threads=get("IO_THREADS", int, cls.io_threads),
+            chunk_mb=get("CHUNK_MB", int, cls.chunk_mb),
+            stripes=get("STRIPES", int, cls.stripes),
         )
 
     def to_env(self) -> Dict[str, str]:
@@ -118,6 +158,10 @@ class CheckpointOptions:
             _ENV_PREFIX + "RESTORE_THREADS": str(self.restore_threads),
             _ENV_PREFIX + "VERIFY_RESTORE": "1" if self.verify_restore
             else "0",
+            _ENV_PREFIX + "PACK_FORMAT": str(self.pack_format),
+            _ENV_PREFIX + "IO_THREADS": str(self.io_threads),
+            _ENV_PREFIX + "CHUNK_MB": str(self.chunk_mb),
+            _ENV_PREFIX + "STRIPES": str(self.stripes),
         }
         if self.replicate_to is not None:
             out[_ENV_PREFIX + "REPLICATE_TO"] = self.replicate_to

@@ -174,6 +174,14 @@ class CheckpointSession:
     def last_stats(self) -> Dict[str, Any]:
         return self.engine.last_stats
 
+    @property
+    def write_error(self) -> Optional[str]:
+        """repr of the most recent async write failure, or None.  A
+        silently-failed background dump is visible here (and in
+        ``last_stats['write_error']``) even before ``wait_pending()``
+        re-raises it."""
+        return self.engine.write_error
+
     def latest_step(self) -> Optional[int]:
         return self.engine.latest_step()
 

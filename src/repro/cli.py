@@ -95,6 +95,38 @@ def cmd_check(args) -> int:
     return 0 if report.ok else 1
 
 
+def _print_stripe_layout(store, m) -> None:
+    """Chunk/stripe layout of a v2 image: per-stripe file sizes and the
+    chunk population of this step's own pack (refs resolved elsewhere)."""
+    if m.get("format", 1) < 2:
+        return
+    from repro.core.snapshot_io import snapshot_dir
+    d = snapshot_dir(store.run_dir, m["step"])
+    sizes = []
+    for name in m.get("files", []):
+        p = os.path.join(d, name)
+        sizes.append(os.path.getsize(p) if os.path.exists(p) else 0)
+    if sizes:
+        total = sum(sizes)
+        util = min(sizes) / max(sizes) if max(sizes) else 0.0
+        print(f"  stripes:     "
+              + "  ".join(f"[{k}] {_fmt_bytes(s)}"
+                          for k, s in enumerate(sizes))
+              + f"   (total {_fmt_bytes(total)}, balance {util:.2f})")
+    try:
+        from repro.serialization.pack import open_pack
+        base = os.path.join(d, m["files"][0].rsplit(".", 1)[0])
+        with open_pack(base, verify=False) as r:
+            n_chunks = sum(len(e.get("chunks", []))
+                           for e in r.index.values())
+            n_ref = sum(1 for e in r.index.values()
+                        for c in e.get("chunks", []) if c.get("ref"))
+        print(f"  chunks:      {n_chunks} in {len(r.index)} entries"
+              + (f" ({n_ref} deduped into parent packs)" if n_ref else ""))
+    except Exception:
+        pass                      # layout detail is best-effort cosmetics
+
+
 # ---------------------------------------------------------------- inspect
 def cmd_inspect(args) -> int:
     store = _store(args.run_dir)
@@ -105,11 +137,16 @@ def cmd_inspect(args) -> int:
             return 0
         print(f"snapshot step {m['step']}  ({_fmt_time(m.get('timestamp'))})")
         print(f"  dir:         snapshots/step_{m['step']:08d}")
+        print(f"  format:      pack v{m.get('format', 1)}"
+              + (f"   chunk: {_fmt_bytes(m['chunk_bytes'])}   "
+                 f"stripes: {m.get('stripes', 1)}"
+                 if m.get("format", 1) >= 2 else ""))
         print(f"  mode:        {m.get('mode', '-')}   "
               f"incremental: {m.get('incremental', False)}")
         print(f"  states:      {', '.join(m.get('states', []))}")
         print(f"  written:     {_fmt_bytes(m.get('written_bytes', 0))}   "
               f"reused: {_fmt_bytes(m.get('reused_bytes', 0))}")
+        _print_stripe_layout(store, m)
         chain = _parent_chain(store, args.step)
         print(f"  parent chain: {' -> '.join(map(str, chain))}")
         topo = m.get("topology") or {}
@@ -149,12 +186,15 @@ def cmd_inspect(args) -> int:
 
 # ----------------------------------------------------------------- verify
 def cmd_verify(args) -> int:
+    from repro.api.options import auto_io_threads
     store = _store(args.run_dir)
     steps = [args.step] if args.step is not None else store.list_steps()
     bad = 0
     for s in steps:
         try:
-            reader = store.reader(s, verify=True)
+            # parallel reader: chunk reads + CRC fan out across stripes
+            reader = store.reader(s, verify=True,
+                                  io_threads=auto_io_threads())
             try:
                 reader.verify_all()
             finally:
@@ -178,15 +218,14 @@ def cmd_gc(args) -> int:
     if args.dry_run:
         # mirror SnapshotStore.gc's keep-set without deleting: a snapshot
         # survives if kept directly or if any kept manifest still points
-        # into its pack files (delta chains reference packs, not parents)
+        # into its pack files (delta chains reference packs at entry or
+        # chunk granularity, not parents)
         keep = set(steps[-args.keep:])
         changed = True
         while changed:
             changed = False
             for s in list(keep):
-                refs = {int(loc.split("/")[0][5:])
-                        for loc in store.manifest(s)["locations"].values()}
-                for n in refs:
+                for n in store.referenced_steps(store.manifest(s)):
                     if n not in keep:
                         keep.add(n)
                         changed = True

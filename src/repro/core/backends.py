@@ -44,7 +44,7 @@ class BackendError(RuntimeError):
 #: this so the registration below and the plugin stamp cannot drift.
 JAX_BACKEND_FEATURES = frozenset({
     "device_arrays", "sharded_restore", "parallel_restore",
-    "elastic_restore", "replica_dedup"})
+    "elastic_restore", "replica_dedup", "chunked_packs", "pipelined_io"})
 
 
 @runtime_checkable
@@ -139,7 +139,8 @@ class HostNumpyBackend(Plugin):
 
     name = "host"
     api_version = PLUGIN_API_VERSION
-    features = frozenset({"host_arrays", "dry_run_restore"})
+    features = frozenset({"host_arrays", "dry_run_restore",
+                          "chunked_packs", "pipelined_io"})
 
     def __init__(self, lock_timeout_s: float = 10.0,
                  restore_threads: int = 0):
@@ -170,6 +171,7 @@ class HostNumpyBackend(Plugin):
                     cap[key] = {"kind": "host", "value": leaf}
             ctx.device_snapshot[name] = cap
         ctx.stats["device_to_host_s"] = time.perf_counter() - t0
+        ctx.stats["capture_s"] = ctx.stats["device_to_host_s"]
         ctx.stats["device_bytes"] = float(host_bytes)
 
     # --- restore ---
@@ -180,20 +182,32 @@ class HostNumpyBackend(Plugin):
     def resume_devices_late(self, ctx: HookContext) -> None:
         from repro.core.device_plugin import _unflatten_paths, assemble_global
         t0 = time.perf_counter()
+        place_s = 0.0
         reader = ctx.reader
+        threads = getattr(ctx, "restore_threads", 0) or self.restore_threads
         for name in reader.state_names():
+            keys = reader.entry_names(name)
+            if threads > 1 and len(keys) > 1:
+                from concurrent.futures import ThreadPoolExecutor
+                with ThreadPoolExecutor(max_workers=threads) as ex:
+                    entries = list(ex.map(
+                        lambda k: reader.load_entry(name, k), keys))
+            else:
+                entries = [reader.load_entry(name, k) for k in keys]
             restored: Dict[str, Any] = {}
-            for key in reader.entry_names(name):
-                entry = reader.load_entry(name, key)
+            t_place = time.perf_counter()
+            for key, entry in zip(keys, entries):
                 if entry["kind"] == "device_array":
                     restored[key] = assemble_global(entry)
                 elif entry["kind"] == "np":
                     restored[key] = entry["data"]
                 else:
                     restored[key] = entry["value"]
+            place_s += time.perf_counter() - t_place
             ctx.restored[name] = _unflatten_paths(restored)
         self.lock.unlock()
         ctx.stats["host_to_device_s"] = time.perf_counter() - t0
+        ctx.stats["place_s"] = place_s
 
 
 def _make_jax_backend(**kwargs) -> Plugin:

@@ -115,7 +115,9 @@ class SnapshotEngine:
         self.mesh = mesh
         self._provider: Optional[StateProvider] = None
         self._pending: Optional[threading.Thread] = None
+        self._pending_ctx: Optional[HookContext] = None
         self._pending_err: List[BaseException] = []
+        self._write_error: Optional[str] = None
         self.last_stats: Dict[str, Any] = {}
 
     def _make_backend(self, backend) -> Plugin:
@@ -195,6 +197,7 @@ class SnapshotEngine:
             self.device_plugin.lock.unlock()                  # resume
             self.registry.exit_all("dump", True)
             self.last_stats = dict(ctx.stats)
+            self._write_error = None               # last dump is clean
             return path
 
         # async: resume immediately, write in background (CheckFreq-style)
@@ -205,14 +208,23 @@ class SnapshotEngine:
         def writer():
             try:
                 self._write(ctx)
+                self._write_error = None           # last dump is clean
                 self.registry.exit_all("dump", True)
-            except BaseException as e:                        # pragma: no cover
+            except BaseException as e:
                 self._pending_err.append(e)
+                # surface immediately: a silently-failed async dump must
+                # not look like a committed image to anyone polling stats
+                self._write_error = repr(e)
+                self.last_stats["write_error"] = repr(e)
                 self.registry.exit_all("dump", False)
 
-        self._pending = threading.Thread(target=writer, daemon=True)
-        self._pending.start()
+        # publish the stats snapshot BEFORE the writer starts: the thread
+        # keeps mutating ctx.stats (and on failure writes write_error into
+        # self.last_stats), so copying after start would race both ways
         self.last_stats = dict(ctx.stats)
+        self._pending = threading.Thread(target=writer, daemon=True)
+        self._pending_ctx = ctx
+        self._pending.start()
         return path
 
     def _snapshot_path(self, step: int) -> str:
@@ -221,6 +233,7 @@ class SnapshotEngine:
 
     def _write(self, ctx: HookContext) -> str:
         t0 = time.perf_counter()
+        opts = self.options
         prev_manifest = None
         if self.incremental:
             prev_step = self.store.latest_step()
@@ -229,13 +242,15 @@ class SnapshotEngine:
         writer = SnapshotWriter(self.run_dir, ctx.step,
                                 host_id=jax.process_index(),
                                 compress=self.compress,
-                                prev_manifest=prev_manifest)
+                                prev_manifest=prev_manifest,
+                                pack_format=opts.pack_format,
+                                chunk_bytes=opts.chunk_mb << 20,
+                                stripes=opts.stripes,
+                                io_threads=opts.effective_io_threads())
         try:
             writer.write_states(ctx.device_snapshot)
             writer.write_host_state(ctx.host_state)
-            ctx.stats["write_s"] = time.perf_counter() - t0
-            ctx.stats["written_bytes"] = float(writer.written_bytes)
-            ctx.stats["reused_bytes"] = float(writer.reused_bytes)
+            t_serialize = time.perf_counter() - t0
             ctx.stats["host_bytes"] = float(
                 len(pack_host_blob(ctx.host_state)))
             path = writer.commit(topology=mesh_fingerprint(self.mesh),
@@ -243,6 +258,21 @@ class SnapshotEngine:
                                  extra={"warnings": ctx.warnings,
                                         "mode": self.mode,
                                         "incremental": self.incremental})
+            # commit() drains the pipeline and fsyncs; only now are the
+            # stage timings and reuse accounting final (so these live in
+            # last_stats, not in the manifest's embedded stats)
+            ctx.stats["write_s"] = time.perf_counter() - t0
+            ctx.stats["serialize_s"] = t_serialize
+            ctx.stats["written_bytes"] = float(writer.written_bytes)
+            ctx.stats["reused_bytes"] = float(writer.reused_bytes)
+            # pipeline stage timings (thread-time, so compress_s + io_s
+            # can legitimately exceed write_s when stages overlap)
+            ctx.stats["compress_s"] = writer.compress_s
+            ctx.stats["io_s"] = writer.io_s
+            stripe_bytes = writer.stripe_bytes
+            if stripe_bytes and max(stripe_bytes) > 0:
+                ctx.stats["stripe_utilization"] = (
+                    min(stripe_bytes) / max(stripe_bytes))
         except Exception:
             writer.abort()
             raise
@@ -256,9 +286,32 @@ class SnapshotEngine:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
-            if self._pending_err:
-                err = self._pending_err.pop()
-                raise err
+            ctx, self._pending_ctx = self._pending_ctx, None
+            if ctx is not None and not self._pending_err:
+                # fold the background writer's stage timings (write_s,
+                # written_bytes, compress_s, io_s, ...) into last_stats
+                # now that the thread is joined — async dumps otherwise
+                # never publish their write-stage stats
+                self.last_stats.update(ctx.stats)
+        if self._pending_err:
+            # drain *every* queued failure, not just the newest: an older
+            # failed dump must never be masked by a newer successful one
+            errs = list(self._pending_err)
+            self._pending_err.clear()
+            msg = "; ".join(repr(e) for e in errs)
+            self._write_error = msg
+            self.last_stats["write_error"] = msg
+            if len(errs) > 1:
+                raise RuntimeError(
+                    f"{len(errs)} async snapshot writes failed: {msg}"
+                ) from errs[0]
+            raise errs[0]
+
+    @property
+    def write_error(self) -> Optional[str]:
+        """repr of the most recent async write failure (None if the last
+        background dump committed cleanly)."""
+        return self._write_error
 
     # ------------------------------------------------------------ restore
     def restore(self, step: Optional[int] = None, mesh=None,
@@ -269,58 +322,73 @@ class SnapshotEngine:
         if verify is None:
             verify = self.options.verify_restore
         self.wait_pending()
-        steps = self.store.list_steps()
-        if step is None:
-            # newest *valid* image: fall back past torn/corrupt snapshots
-            for s in reversed(steps):
-                reader = None
-                try:
-                    reader = self.store.reader(s, verify=verify)
-                    if verify:
-                        reader.verify_all()
-                    step = s
-                    break
-                except Exception:
-                    if reader is not None:
-                        reader.close()
-                    continue
+        io_threads = self.options.effective_io_threads()
+        # Hold the store lock for the whole restore so a gc running in
+        # another thread of THIS process (sharing this SnapshotStore,
+        # e.g. a concurrent checkpoint with keep=N) cannot delete a step
+        # or a delta-chain parent pack out from under the scan/reads.
+        # A gc from a different process (or a second store instance on
+        # the run_dir) is not serialized by this lock — the newest-valid
+        # scan tolerates vanishing images by falling back, but an
+        # explicitly requested step may still fail mid-read there.
+        with self.store.lock:
+            steps = self.store.list_steps()
+            if step is None:
+                # newest *valid* image: fall back past torn/corrupt images
+                for s in reversed(steps):
+                    reader = None
+                    try:
+                        reader = self.store.reader(s, verify=verify,
+                                                   io_threads=io_threads)
+                        if verify:
+                            reader.verify_all()
+                        step = s
+                        break
+                    except Exception:
+                        if reader is not None:
+                            reader.close()
+                        continue
+                else:
+                    if self.replicator is not None:
+                        got = self.replicator.pull_latest(self.run_dir)
+                        if got is not None:
+                            return self.restore(step=got, mesh=mesh,
+                                                shardings=shardings,
+                                                verify=verify)
+                    raise FileNotFoundError(
+                        f"no restorable snapshot under {self.run_dir}")
             else:
-                if self.replicator is not None:
-                    got = self.replicator.pull_latest(self.run_dir)
-                    if got is not None:
-                        return self.restore(step=got, mesh=mesh,
-                                            shardings=shardings,
-                                            verify=verify)
-                raise FileNotFoundError(
-                    f"no restorable snapshot under {self.run_dir}")
-        else:
-            # explicitly requested step: verify with the same rigor as the
-            # newest-valid scan — a torn image must raise, not restore
-            # garbage (historically this path skipped verify_all()).
-            reader = self.store.reader(step, verify=verify)
-            if verify:
-                try:
-                    reader.verify_all()
-                except Exception:
-                    reader.close()
-                    raise
+                # explicitly requested step: verify with the same rigor as
+                # the newest-valid scan — a torn image must raise, not
+                # restore garbage (historically this path skipped
+                # verify_all()).
+                reader = self.store.reader(step, verify=verify,
+                                           io_threads=io_threads)
+                if verify:
+                    try:
+                        reader.verify_all()
+                    except Exception:
+                        reader.close()
+                        raise
 
-        ctx = HookContext("restore", step)
-        ctx.reader = reader
-        ctx.manifest = reader.manifest
-        ctx.target_mesh = mesh if mesh is not None else self.mesh
-        ctx.target_shardings = shardings or {}
-        self.registry.init_all("restore")
-        try:
-            ctx.host_state = reader.host_state()
-            self.registry.run(Hook.RESTORE_EXT_STATE, ctx)
-            self.registry.run(Hook.UPDATE_TOPOLOGY_MAP, ctx)
-            self.registry.run(Hook.RESUME_DEVICES_LATE, ctx)
-        except Exception:
-            self.registry.exit_all("restore", False)
-            raise
-        finally:
-            reader.close()
+            ctx = HookContext("restore", step)
+            ctx.reader = reader
+            ctx.manifest = reader.manifest
+            ctx.target_mesh = mesh if mesh is not None else self.mesh
+            ctx.target_shardings = shardings or {}
+            ctx.restore_threads = self.options.restore_threads or io_threads
+            self.registry.init_all("restore")
+            try:
+                ctx.host_state = reader.host_state()
+                self.registry.run(Hook.RESTORE_EXT_STATE, ctx)
+                self.registry.run(Hook.UPDATE_TOPOLOGY_MAP, ctx)
+                self.registry.run(Hook.RESUME_DEVICES_LATE, ctx)
+            except Exception:
+                self.registry.exit_all("restore", False)
+                raise
+            finally:
+                ctx.stats.update(reader.io_stats())   # read_s, decompress_s
+                reader.close()
         self.registry.exit_all("restore", True)
         self.last_stats = dict(ctx.stats)
         self.last_stats["topology_mode"] = ctx.topology_map.get("mode")

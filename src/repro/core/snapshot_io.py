@@ -3,16 +3,27 @@
 Layout:
   run_dir/snapshots/step_00000123/
     MANIFEST.json         — committed last (atomic rename) = the image is valid
-    host0000.pack         — this host's shard payloads + host-state blob
+    host0000.pack.0..N-1  — this host's shard payloads, striped (pack v2)
+    host0000.pack         — legacy v1 single-file layout (still readable)
 
 Incremental mode (beyond-paper, Check-N-Run-style): unchanged entries
 (by content CRC) are not rewritten; the manifest's ``locations`` table points
 them at the pack file of an earlier snapshot, forming a delta chain that the
-reader resolves transparently.
+reader resolves transparently.  With pack v2, *partially* changed entries
+dedup at chunk granularity: unchanged chunks (matched by their raw CRC,
+which doubles as the content hash) become refs into the parent's stripes.
+
+The writer is the serialization stage of the pipelined data plane: entries
+are chunked and handed to `serialization.pack.PackWriterV2`, whose
+compress workers and per-stripe appenders overlap CRC/compression with
+file I/O.  The reader drives the streaming restore: a shared chunk-read
+executor (``io_threads``) fans chunk reads out per stripe and places them
+directly into preallocated buffers.
 """
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import Any, Dict, List, Optional
 
@@ -20,9 +31,17 @@ import msgpack
 import numpy as np
 
 from repro.serialization.integrity import atomic_write_json, read_json
-from repro.serialization.pack import PackReader, PackWriter
+from repro.serialization.pack import (DEFAULT_CHUNK_BYTES, PackReader,
+                                      PackWriter, PackWriterV2, open_pack)
 
 MANIFEST = "MANIFEST.json"
+
+
+def _auto_io_threads() -> int:
+    # lazy: repro.api.options is dependency-free, but importing it at
+    # module scope would recurse through repro.api.__init__ -> engine
+    from repro.api.options import auto_io_threads
+    return auto_io_threads()
 
 
 # ------------------------------------------------------------- msgpack np
@@ -57,19 +76,41 @@ def snapshot_dir(run_dir: str, step: int) -> str:
     return os.path.join(run_dir, "snapshots", f"step_{step:08d}")
 
 
+def _loc_step(loc: str) -> int:
+    """'step_00000042/host0000.pack' -> 42."""
+    return int(loc.split("/")[0][5:])
+
+
 # ---------------------------------------------------------------- writer
 class SnapshotWriter:
     def __init__(self, run_dir: str, step: int, host_id: int = 0,
                  compress: bool = False,
-                 prev_manifest: Optional[Dict[str, Any]] = None):
+                 prev_manifest: Optional[Dict[str, Any]] = None,
+                 pack_format: int = 2,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 stripes: int = 2,
+                 io_threads: int = 0):
+        if pack_format not in (1, 2):
+            raise ValueError(f"pack_format must be 1 or 2, got {pack_format}")
         self.run_dir = run_dir
         self.step = step
         self.host_id = host_id
+        self.format = pack_format
         self.dir = snapshot_dir(run_dir, step)
         os.makedirs(self.dir, exist_ok=True)
         self.pack_name = f"host{host_id:04d}.pack"
-        self._writer = PackWriter(os.path.join(self.dir, self.pack_name),
-                                  compress=compress)
+        base = os.path.join(self.dir, self.pack_name)
+        if pack_format == 1:
+            self._writer: Any = PackWriter(base, compress=compress)
+            self.files = [self.pack_name]
+        else:
+            workers = io_threads or _auto_io_threads()
+            self._writer = PackWriterV2(base, compress=compress,
+                                        chunk_bytes=chunk_bytes,
+                                        stripes=stripes, workers=workers)
+            self.files = [f"{self.pack_name}.{k}" for k in range(stripes)]
+        self.chunk_bytes = chunk_bytes
+        self.stripes = stripes if pack_format == 2 else 1
         self.locations: Dict[str, str] = {}
         self.meta: Dict[str, Any] = {}
         # incremental: map entry -> (crc, location) from the parent image
@@ -80,21 +121,93 @@ class SnapshotWriter:
             self._prev = {
                 name: {"crc": crc, "loc": prev_manifest["locations"][name]}
                 for name, crc in prev_manifest.get("entry_crcs", {}).items()}
+        self._parent_packs: Dict[str, Any] = {}      # loc -> reader | None
         self.entry_crcs: Dict[str, int] = {}
         self.reused_bytes = 0
         self.written_bytes = 0
 
+    # --------------------------------------------------- chunk-level dedup
+    def _parent_entry(self, name: str):
+        """(parent entry record, parent pack loc) if the parent holds this
+        entry in a v2 pack with matching chunking, else None."""
+        if self.format != 2:
+            return None
+        prev = self._prev.get(name)
+        if prev is None:
+            return None
+        loc = prev["loc"]
+        if loc not in self._parent_packs:
+            reader = None
+            try:
+                r = open_pack(os.path.join(self.run_dir, "snapshots", loc))
+                if (getattr(r, "format", 1) == 2
+                        and r.chunk_bytes == self.chunk_bytes):
+                    reader = r
+                else:
+                    r.close()
+            except Exception:
+                reader = None
+            self._parent_packs[loc] = reader
+        reader = self._parent_packs[loc]
+        if reader is None or name not in reader.index:
+            return None
+        return reader.entry(name), loc
+
     def _put(self, name: str, data: np.ndarray) -> None:
         from repro.serialization.integrity import crc32
         raw = np.asarray(data, order="C")
-        c = crc32(raw.tobytes())
-        self.entry_crcs[name] = c
         prev = self._prev.get(name)
-        if prev is not None and prev["crc"] == c:
-            self.locations[name] = prev["loc"]          # delta: reuse
-            self.reused_bytes += raw.nbytes
+        if self.format == 1:
+            c = crc32(raw.tobytes())
+            if prev is not None and prev["crc"] == c:
+                self.entry_crcs[name] = c
+                self.locations[name] = prev["loc"]      # delta: entry reuse
+                self.reused_bytes += raw.nbytes
+                return
+            self._writer.add(name, raw)
+            self._record_written(name, raw, crc=c)
             return
-        self._writer.add(name, raw)
+
+        # v2: hash once, at chunk grain, and make both reuse decisions
+        # from that single pass (whole-entry reuse = every chunk matches;
+        # partial = the pack writer refs the matching chunks)
+        rawb = raw.tobytes()
+        parent = self._parent_entry(name) if prev is not None else None
+        if parent is not None:
+            C = self.chunk_bytes
+            mv = memoryview(rawb)
+            crcs = [crc32(mv[o:o + C]) for o in range(0, len(rawb), C)]
+            pchunks = parent[0]["chunks"]
+            if (parent[0]["raw_nbytes"] == len(rawb)
+                    and len(crcs) == len(pchunks)
+                    and all(c == p.get("raw_crc32")
+                            for c, p in zip(crcs, pchunks))):
+                self.entry_crcs[name] = parent[0]["crc32"]
+                self.locations[name] = prev["loc"]      # delta: entry reuse
+                self.reused_bytes += raw.nbytes
+                return
+            self._writer.add(name, raw, parent=parent, raw_bytes=rawb,
+                             chunk_crcs=crcs)
+        elif prev is not None:
+            # parent exists but is v1 / differently chunked: whole-entry
+            # CRC pre-check is all the dedup available
+            c = crc32(rawb)
+            if prev["crc"] == c:
+                self.entry_crcs[name] = c
+                self.locations[name] = prev["loc"]
+                self.reused_bytes += raw.nbytes
+                return
+            self._writer.add(name, raw, raw_bytes=rawb)
+        else:
+            self._writer.add(name, raw, raw_bytes=rawb)
+        self._record_written(name, raw)
+
+    def _record_written(self, name: str, raw: np.ndarray,
+                        crc: Optional[int] = None) -> None:
+        # raw content CRC: the v2 writer accumulates it while chunking;
+        # the v1 writer's index CRC covers stored bytes, so pass it in
+        self.entry_crcs[name] = (crc if crc is not None
+                                 else self._writer.entry_crc(name))
         self.locations[name] = os.path.join(
             f"step_{self.step:08d}", self.pack_name)
         self.written_bytes += raw.nbytes
@@ -124,6 +237,15 @@ class SnapshotWriter:
         self.locations["__host__"] = os.path.join(
             f"step_{self.step:08d}", self.pack_name)
 
+    def _close_parent_packs(self) -> None:
+        for r in self._parent_packs.values():
+            if r is not None:
+                try:
+                    r.close()
+                except Exception:
+                    pass
+        self._parent_packs.clear()
+
     def commit(self, topology: Dict[str, Any],
                stats: Optional[Dict[str, Any]] = None,
                extra: Optional[Dict[str, Any]] = None) -> str:
@@ -131,8 +253,17 @@ class SnapshotWriter:
         self.locations["__meta__"] = os.path.join(
             f"step_{self.step:08d}", self.pack_name)
         self._writer.close()
+        self._close_parent_packs()
+        reused_chunks = getattr(self._writer, "reused_chunk_bytes", 0)
+        self.written_bytes -= reused_chunks
+        self.reused_bytes += reused_chunks
+        # every step this image's bytes live in (locations = entry-level
+        # reuse; chunk refs = chunk-level reuse) — GC keeps them all
+        ref_steps = {_loc_step(loc) for loc in self.locations.values()}
+        ref_steps.update(_loc_step(loc)
+                         for loc in getattr(self._writer, "ref_locs", ()))
         manifest = {
-            "format": 1,
+            "format": self.format,
             "step": self.step,
             "timestamp": time.time(),
             "topology": topology,
@@ -141,17 +272,35 @@ class SnapshotWriter:
             "parent": self.parent_step,
             "locations": self.locations,
             "entry_crcs": self.entry_crcs,
-            "files": [self.pack_name],
+            "files": self.files,
             "stats": dict(stats or {}),
             "reused_bytes": self.reused_bytes,
             "written_bytes": self.written_bytes,
+            "ref_steps": sorted(ref_steps),
         }
+        if self.format == 2:
+            manifest["chunk_bytes"] = self.chunk_bytes
+            manifest["stripes"] = self.stripes
         if extra:
             manifest.update(extra)
         atomic_write_json(os.path.join(self.dir, MANIFEST), manifest)
         return self.dir
 
+    # ------------------------------------------------------ pipeline stats
+    @property
+    def compress_s(self) -> float:
+        return getattr(self._writer, "compress_s", 0.0)
+
+    @property
+    def io_s(self) -> float:
+        return getattr(self._writer, "io_s", 0.0)
+
+    @property
+    def stripe_bytes(self) -> List[int]:
+        return list(getattr(self._writer, "stripe_bytes", []))
+
     def abort(self) -> None:
+        self._close_parent_packs()
         try:
             self._writer.__exit__(RuntimeError, None, None)
         except Exception:
@@ -160,30 +309,56 @@ class SnapshotWriter:
 
 # ---------------------------------------------------------------- reader
 class SnapshotReader:
-    """Thread-safe: each thread gets its own PackReader per pack file, so
-    parallel restore (the on-demand-parallelism optimization the paper
-    cites from Yang et al. SoCC'24) reads entries concurrently."""
+    """Thread-safe: v1 packs get one reader per thread (their single file
+    handle seeks), v2 packs share one reader (per-thread stripe handles
+    inside), so parallel restore (the on-demand-parallelism optimization
+    the paper cites from Yang et al. SoCC'24) reads entries concurrently.
+    `io_threads` > 1 additionally fans the chunks of each v2 entry out to
+    a shared executor — the streaming-restore read-ahead/decompress pool.
+    """
 
-    def __init__(self, run_dir: str, step: int, verify: bool = True):
-        import threading
+    def __init__(self, run_dir: str, step: int, verify: bool = True,
+                 io_threads: int = 0):
         self.run_dir = run_dir
         self.step = step
         self.dir = snapshot_dir(run_dir, step)
         self.manifest = read_json(os.path.join(self.dir, MANIFEST))
         self._tls = threading.local()
-        self._all_packs: List[PackReader] = []
+        self._all_packs: List[Any] = []
+        self._shared_packs: Dict[str, Any] = {}
         self._packs_lock = threading.Lock()
         self._verify = verify
+        self._io_threads = io_threads
+        self._executor = None
+        if io_threads > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=io_threads,
+                thread_name_prefix="repro-chunk-io")
         meta_raw = self._read("__meta__")
         self.meta: Dict[str, Any] = unpack_host_blob(meta_raw)
 
-    def _pack_for(self, loc: str) -> PackReader:
+    def _pack_for(self, loc: str):
+        with self._packs_lock:
+            shared = self._shared_packs.get(loc)
+        if shared is not None:
+            return shared
         packs = getattr(self._tls, "packs", None)
         if packs is None:
             packs = self._tls.packs = {}
         if loc not in packs:
             path = os.path.join(self.run_dir, "snapshots", loc)
-            r = PackReader(path, verify=self._verify)
+            r = open_pack(path, verify=self._verify,
+                          executor=self._executor)
+            if getattr(r, "format", 1) == 2:
+                # v2 readers are thread-safe; share one (index read once)
+                with self._packs_lock:
+                    if loc in self._shared_packs:
+                        r.close()
+                        return self._shared_packs[loc]
+                    self._shared_packs[loc] = r
+                    self._all_packs.append(r)
+                return r
             packs[loc] = r
             with self._packs_lock:
                 self._all_packs.append(r)
@@ -223,18 +398,54 @@ class SnapshotReader:
     def host_state(self) -> Dict[str, Any]:
         return unpack_host_blob(self._read("__host__"))
 
+    def _verify_one(self, name: str) -> None:
+        loc = self.manifest["locations"][name]
+        pack = self._pack_for(loc)
+        if hasattr(pack, "verify_entry"):
+            pack.verify_entry(name)       # v2: CRC stored chunks, no decode
+        else:
+            pack.read_bytes(name)         # v1: CRC implies full decode
+
     def verify_all(self) -> None:
         """CRC-check every entry the manifest references (the CRIU image
         check: a torn/corrupt image must be rejected *before* restore
-        chooses it, so the engine can fall back to an older snapshot)."""
-        for name in self.manifest["locations"]:
-            self._read(name)
+        chooses it, so the engine can fall back to an older snapshot).
+        v2 packs verify without decompressing (chunk CRCs cover the
+        stored bytes); entries run in parallel when the reader has an
+        I/O pool."""
+        names = list(self.manifest["locations"])
+        if self._io_threads > 1 and len(names) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            # a pool distinct from the chunk executor: entry tasks block
+            # on chunk futures, so sharing one pool could starve itself
+            with ThreadPoolExecutor(
+                    max_workers=min(4, self._io_threads)) as ex:
+                for _ in ex.map(self._verify_one, names):
+                    pass
+        else:
+            for name in names:
+                self._verify_one(name)
+
+    def io_stats(self) -> Dict[str, float]:
+        """Aggregated chunk-read/decompress timings across this image's
+        packs (v2 only; v1 packs report nothing)."""
+        out = {"read_s": 0.0, "decompress_s": 0.0, "read_bytes": 0.0}
+        with self._packs_lock:
+            packs = list(self._all_packs)
+        for p in packs:
+            for k, v in p.io_stats().items():
+                out[k] = out.get(k, 0.0) + v
+        return out
 
     def close(self):
         with self._packs_lock:
             for p in self._all_packs:
                 p.close()
             self._all_packs.clear()
+            self._shared_packs.clear()
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
 
 
 # ---------------------------------------------------------------- store
@@ -242,12 +453,19 @@ class SnapshotStore:
     def __init__(self, run_dir: str):
         self.run_dir = run_dir
         self.root = os.path.join(run_dir, "snapshots")
+        # serializes gc against concurrent restore scans on this store
+        # (the async-writer thread gc's while restore() may be reading)
+        self.lock = threading.RLock()
 
     def list_steps(self) -> List[int]:
         if not os.path.isdir(self.root):
             return []
         steps = []
-        for d in sorted(os.listdir(self.root)):
+        try:
+            names = sorted(os.listdir(self.root))
+        except FileNotFoundError:            # raced with a concurrent gc
+            return []
+        for d in names:
             if d.startswith("step_") and os.path.exists(
                     os.path.join(self.root, d, MANIFEST)):
                 steps.append(int(d[5:]))
@@ -257,43 +475,63 @@ class SnapshotStore:
         s = self.list_steps()
         return s[-1] if s else None
 
-    def reader(self, step: Optional[int] = None, verify: bool = True
-               ) -> SnapshotReader:
+    def reader(self, step: Optional[int] = None, verify: bool = True,
+               io_threads: int = 0) -> SnapshotReader:
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no snapshots under {self.root}")
-        return SnapshotReader(self.run_dir, step, verify=verify)
+        return SnapshotReader(self.run_dir, step, verify=verify,
+                              io_threads=io_threads)
 
     def manifest(self, step: int) -> Dict[str, Any]:
         return read_json(os.path.join(snapshot_dir(self.run_dir, step),
                                       MANIFEST))
 
+    def referenced_steps(self, manifest: Dict[str, Any]) -> set:
+        """Every step whose packs this image reads from (entry locations
+        plus chunk-level refs)."""
+        refs = {_loc_step(loc) for loc in manifest["locations"].values()}
+        refs.update(manifest.get("ref_steps", []))
+        return refs
+
     def gc(self, keep: int = 3) -> List[int]:
         """Remove old snapshots, never breaking incremental parent chains
-        that newer snapshots still reference."""
+        that newer snapshots still reference (entry- or chunk-level).
+
+        Holds the store lock so a concurrent restore scan on the *same
+        store instance* never sees a half-deleted image (other processes
+        and other store instances are not serialized — for those, the
+        manifest is unlinked before the payload, so they see the
+        snapshot disappear atomically rather than turn corrupt, and the
+        newest-valid restore scan falls back past it)."""
         import shutil
-        steps = self.list_steps()
-        if len(steps) <= keep:
-            return []
-        keep_steps = set(steps[-keep:])
-        # chase parent links of kept snapshots
-        changed = True
-        while changed:
-            changed = False
-            for s in list(keep_steps):
-                p = self.manifest(s).get("parent")
-                needed = {
-                    int(loc.split("/")[0][5:])
-                    for loc in self.manifest(s)["locations"].values()}
-                for n in needed:
-                    if n not in keep_steps:
-                        keep_steps.add(n)
-                        changed = True
-        removed = []
-        for s in steps:
-            if s not in keep_steps:
-                shutil.rmtree(snapshot_dir(self.run_dir, s),
-                              ignore_errors=True)
-                removed.append(s)
-        return removed
+        with self.lock:
+            steps = self.list_steps()
+            if len(steps) <= keep:
+                return []
+            keep_steps = set(steps[-keep:])
+            # chase pack references of kept snapshots
+            changed = True
+            while changed:
+                changed = False
+                for s in list(keep_steps):
+                    try:
+                        needed = self.referenced_steps(self.manifest(s))
+                    except FileNotFoundError:          # pragma: no cover
+                        continue                       # raced external gc
+                    for n in needed:
+                        if n not in keep_steps:
+                            keep_steps.add(n)
+                            changed = True
+            removed = []
+            for s in steps:
+                if s not in keep_steps:
+                    d = snapshot_dir(self.run_dir, s)
+                    try:
+                        os.remove(os.path.join(d, MANIFEST))
+                    except OSError:
+                        pass
+                    shutil.rmtree(d, ignore_errors=True)
+                    removed.append(s)
+            return removed

@@ -1,2 +1,4 @@
-from repro.serialization.pack import PackWriter, PackReader  # noqa: F401
+from repro.serialization.pack import (PackWriter, PackReader,  # noqa: F401
+                                      PackWriterV2, PackReaderV2, open_pack,
+                                      pack_files)
 from repro.serialization.integrity import atomic_write_json, read_json, crc32  # noqa: F401

@@ -1,21 +1,45 @@
-"""Single-file pack format for snapshot payloads.
+"""Pack formats for snapshot payloads.
 
-Layout:  [8-byte magic][8-byte LE index length][msgpack index][blob...]
-The index maps entry name -> {offset, nbytes, crc32, dtype, shape, meta,
-codec}.  Blobs are raw little-endian array bytes, optionally zstd-compressed
-(per-entry).  Entries are append-only; the index is written last, but the
-header slot for its length is reserved up front so readers can locate it.
+v1 — single file:  [8-byte magic "RPRPACK1"][8-byte LE index length]
+[blob...][msgpack index].  The index maps entry name -> {offset, nbytes,
+crc32, dtype, shape, meta, codec}.  Blobs are raw little-endian array
+bytes, optionally compressed per-entry.  Written by :class:`PackWriter`,
+read by :class:`PackReader`.
+
+v2 — chunked + striped (the pipelined data plane):  an entry's raw bytes
+are split into fixed-size chunks; each chunk carries its own CRC and codec
+and is appended to one of N stripe files (``<base>.0 .. <base>.N-1``,
+round-robin).  Stripe 0's footer holds the full logical index::
+
+    {"format": 2, "stripes": N, "chunk_bytes": C,
+     "entries": {name: {dtype, shape, meta, raw_nbytes, crc32,
+                        chunks: [{stripe, offset, nbytes, raw_nbytes,
+                                  crc32, raw_crc32, codec, ref?}, ...]}}}
+
+Per-chunk ``raw_crc32`` doubles as a content hash: an incremental child
+whose chunk matches the parent's records a ``ref`` (the parent pack's
+location, relative to the snapshots root) instead of rewriting the bytes —
+finer-grained dedup than v1's whole-entry reuse.  :class:`PackWriterV2`
+runs a bounded pipeline (caller thread chunks + hashes -> compress/CRC
+worker pool -> one appender thread per stripe), so compression overlaps
+file I/O; :class:`PackReaderV2` reads chunks in parallel and places them
+directly into one preallocated buffer (no per-entry reassembly copies).
+
+:func:`open_pack` sniffs the on-disk layout and returns the right reader,
+so v1 images written by older code keep restoring byte-identically.
 
 This is deliberately self-contained (no tensorstore/orbax dependency): the
 paper's mechanism needs byte-level control for the incremental/differential
-mode (per-entry CRCs double as content hashes) and per-host shard dumps.
+mode (chunk CRCs double as content hashes) and per-host shard dumps.
 """
 from __future__ import annotations
 
-import io
 import os
+import queue
 import struct
-from typing import Any, Dict, Iterator, Optional, Tuple
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import msgpack
 import numpy as np
@@ -30,11 +54,22 @@ import zlib as _zlib                                 # always-available fallback
 from repro.serialization.integrity import crc32
 
 
-def _compress_blob(raw: bytes, level: int) -> Tuple[bytes, str]:
+def _compress_blob(raw, level: int) -> Tuple[bytes, str]:
     """Best-available codec: zstd if installed, else zlib."""
     if _ZSTD:
         return zstd.ZstdCompressor(level=level).compress(raw), "zstd"
     return _zlib.compress(raw, min(level * 2, 9)), "zlib"
+
+
+def _compress_chunk(raw, level: int) -> Tuple[bytes, str]:
+    """Chunk codec for the pipelined plane.  Unlike :func:`_compress_blob`
+    (which doubles the level for zlib — the v1 ratio-oriented tuning),
+    the level maps 1:1: the pipeline optimizes wall-clock, and e.g.
+    zlib-4 compresses ~4x faster than v1's effective zlib-6 at a few
+    points worse ratio."""
+    if _ZSTD:
+        return zstd.ZstdCompressor(level=level).compress(raw), "zstd"
+    return _zlib.compress(raw, min(level, 9)), "zlib"
 
 
 def _decompress_blob(raw: bytes, codec: str) -> bytes:
@@ -45,6 +80,8 @@ def _decompress_blob(raw: bytes, codec: str) -> bytes:
     return raw
 
 MAGIC = b"RPRPACK1"
+MAGIC2 = b"RPRPACK2"
+DEFAULT_CHUNK_BYTES = 4 << 20
 
 
 def dtype_to_str(dt) -> str:
@@ -62,7 +99,51 @@ def dtype_from_str(s: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, s))
 
 
+def stripe_path(base: str, stripe: int) -> str:
+    return f"{base}.{stripe}"
+
+
+def pack_exists(base: str) -> bool:
+    return os.path.exists(base) or os.path.exists(stripe_path(base, 0))
+
+
+def _remove_stale_layout(base: str, stripes: int) -> None:
+    """After committing a pack, remove files of the *other* layout (and
+    surplus stripes) left by an earlier write of the same step — the
+    existence-sniffing reader must never find a stale sibling.
+    `stripes=0` means a v1 single-file pack was just committed."""
+    if stripes > 0:
+        try:
+            os.remove(base)                          # stale v1 single file
+        except OSError:
+            pass
+    k = max(stripes, 0)
+    while True:
+        try:
+            os.remove(stripe_path(base, k))          # stale/surplus stripes
+        except OSError:
+            return
+        k += 1
+
+
+def pack_files(base: str) -> List[str]:
+    """Physical files of the pack at `base` (v1: one file; v2: stripes)."""
+    if os.path.exists(base):
+        return [base]
+    out = []
+    k = 0
+    while os.path.exists(stripe_path(base, k)):
+        out.append(stripe_path(base, k))
+        k += 1
+    if not out:
+        raise FileNotFoundError(f"no pack at {base} (nor {base}.0)")
+    return out
+
+
 class PackWriter:
+    """v1 single-file serial writer (kept for the serial-compat mode and
+    byte-identical back-compat with images written by older code)."""
+
     def __init__(self, path: str, compress: bool = False, level: int = 3):
         self.path = path
         self.tmp = path + ".tmp"
@@ -75,7 +156,7 @@ class PackWriter:
         self._closed = False
 
     def add(self, name: str, array: np.ndarray,
-            meta: Optional[Dict[str, Any]] = None) -> None:
+            meta: Optional[Dict[str, Any]] = None, parent=None) -> None:
         assert not self._closed
         arr = np.asarray(array, order="C")   # ascontiguousarray 1-d-ifies 0-d
         raw = arr.tobytes()
@@ -102,6 +183,9 @@ class PackWriter:
             "dtype": None, "shape": None, "codec": "raw", "meta": meta or {},
         }
 
+    def entry_crc(self, name: str) -> int:
+        return self._index[name]["crc32"]
+
     def close(self) -> Dict[str, Any]:
         assert not self._closed
         idx = msgpack.packb(self._index, use_bin_type=True)
@@ -113,6 +197,7 @@ class PackWriter:
         os.fsync(self._f.fileno())
         self._f.close()
         os.rename(self.tmp, self.path)
+        _remove_stale_layout(self.path, 0)
         self._closed = True
         return self._index
 
@@ -132,6 +217,10 @@ class PackWriter:
 
 
 class PackReader:
+    """v1 single-file reader (one OS file handle; not thread-safe)."""
+
+    format = 1
+
     def __init__(self, path: str, verify: bool = True):
         self.path = path
         self._f = open(path, "rb")
@@ -164,6 +253,9 @@ class PackReader:
         return np.frombuffer(raw, dtype=dtype_from_str(e["dtype"])
                              ).reshape(e["shape"]).copy()
 
+    def io_stats(self) -> Dict[str, float]:
+        return {}
+
     def close(self):
         self._f.close()
 
@@ -172,3 +264,474 @@ class PackReader:
 
     def __exit__(self, *exc):
         self.close()
+
+
+# ------------------------------------------------------------------ v2
+_DONE = object()          # queue sentinel
+
+
+class PackWriterV2:
+    """Chunked, striped, pipelined pack writer.
+
+    The caller thread (``add``/``add_bytes``) slices entries into chunks,
+    CRCs the raw bytes (the content hash used for incremental chunk
+    dedup), and feeds a bounded queue.  `workers` compress+CRC threads
+    drain it and route finished chunks to per-stripe appender threads, so
+    compression runs concurrently with file writes and with the caller's
+    own capture loop.  ``close()`` drains the pipeline, writes the logical
+    index into stripe 0's footer, fsyncs, and atomically renames every
+    stripe into place (crash mid-write leaves only ``*.tmp`` litter that a
+    later snapshot of the same step overwrites).
+    """
+
+    def __init__(self, base_path: str, compress: bool = False,
+                 level: int = 4, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 stripes: int = 2, workers: int = 2):
+        if chunk_bytes < 1:
+            raise ValueError(f"chunk_bytes must be >= 1, got {chunk_bytes}")
+        if stripes < 1:
+            raise ValueError(f"stripes must be >= 1, got {stripes}")
+        self.base = base_path
+        self.chunk_bytes = chunk_bytes
+        self.stripes = stripes
+        self._compress = compress
+        self._level = level
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self._closed = False
+        self._errors: List[BaseException] = []
+        self._rr = 0                                  # round-robin stripe
+        self.reused_chunk_bytes = 0
+        self.ref_locs: set = set()
+        self.compress_s = 0.0
+        self.io_s = 0.0
+        self.stripe_bytes = [0] * stripes
+        self._stats_lock = threading.Lock()
+
+        workers = max(1, workers)
+        self._comp_q: "queue.Queue" = queue.Queue(maxsize=workers * 4)
+        self._stripe_qs: List["queue.Queue"] = [
+            queue.Queue(maxsize=4) for _ in range(stripes)]
+        self._files = [open(stripe_path(base_path, k) + ".tmp", "wb")
+                       for k in range(stripes)]
+        for f in self._files:
+            f.write(MAGIC2)
+            f.write(struct.pack("<Q", 0))            # index placeholder
+        self._comp_threads = [
+            threading.Thread(target=self._compress_loop, daemon=True)
+            for _ in range(workers)]
+        self._stripe_threads = [
+            threading.Thread(target=self._stripe_loop, args=(k,), daemon=True)
+            for k in range(stripes)]
+        for t in self._comp_threads + self._stripe_threads:
+            t.start()
+
+    # ----------------------------------------------------------- pipeline
+    def _put(self, q: "queue.Queue", item) -> None:
+        """Bounded put that aborts instead of deadlocking if a downstream
+        thread has died with an error."""
+        while True:
+            if self._errors:
+                raise self._errors[0]
+            try:
+                q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def _compress_loop(self) -> None:
+        try:
+            while True:
+                item = self._comp_q.get()
+                if item is _DONE:
+                    return
+                rec, j, part, stripe, rcrc = item
+                if self._errors:
+                    continue                           # drain without work
+                data, codec = part, "raw"
+                if self._compress:
+                    t0 = time.perf_counter()
+                    comp, cname = _compress_chunk(part, self._level)
+                    if len(comp) < len(part) * 0.9:
+                        data, codec = comp, cname
+                    with self._stats_lock:
+                        self.compress_s += time.perf_counter() - t0
+                scrc = crc32(data)
+                self._put(self._stripe_qs[stripe],
+                          (rec, j, data, len(part), scrc, rcrc, codec))
+        except BaseException as e:                     # pragma: no cover
+            self._errors.append(e)
+
+    def _stripe_loop(self, k: int) -> None:
+        try:
+            f = self._files[k]
+            while True:
+                item = self._stripe_qs[k].get()
+                if item is _DONE:
+                    return
+                rec, j, data, raw_n, scrc, rcrc, codec = item
+                if self._errors:
+                    continue
+                t0 = time.perf_counter()
+                off = f.tell()
+                f.write(data)
+                with self._stats_lock:
+                    self.io_s += time.perf_counter() - t0
+                    self.stripe_bytes[k] += len(data)
+                # each chunk slot is written exactly once
+                rec["chunks"][j] = {
+                    "stripe": k, "offset": off, "nbytes": len(data),
+                    "raw_nbytes": raw_n, "crc32": scrc, "raw_crc32": rcrc,
+                    "codec": codec,
+                }
+        except BaseException as e:                     # pragma: no cover
+            self._errors.append(e)
+
+    # ---------------------------------------------------------------- add
+    def _add_blob(self, name: str, raw, dtype: Optional[str],
+                  shape: Optional[list], meta: Optional[Dict[str, Any]],
+                  parent: Optional[Tuple[Dict[str, Any], str]],
+                  chunk_crcs: Optional[List[int]] = None) -> None:
+        assert not self._closed
+        if self._errors:
+            raise self._errors[0]
+        mv = memoryview(raw)
+        n = len(mv)
+        C = self.chunk_bytes
+        nchunks = (n + C - 1) // C
+        rec: Dict[str, Any] = {
+            "dtype": dtype, "shape": shape, "meta": meta or {},
+            "raw_nbytes": n, "crc32": 0, "chunks": [None] * nchunks,
+        }
+        self._entries[name] = rec
+        # parent = (entry record of the same name in the parent image,
+        #           parent pack location "step_XXXXXXXX/hostYYYY.pack");
+        # only offered when the parent is v2 with the same chunk size.
+        prev_chunks = parent[0]["chunks"] if parent else []
+        running = 0
+        for j in range(nchunks):
+            part = mv[j * C:(j + 1) * C]
+            rcrc = chunk_crcs[j] if chunk_crcs else crc32(part)
+            running = crc32(part, running)
+            p = prev_chunks[j] if j < len(prev_chunks) else None
+            if (p is not None and p.get("raw_crc32") == rcrc
+                    and p["raw_nbytes"] == len(part)):
+                c = dict(p)                           # chunk-level dedup
+                c.setdefault("ref", parent[1])
+                rec["chunks"][j] = c
+                self.reused_chunk_bytes += len(part)
+                self.ref_locs.add(c["ref"])
+            else:
+                stripe = self._rr
+                self._rr = (self._rr + 1) % self.stripes
+                self._put(self._comp_q, (rec, j, part, stripe, rcrc))
+        rec["crc32"] = running            # == crc32 of the full raw bytes
+
+    def add(self, name: str, array: np.ndarray,
+            meta: Optional[Dict[str, Any]] = None,
+            parent: Optional[Tuple[Dict[str, Any], str]] = None,
+            raw_bytes: Optional[bytes] = None,
+            chunk_crcs: Optional[List[int]] = None) -> None:
+        """`raw_bytes`/`chunk_crcs` let a caller that already serialized
+        and hashed the array (the snapshot writer's dedup decision) skip
+        the second tobytes()/CRC pass."""
+        arr = np.asarray(array, order="C")
+        self._add_blob(name, raw_bytes if raw_bytes is not None
+                       else arr.tobytes(), dtype_to_str(arr.dtype),
+                       list(arr.shape), meta, parent, chunk_crcs)
+
+    def add_bytes(self, name: str, raw: bytes,
+                  meta: Optional[Dict[str, Any]] = None) -> None:
+        self._add_blob(name, raw, None, None, meta, None)
+
+    def entry_crc(self, name: str) -> int:
+        return self._entries[name]["crc32"]
+
+    # -------------------------------------------------------------- close
+    def _post_done(self, q: "queue.Queue") -> None:
+        """Deliver a sentinel even if the consumer died with the queue
+        full (an errored worker stops draining; blocking put() would
+        deadlock close()/abort() — exactly when they matter most)."""
+        while True:
+            try:
+                q.put(_DONE, timeout=0.1)
+                return
+            except queue.Full:
+                if self._errors:
+                    try:
+                        q.get_nowait()           # make room ourselves
+                    except queue.Empty:
+                        pass
+
+    def _drain(self) -> None:
+        for _ in self._comp_threads:
+            self._post_done(self._comp_q)
+        for t in self._comp_threads:
+            t.join()
+        for q in self._stripe_qs:
+            self._post_done(q)
+        for t in self._stripe_threads:
+            t.join()
+
+    def close(self) -> Dict[str, Any]:
+        assert not self._closed
+        self._drain()
+        if self._errors:
+            self._abort_files()
+            raise self._errors[0]
+        for rec in self._entries.values():
+            if any(c is None for c in rec["chunks"]):   # pragma: no cover
+                self._abort_files()
+                raise IOError(f"{self.base}: pipeline lost a chunk")
+        footer0 = {"format": 2, "stripes": self.stripes,
+                   "chunk_bytes": self.chunk_bytes,
+                   "entries": self._entries}
+        for k, f in enumerate(self._files):
+            idx = msgpack.packb(
+                footer0 if k == 0 else {"format": 2, "stripe": k},
+                use_bin_type=True)
+            idx_off = f.tell()
+            f.write(idx)
+            f.seek(len(MAGIC2))
+            f.write(struct.pack("<Q", idx_off))
+            f.flush()
+            os.fsync(f.fileno())
+            f.close()
+        # stripe 0 (holding the index) renamed last: readers only see a
+        # complete stripe set once the index is durable
+        for k in range(self.stripes - 1, -1, -1):
+            p = stripe_path(self.base, k)
+            os.rename(p + ".tmp", p)
+        _remove_stale_layout(self.base, self.stripes)
+        self._closed = True
+        return self._entries
+
+    def _abort_files(self) -> None:
+        self._closed = True
+        for f in self._files:
+            try:
+                f.close()
+            except Exception:
+                pass
+        for k in range(self.stripes):
+            try:
+                os.remove(stripe_path(self.base, k) + ".tmp")
+            except OSError:
+                pass
+
+    def abort(self) -> None:
+        if self._closed:
+            return
+        self._errors.append(RuntimeError("aborted"))
+        try:
+            self._drain()
+        finally:
+            self._errors.clear()
+            self._abort_files()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if not self._closed:
+            if exc[0] is None:
+                self.close()
+            else:                                    # failed write: no commit
+                self.abort()
+
+
+class PackReaderV2:
+    """Chunked/striped pack reader with parallel chunk placement.
+
+    Thread-safe: every thread gets its own file handle per stripe, so
+    concurrent ``read_array`` calls (the restore thread pool) never
+    contend on seek position.  When an `executor` is supplied, the chunks
+    of one entry are read+CRC'd+decompressed in parallel, each landing
+    directly in its slice of one preallocated buffer — no per-entry
+    reassembly copies.
+    """
+
+    format = 2
+
+    def __init__(self, base: str, verify: bool = True, executor=None):
+        self.base = base
+        # refs point at packs of other steps, relative to snapshots/
+        self.root = os.path.dirname(os.path.dirname(os.path.abspath(base)))
+        self._verify = verify
+        self._executor = executor
+        self._tls = threading.local()
+        self._all_handles: List[Any] = []
+        self._handles_lock = threading.Lock()
+        self._stats = {"read_s": 0.0, "decompress_s": 0.0,
+                       "read_bytes": 0.0}
+        with open(stripe_path(base, 0), "rb") as f:
+            magic = f.read(8)
+            if magic != MAGIC2:
+                raise ValueError(f"{base}.0: bad magic {magic!r}")
+            (idx_off,) = struct.unpack("<Q", f.read(8))
+            f.seek(idx_off)
+            footer = msgpack.unpackb(f.read(), raw=False)
+        self.index: Dict[str, Dict[str, Any]] = footer["entries"]
+        self.stripes: int = footer["stripes"]
+        self.chunk_bytes: int = footer["chunk_bytes"]
+
+    # ------------------------------------------------------------- layout
+    def names(self):
+        return list(self.index)
+
+    def entry(self, name: str) -> Dict[str, Any]:
+        return self.index[name]
+
+    def _chunk_file(self, c: Dict[str, Any]) -> str:
+        ref = c.get("ref")
+        if ref:
+            return stripe_path(os.path.join(self.root, ref), c["stripe"])
+        return stripe_path(self.base, c["stripe"])
+
+    def _handle(self, path: str):
+        handles = getattr(self._tls, "handles", None)
+        if handles is None:
+            handles = self._tls.handles = {}
+        f = handles.get(path)
+        if f is None:
+            f = handles[path] = open(path, "rb")
+            with self._handles_lock:
+                self._all_handles.append(f)
+        return f
+
+    # --------------------------------------------------------------- read
+    def _read_chunk_into(self, name: str, c: Dict[str, Any],
+                         out: np.ndarray, raw_off: int) -> None:
+        path = self._chunk_file(c)
+        t0 = time.perf_counter()
+        try:
+            f = self._handle(path)
+        except FileNotFoundError:
+            raise IOError(
+                f"{self.base}:{name}: chunk file missing ({path}) — "
+                f"referenced pack was deleted (broken incremental chain?)")
+        f.seek(c["offset"])
+        data = f.read(c["nbytes"])
+        t1 = time.perf_counter()
+        if len(data) != c["nbytes"]:
+            raise IOError(
+                f"{path}:{name}: chunk truncated at offset {c['offset']} "
+                f"(got {len(data)} of {c['nbytes']} bytes)")
+        if self._verify and crc32(data) != c["crc32"]:
+            raise IOError(
+                f"{path}:{name}: chunk CRC mismatch at offset "
+                f"{c['offset']} (torn write?)")
+        if c["codec"] != "raw":
+            data = _decompress_blob(data, c["codec"])
+        t2 = time.perf_counter()
+        if len(data) != c["raw_nbytes"]:
+            raise IOError(f"{path}:{name}: chunk decompressed to "
+                          f"{len(data)} bytes, expected {c['raw_nbytes']}")
+        out[raw_off:raw_off + len(data)] = np.frombuffer(data, np.uint8)
+        with self._handles_lock:
+            self._stats["read_s"] += t1 - t0
+            self._stats["decompress_s"] += t2 - t1
+            self._stats["read_bytes"] += c["nbytes"]
+
+    def _read_raw(self, name: str) -> np.ndarray:
+        rec = self.index[name]
+        out = np.empty(rec["raw_nbytes"], np.uint8)
+        offs = []
+        pos = 0
+        for c in rec["chunks"]:
+            offs.append(pos)
+            pos += c["raw_nbytes"]
+        if pos != rec["raw_nbytes"]:
+            raise IOError(f"{self.base}:{name}: chunk sizes sum to {pos}, "
+                          f"index says {rec['raw_nbytes']}")
+        if self._executor is not None and len(rec["chunks"]) > 1:
+            futs = [self._executor.submit(self._read_chunk_into, name, c,
+                                          out, o)
+                    for c, o in zip(rec["chunks"], offs)]
+            for fu in futs:
+                fu.result()
+        else:
+            for c, o in zip(rec["chunks"], offs):
+                self._read_chunk_into(name, c, out, o)
+        return out
+
+    def read_bytes(self, name: str) -> bytes:
+        return self._read_raw(name).tobytes()
+
+    def read_array(self, name: str) -> np.ndarray:
+        rec = self.index[name]
+        buf = self._read_raw(name)
+        return buf.view(dtype_from_str(rec["dtype"])).reshape(rec["shape"])
+
+    # ------------------------------------------------------------- verify
+    def _verify_chunk(self, name: str, c: Dict[str, Any]) -> None:
+        path = self._chunk_file(c)
+        t0 = time.perf_counter()
+        try:
+            f = self._handle(path)
+        except FileNotFoundError:
+            raise IOError(
+                f"{self.base}:{name}: chunk file missing ({path}) — "
+                f"referenced pack was deleted (broken incremental chain?)")
+        f.seek(c["offset"])
+        data = f.read(c["nbytes"])
+        t1 = time.perf_counter()
+        if len(data) != c["nbytes"]:
+            raise IOError(
+                f"{path}:{name}: chunk truncated at offset {c['offset']} "
+                f"(got {len(data)} of {c['nbytes']} bytes)")
+        if crc32(data) != c["crc32"]:
+            raise IOError(
+                f"{path}:{name}: chunk CRC mismatch at offset "
+                f"{c['offset']} (torn write?)")
+        with self._handles_lock:
+            self._stats["read_s"] += t1 - t0
+            self._stats["read_bytes"] += c["nbytes"]
+
+    def verify_entry(self, name: str) -> None:
+        """Integrity-check one entry without decoding it.  Chunk CRCs
+        cover the *stored* bytes, so verification never pays for
+        decompression or buffer assembly — unlike v1, where verify must
+        decode every entry the restore will decode again."""
+        rec = self.index[name]
+        chunks = rec["chunks"]
+        if self._executor is not None and len(chunks) > 1:
+            futs = [self._executor.submit(self._verify_chunk, name, c)
+                    for c in chunks]
+            for fu in futs:
+                fu.result()
+        else:
+            for c in chunks:
+                self._verify_chunk(name, c)
+
+    def io_stats(self) -> Dict[str, float]:
+        with self._handles_lock:
+            return dict(self._stats)
+
+    def close(self):
+        with self._handles_lock:
+            for f in self._all_handles:
+                try:
+                    f.close()
+                except Exception:                      # pragma: no cover
+                    pass
+            self._all_handles.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+AnyPackReader = Union[PackReader, PackReaderV2]
+
+
+def open_pack(base: str, verify: bool = True,
+              executor=None) -> AnyPackReader:
+    """Open the pack at `base`, sniffing v1 (single file) vs v2 (stripe
+    set).  v1 images written by older code read back byte-identically."""
+    if os.path.exists(base):
+        return PackReader(base, verify=verify)
+    if os.path.exists(stripe_path(base, 0)):
+        return PackReaderV2(base, verify=verify, executor=executor)
+    raise FileNotFoundError(f"no pack at {base} (nor {base}.0)")

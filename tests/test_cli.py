@@ -70,7 +70,9 @@ def test_inspect_missing_dir(tmp_path):
 def test_verify_ok_and_corrupt(populated_run, capsys):
     assert main(["verify", populated_run]) == 0
     assert "OK" in capsys.readouterr().out
-    pack = os.path.join(snapshot_dir(populated_run, 3), "host0000.pack")
+    from repro.serialization.pack import pack_files
+    pack = pack_files(os.path.join(snapshot_dir(populated_run, 3),
+                                   "host0000.pack"))[0]
     with open(pack, "r+b") as f:
         f.seek(40)
         f.write(b"\xde\xad\xbe\xef" * 4)

@@ -1,0 +1,300 @@
+"""Pipelined data plane, end to end: v1/v2 interop through the engine,
+chunk-level incremental dedup, the corruption matrix (mid-chunk flip,
+truncated stripe, deleted parent pack), async write-failure surfacing,
+and gc racing a concurrent restore."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CheckpointOptions, CheckpointSession
+from repro.core import SnapshotEngine
+from repro.core.snapshot_io import MANIFEST, SnapshotStore, snapshot_dir
+from repro.serialization.pack import pack_files, stripe_path
+
+
+def _np_state(n=8, kb=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"t{i}": rng.integers(0, 9, size=kb * 256).astype(np.float32)
+            for i in range(n)}
+
+
+def _session(run_dir, holder, **opts):
+    s = CheckpointSession(run_dir, CheckpointOptions(**opts), backend="host")
+    s.attach(lambda: {"train_state": holder["state"]})
+    return s
+
+
+def _assert_state_equal(restored, state):
+    for k, v in state.items():
+        np.testing.assert_array_equal(np.asarray(restored["train_state"][k]),
+                                      np.asarray(v))
+
+
+# ------------------------------------------------------------ v1 interop
+def test_v1_image_restores_through_new_reader(run_dir):
+    """Serial-compat images (pack_format=1, the layout older code wrote)
+    restore byte-identically through the v2-aware reader."""
+    state = _np_state()
+    s = _session(run_dir, {"state": state}, pack_format=1, compress=True)
+    s.checkpoint(1)
+    files = os.listdir(snapshot_dir(run_dir, 1))
+    assert "host0000.pack" in files                  # single-file layout
+    assert not any(f.startswith("host0000.pack.") for f in files)
+
+    s2 = _session(run_dir, {"state": None})          # default (v2) options
+    restored = s2.restore()
+    _assert_state_equal(restored, state)
+    for k in state:
+        assert restored["train_state"][k].tobytes() == state[k].tobytes()
+
+
+def test_incremental_chain_mixes_v1_parent_v2_child(run_dir):
+    state = _np_state()
+    s = _session(run_dir, {"state": state}, pack_format=1, incremental=True)
+    s.checkpoint(1)
+    state2 = dict(state, t0=state["t0"] + 1.0)
+    s2 = _session(run_dir, {"state": state2}, pack_format=2,
+                  incremental=True)
+    s2.checkpoint(2)
+    man = s2.store.manifest(2)
+    assert man["format"] == 2 and man["parent"] == 1
+    # unchanged entries resolve into the v1 parent's single-file pack
+    assert any(loc.startswith("step_00000001") and loc.endswith(".pack")
+               for loc in man["locations"].values())
+    s3 = _session(run_dir, {"state": None})
+    _assert_state_equal(s3.restore(), state2)
+
+
+def test_v2_chunk_dedup_through_engine(run_dir):
+    big = np.arange(1 << 20, dtype=np.float32)       # 4 MiB -> 4 x 1 MiB
+    holder = {"state": {"big": big}}
+    s = _session(run_dir, holder, incremental=True, chunk_mb=1)
+    s.checkpoint(1)
+    big2 = big.copy()
+    big2[:4] = -1.0                                  # dirties chunk 0 only
+    holder["state"] = {"big": big2}
+    s.checkpoint(2)
+    man = s.store.manifest(2)
+    assert man["written_bytes"] == 1 << 20           # one chunk rewritten
+    assert man["reused_bytes"] == 3 << 20
+    assert 1 in man["ref_steps"]
+    s2 = _session(run_dir, {"state": None})
+    np.testing.assert_array_equal(
+        np.asarray(s2.restore()["train_state"]["big"]), big2)
+    # gc must keep step 1: step 2's chunks live in its stripes
+    s.store.gc(keep=1)
+    assert s.store.list_steps() == [1, 2]
+
+
+# ------------------------------------------------------ corruption matrix
+def _two_snapshots(run_dir, incremental=True):
+    state = _np_state()
+    holder = {"state": state}
+    s = _session(run_dir, holder, incremental=incremental, chunk_mb=1)
+    s.checkpoint(1)
+    holder["state"] = dict(state, t0=state["t0"] + 1.0)
+    s.checkpoint(2)
+    return state, holder["state"]
+
+
+def test_mid_chunk_flip_fails_verify_and_falls_back(run_dir):
+    state1, _ = _two_snapshots(run_dir)
+    pack = pack_files(os.path.join(snapshot_dir(run_dir, 2),
+                                   "host0000.pack"))[0]
+    with open(pack, "r+b") as f:
+        f.seek(200)                                  # mid-chunk payload
+        f.write(b"\xde\xad\xbe\xef")
+    s = _session(run_dir, {"state": None})
+    with pytest.raises(Exception, match="CRC"):
+        s.restore(step=2)
+    _assert_state_equal(s.restore(), state1)         # newest-valid fallback
+
+
+def test_truncated_stripe_fails_verify_and_falls_back(run_dir):
+    state1, _ = _two_snapshots(run_dir)
+    stripe = stripe_path(os.path.join(snapshot_dir(run_dir, 2),
+                                      "host0000.pack"), 1)
+    os.truncate(stripe, 16)          # keep the header, drop every chunk
+    s = _session(run_dir, {"state": None})
+    with pytest.raises(IOError):
+        s.restore(step=2)
+    _assert_state_equal(s.restore(), state1)
+
+
+def test_deleted_parent_pack_breaks_children_with_clear_error(run_dir):
+    state1, state2 = _two_snapshots(run_dir)
+    holder = {"state": dict(state2, t1=state2["t1"] + 2.0)}
+    # step 3: full image, independent of the chain
+    s_full = _session(run_dir, holder, incremental=False)
+    s_full.checkpoint(3)
+    # delete step 1's pack: steps 1 AND 2 (delta child) are now broken
+    for p in pack_files(os.path.join(snapshot_dir(run_dir, 1),
+                                     "host0000.pack")):
+        os.remove(p)
+    s = _session(run_dir, {"state": None})
+    with pytest.raises(Exception,
+                       match="(chunk file missing|No such file|no pack)"):
+        s.restore(step=2)
+    _assert_state_equal(s.restore(), holder["state"])  # falls back to 3
+    # the CLI verifier reports the broken steps and the intact one
+    from repro.cli import main
+    assert main(["verify", run_dir]) == 1
+
+
+# ------------------------------------------------------ async bug fixes
+def test_async_write_failure_is_surfaced_not_swallowed(run_dir, monkeypatch):
+    state = _np_state(n=2, kb=1)
+    s = _session(run_dir, {"state": state}, mode="async")
+
+    def boom(ctx):
+        raise IOError("disk on fire")
+
+    monkeypatch.setattr(s.engine, "_write", boom)
+    s.checkpoint(1)
+    with pytest.raises(IOError, match="disk on fire"):
+        s.wait_pending()
+    # the failure stays visible after being raised once
+    assert "disk on fire" in s.write_error
+    assert "disk on fire" in s.last_stats["write_error"]
+    assert s.store.list_steps() == []                # nothing committed
+    # drained: a second wait does not re-raise the same error
+    s.wait_pending()
+
+
+def test_write_error_resets_after_clean_dump(run_dir, monkeypatch):
+    state = _np_state(n=2, kb=1)
+    s = _session(run_dir, {"state": state}, mode="async")
+    real_write = s.engine._write
+    monkeypatch.setattr(s.engine, "_write",
+                        lambda ctx: (_ for _ in ()).throw(IOError("boom")))
+    s.checkpoint(1)
+    with pytest.raises(IOError):
+        s.wait_pending()
+    assert s.write_error is not None
+    monkeypatch.setattr(s.engine, "_write", real_write)
+    s.checkpoint(2)
+    s.wait_pending()
+    assert s.write_error is None            # last dump committed cleanly
+    assert s.store.list_steps() == [2]
+
+
+def test_async_dump_publishes_write_stats_after_wait(run_dir):
+    state = _np_state(n=4, kb=4)
+    s = _session(run_dir, {"state": state}, mode="async", compress=True)
+    s.checkpoint(1)
+    s.wait_pending()
+    for key in ("write_s", "written_bytes", "compress_s", "io_s"):
+        assert key in s.last_stats, key
+
+
+def test_same_step_format_switch_leaves_no_stale_layout(run_dir):
+    """Re-dumping a step in the other pack format must not leave the old
+    layout behind for the reader sniff to find (stale-data hazard)."""
+    state = _np_state(n=3, kb=2)
+    s1 = _session(run_dir, {"state": state}, pack_format=1)
+    s1.checkpoint(7)
+    state2 = {k: v + 1.0 for k, v in state.items()}
+    s2 = _session(run_dir, {"state": state2}, pack_format=2)
+    s2.checkpoint(7)                         # same step, new format
+    files = sorted(os.listdir(snapshot_dir(run_dir, 7)))
+    assert "host0000.pack" not in files      # stale v1 file removed
+    r = _session(run_dir, {"state": None})
+    _assert_state_equal(r.restore(step=7), state2)
+    # and back: v1 re-dump removes the stripe set
+    state3 = {k: v + 2.0 for k, v in state.items()}
+    s3 = _session(run_dir, {"state": state3}, pack_format=1)
+    s3.checkpoint(7)
+    files = sorted(os.listdir(snapshot_dir(run_dir, 7)))
+    assert not any(f.startswith("host0000.pack.") for f in files)
+    _assert_state_equal(r.restore(step=7), state3)
+
+
+def test_wait_pending_drains_every_queued_error(run_dir):
+    eng = SnapshotEngine(run_dir)
+    eng._pending_err.extend([IOError("first"), IOError("second")])
+    with pytest.raises(RuntimeError, match="2 async snapshot writes"):
+        eng.wait_pending()
+    assert eng._pending_err == []
+    assert "first" in eng.write_error and "second" in eng.write_error
+
+
+# ------------------------------------------------------ gc vs restore
+def test_gc_never_torn_under_concurrent_restore(run_dir):
+    """store.gc in a writer thread vs restore() scans on the same store:
+    the store lock means restore never observes a half-deleted image."""
+    state = _np_state(n=4, kb=4)
+    holder = {"state": state}
+    eng = SnapshotEngine(run_dir, backend="host",
+                         options=CheckpointOptions(keep=1))
+    eng.attach(lambda: {"train_state": holder["state"]})
+    eng.checkpoint(0)
+    errors = []
+    stop = threading.Event()
+
+    def restorer():
+        try:
+            while not stop.is_set():
+                restored = eng.restore()
+                assert "train_state" in restored
+        except BaseException as e:
+            errors.append(e)
+
+    t = threading.Thread(target=restorer)
+    t.start()
+    try:
+        for step in range(1, 25):
+            eng.checkpoint(step)                     # keep=1 -> gc each time
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors[0]
+    assert eng.store.list_steps() == [24]
+
+
+def test_store_scan_tolerates_vanishing_root(run_dir):
+    store = SnapshotStore(run_dir)
+    assert store.list_steps() == []
+    # a step dir without a manifest (mid-gc or torn) is invisible
+    d = snapshot_dir(run_dir, 5)
+    os.makedirs(d)
+    assert store.list_steps() == []
+
+
+# ------------------------------------------------------ options plumbing
+def test_dataplane_options_env_roundtrip():
+    o = CheckpointOptions(pack_format=1, io_threads=3, chunk_mb=2, stripes=4)
+    assert CheckpointOptions.from_env(o.to_env()) == o
+    assert o.effective_io_threads() == 3
+    assert CheckpointOptions().effective_io_threads() >= 2
+
+
+def test_dataplane_options_validate():
+    from repro.api.options import OptionsError
+    with pytest.raises(OptionsError):
+        CheckpointOptions(pack_format=3)
+    with pytest.raises(OptionsError):
+        CheckpointOptions(chunk_mb=0)
+    with pytest.raises(OptionsError):
+        CheckpointOptions(stripes=0)
+    with pytest.raises(OptionsError):
+        CheckpointOptions(io_threads=-1)
+
+
+def test_pipeline_stats_reported(run_dir):
+    state = _np_state(n=6, kb=64)
+    s = _session(run_dir, {"state": state}, compress=True)
+    s.checkpoint(1)
+    st = s.last_stats
+    for key in ("capture_s", "compress_s", "io_s", "serialize_s",
+                "stripe_utilization", "write_s", "frozen_s"):
+        assert key in st, key
+    assert 0.0 <= st["stripe_utilization"] <= 1.0
+    s2 = _session(run_dir, {"state": None})
+    s2.restore()
+    for key in ("read_s", "decompress_s", "read_bytes", "place_s",
+                "host_to_device_s"):
+        assert key in s2.last_stats, key

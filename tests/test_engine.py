@@ -233,6 +233,14 @@ def test_gc_preserves_incremental_parents(run_dir):
 
 
 # ------------------------------------------------------------ corruption
+def _pack_file(run_dir, step):
+    """First physical pack file of a snapshot (v1 single file or v2
+    stripe 0 — both hold payload chunks right after the 16-byte header)."""
+    from repro.serialization.pack import pack_files
+    return pack_files(os.path.join(snapshot_dir(run_dir, step),
+                                   "host0000.pack"))[0]
+
+
 def test_restore_falls_back_past_torn_snapshot(run_dir):
     state = make_state()
     eng = SnapshotEngine(run_dir)
@@ -240,7 +248,7 @@ def test_restore_falls_back_past_torn_snapshot(run_dir):
     eng.checkpoint(1)
     eng.checkpoint(2)
     # corrupt the newest image's payload (torn write)
-    pack = os.path.join(snapshot_dir(run_dir, 2), "host0000.pack")
+    pack = _pack_file(run_dir, 2)
     with open(pack, "r+b") as f:
         f.seek(40)
         f.write(b"\xde\xad\xbe\xef" * 8)
@@ -260,7 +268,7 @@ def test_explicit_step_restore_rejects_torn_pack(run_dir):
     eng.attach(lambda: {"train_state": state})
     eng.checkpoint(1)
     eng.checkpoint(2)
-    pack = os.path.join(snapshot_dir(run_dir, 2), "host0000.pack")
+    pack = _pack_file(run_dir, 2)
     with open(pack, "r+b") as f:
         f.seek(40)
         f.write(b"\xde\xad\xbe\xef" * 8)

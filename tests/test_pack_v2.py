@@ -1,0 +1,208 @@
+"""Pack format v2: chunked entries, per-chunk CRC, striped files, the
+pipelined writer, the parallel chunk reader, and v1 interop through
+``open_pack``."""
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.serialization.integrity import crc32
+from repro.serialization.pack import (MAGIC2, PackReader, PackReaderV2,
+                                      PackWriter, PackWriterV2, open_pack,
+                                      pack_files, stripe_path)
+
+
+def _base(tmp_path):
+    d = tmp_path / "snapshots" / "step_00000001"
+    d.mkdir(parents=True, exist_ok=True)
+    return str(d / "host0000.pack")
+
+
+SIZES = [0, 1, 3, 999, 1000, 1001, 2000, 5003]      # straddle chunk edges
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_v2_roundtrip_chunk_boundaries(tmp_path, compress):
+    base = _base(tmp_path)
+    rng = np.random.default_rng(0)
+    arrays = {f"a{n}": rng.integers(0, 50, size=n).astype(np.int8)
+              for n in SIZES}
+    with PackWriterV2(base, compress=compress, chunk_bytes=1000,
+                      stripes=3, workers=2) as w:
+        for name, a in arrays.items():
+            w.add(name, a)
+        w.add_bytes("blob", b"\x00\x01\x02" * 700)
+    # striped layout on disk: base.0..2, no single-file pack
+    assert not os.path.exists(base)
+    assert pack_files(base) == [stripe_path(base, k) for k in range(3)]
+    with open(stripe_path(base, 0), "rb") as f:
+        assert f.read(8) == MAGIC2
+    r = open_pack(base)
+    assert isinstance(r, PackReaderV2)
+    with r:
+        for name, a in arrays.items():
+            got = r.read_array(name)
+            assert got.dtype == a.dtype and got.shape == a.shape
+            np.testing.assert_array_equal(got, a)
+            nchunks = (a.nbytes + 999) // 1000
+            assert len(r.entry(name)["chunks"]) == nchunks
+        assert r.read_bytes("blob") == b"\x00\x01\x02" * 700
+
+
+def test_v2_entry_crc_matches_full_raw_crc(tmp_path):
+    base = _base(tmp_path)
+    a = np.arange(4096, dtype=np.float32)
+    with PackWriterV2(base, chunk_bytes=1024, stripes=2) as w:
+        w.add("a", a)
+        assert w.entry_crc("a") == crc32(a.tobytes())
+    with open_pack(base) as r:
+        assert r.entry("a")["crc32"] == crc32(a.tobytes())
+
+
+def test_v2_parallel_reader_matches_serial(tmp_path):
+    base = _base(tmp_path)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(100_000).astype(np.float32)
+    with PackWriterV2(base, compress=True, chunk_bytes=4096, stripes=4) as w:
+        w.add("a", a)
+    with ThreadPoolExecutor(max_workers=4) as ex:
+        with PackReaderV2(base, executor=ex) as r:
+            np.testing.assert_array_equal(r.read_array("a"), a)
+            st = r.io_stats()
+            assert st["read_bytes"] > 0 and st["read_s"] >= 0
+    with PackReaderV2(base) as r:                    # serial fallback
+        np.testing.assert_array_equal(r.read_array("a"), a)
+
+
+def test_v2_mid_chunk_corruption_detected(tmp_path):
+    base = _base(tmp_path)
+    a = np.arange(8192, dtype=np.float32)
+    with PackWriterV2(base, chunk_bytes=4096, stripes=2) as w:
+        w.add("a", a)
+    # flip bytes in the middle of a chunk of stripe 1
+    with open(stripe_path(base, 1), "r+b") as f:
+        f.seek(16 + 100)
+        f.write(b"\xff\xfe\xfd")
+    with open_pack(base) as r:
+        with pytest.raises(IOError, match="chunk CRC mismatch"):
+            r.read_array("a")
+    # verify=False bypasses the CRC (benchmarks, image surgery)
+    with open_pack(base, verify=False) as r:
+        r.read_array("a")
+
+
+def test_v2_truncated_stripe_detected(tmp_path):
+    base = _base(tmp_path)
+    a = np.arange(8192, dtype=np.float32)
+    with PackWriterV2(base, chunk_bytes=4096, stripes=2) as w:
+        w.add("a", a)
+    p = stripe_path(base, 1)
+    os.truncate(p, os.path.getsize(p) - 4000)
+    with open_pack(base) as r:
+        with pytest.raises(IOError, match="truncated"):
+            r.read_array("a")
+
+
+def test_v2_failed_write_leaves_no_files(tmp_path):
+    base = _base(tmp_path)
+    try:
+        with PackWriterV2(base, chunk_bytes=256, stripes=2) as w:
+            w.add("a", np.zeros(1000))
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    for k in range(2):
+        assert not os.path.exists(stripe_path(base, k))
+        assert not os.path.exists(stripe_path(base, k) + ".tmp")
+
+
+def test_v2_abort_survives_dead_stripe_writer(tmp_path):
+    """A worker that dies mid-pipeline (ENOSPC-style) leaves its bounded
+    queue full; abort()/close() must still drain instead of deadlocking
+    on the sentinel put."""
+    base = _base(tmp_path)
+    w = PackWriterV2(base, chunk_bytes=64, stripes=1, workers=1)
+    w._files[0].close()                  # every stripe append now raises
+    try:
+        for i in range(100):
+            w.add(f"a{i}", np.arange(64, dtype=np.uint8))
+    except Exception:
+        pass                             # producer sees the worker error
+    done = threading.Event()
+    t = threading.Thread(target=lambda: (w.abort(), done.set()),
+                         daemon=True)
+    t.start()
+    t.join(15)
+    assert done.is_set(), "abort() deadlocked on a dead pipeline thread"
+    assert not os.path.exists(stripe_path(base, 0) + ".tmp")
+
+
+def test_open_pack_reads_v1_byte_identically(tmp_path):
+    """Images written by the legacy single-file writer read back through
+    the same factory the restore path uses."""
+    base = _base(tmp_path)
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((64, 32)).astype(np.float32)
+    with PackWriter(base, compress=True) as w:
+        w.add("a", a)
+        w.add_bytes("raw", b"xyz")
+    r = open_pack(base)
+    assert isinstance(r, PackReader)
+    with r:
+        got = r.read_array("a")
+        assert got.tobytes() == a.tobytes()          # byte-identical
+        assert r.read_bytes("raw") == b"xyz"
+
+
+def test_open_pack_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        open_pack(str(tmp_path / "nope.pack"))
+
+
+def test_v2_chunk_dedup_against_parent(tmp_path):
+    """Unchanged chunks of a changed entry become refs into the parent's
+    stripes (raw chunk CRC = content hash)."""
+    base1 = _base(tmp_path)
+    d2 = tmp_path / "snapshots" / "step_00000002"
+    d2.mkdir(parents=True)
+    base2 = str(d2 / "host0000.pack")
+    a = np.arange(10_000, dtype=np.int32)            # 40000 B -> 10 chunks
+    with PackWriterV2(base1, chunk_bytes=4000, stripes=2) as w:
+        w.add("a", a)
+    with open_pack(base1) as r1:
+        parent = (r1.entry("a"), "step_00000001/host0000.pack")
+        b = a.copy()
+        b[0] = -1                                    # dirty chunk 0 only
+        with PackWriterV2(base2, chunk_bytes=4000, stripes=2) as w:
+            w.add("a", b, parent=parent)
+            assert w.reused_chunk_bytes == 36_000
+            assert w.ref_locs == {"step_00000001/host0000.pack"}
+    with open_pack(base2) as r2:
+        chunks = r2.entry("a")["chunks"]
+        assert "ref" not in chunks[0] or not chunks[0].get("ref")
+        assert all(c["ref"] == "step_00000001/host0000.pack"
+                   for c in chunks[1:])
+        np.testing.assert_array_equal(r2.read_array("a"), b)
+
+
+def test_v2_deleted_ref_pack_is_clear_error(tmp_path):
+    base1 = _base(tmp_path)
+    d2 = tmp_path / "snapshots" / "step_00000002"
+    d2.mkdir(parents=True)
+    base2 = str(d2 / "host0000.pack")
+    a = np.arange(10_000, dtype=np.int32)
+    with PackWriterV2(base1, chunk_bytes=4000, stripes=2) as w:
+        w.add("a", a)
+    with open_pack(base1) as r1:
+        with PackWriterV2(base2, chunk_bytes=4000, stripes=2) as w:
+            b = a.copy()
+            b[0] = -1
+            w.add("a", b, parent=(r1.entry("a"),
+                                  "step_00000001/host0000.pack"))
+    for p in pack_files(base1):
+        os.remove(p)                                 # break the chain
+    with open_pack(base2) as r2:
+        with pytest.raises(IOError, match="chunk file missing"):
+            r2.read_array("a")
