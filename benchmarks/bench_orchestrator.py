@@ -1,0 +1,128 @@
+"""Multi-tenant recovery bench — the paper's Table-2 contrast, as a
+reproducible scenario matrix.
+
+Runs {interception-baseline, sync, async+pipelined} × {preemption,
+failure, straggler-JIT} through the orchestrator and reports, per cell,
+the per-phase recovery-time breakdown (detect → schedule → restore-read →
+replay gap) and goodput (useful-step-seconds / wall-clock).  The
+structural claims this reproduces:
+
+  * interception restore *replays the call log* — recovery grows with
+    progress, while the CRIUgpu-style engines restore in image-read time;
+  * the async+pipelined engine shrinks the frozen window, so preemption
+    costs the victim less useful time than the sync engine.
+
+Usage:
+    python -m benchmarks.bench_orchestrator [--quick] \
+        [--json BENCH_orchestrator.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import emit
+
+ENGINES: Dict[str, Optional[dict]] = {
+    # engine name -> CheckpointOptions kwargs (None = interception kind)
+    "interception": None,
+    "sync": dict(mode="sync", pack_format=1, io_threads=1),
+    "async_pipelined": dict(mode="async", pack_format=2, io_threads=0),
+}
+SCENARIOS = ("preemption", "failure", "straggler")
+
+
+def run_cell(engine: str, scenario: str, steps: int,
+             base_dir: str) -> Dict[str, Any]:
+    from repro.api import CheckpointOptions
+    from repro.orchestrator import run_scenario
+    kw = ENGINES[engine]
+    kind = "intercept" if kw is None else "train"
+    options = None if kw is None else CheckpointOptions(**kw)
+    run_dir = os.path.join(base_dir, f"{engine}_{scenario}")
+    summary = run_scenario(scenario, run_dir, options=options,
+                           total_steps=steps, kind=kind)
+
+    phases = {k: 0.0 for k in ("detect_s", "schedule_s", "restore_s",
+                               "replay_s", "total_s")}
+    incidents = 0
+    goodputs: List[float] = []
+    ckpts = jit = 0
+    for j in summary["jobs"].values():
+        tot = j["recovery_totals"]
+        incidents += tot["incidents"]
+        for k in phases:
+            phases[k] += tot[k]
+        goodputs.append(j["goodput"])
+        ckpts += j["checkpoints"]
+        jit += j["jit_checkpoints"]
+    cell = {
+        "engine": engine,
+        "scenario": scenario,
+        "all_done": summary["all_done"],
+        "wall_s": summary["wall_s"],
+        "cluster_goodput": summary["cluster_goodput"],
+        "mean_job_goodput": sum(goodputs) / max(len(goodputs), 1),
+        "incidents": incidents,
+        "recovery": phases,
+        "checkpoints": ckpts,
+        "jit_checkpoints": jit,
+        "jobs": summary["jobs"],
+    }
+    pre = f"orch.{engine}.{scenario}"
+    emit(f"{pre}.all_done", int(summary["all_done"]), "bool")
+    emit(f"{pre}.wall", summary["wall_s"], "s")
+    emit(f"{pre}.goodput", summary["cluster_goodput"], "ratio")
+    emit(f"{pre}.incidents", incidents, "count")
+    for k, v in phases.items():
+        emit(f"{pre}.recovery.{k[:-2]}", v, "s")
+    return cell
+
+
+def run(steps: int = 10, engines=None, scenarios=None,
+        json_path: Optional[str] = None,
+        base_dir: Optional[str] = None) -> Dict[str, Any]:
+    engines = list(engines or ENGINES)
+    scenarios = list(scenarios or SCENARIOS)
+    base = base_dir or tempfile.mkdtemp(prefix="bench_orch_")
+    cells = []
+    for engine in engines:
+        for scenario in scenarios:
+            cells.append(run_cell(engine, scenario, steps, base))
+    out = {"steps": steps, "engines": engines, "scenarios": scenarios,
+           "cells": cells}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+        print(f"wrote {json_path}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps + only the preemption/failure rows")
+    ap.add_argument("--engines", default=None,
+                    help="comma list from: " + ",".join(ENGINES))
+    ap.add_argument("--scenarios", default=None,
+                    help="comma list from: " + ",".join(SCENARIOS))
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--base-dir", default=None)
+    args = ap.parse_args(argv)
+    engines = args.engines.split(",") if args.engines else None
+    scenarios = args.scenarios.split(",") if args.scenarios else None
+    steps = args.steps
+    if args.quick:
+        steps = min(steps, 8)
+        scenarios = scenarios or ["preemption", "failure"]
+    out = run(steps=steps, engines=engines, scenarios=scenarios,
+              json_path=args.json, base_dir=args.base_dir)
+    return 0 if all(c["all_done"] for c in out["cells"]) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

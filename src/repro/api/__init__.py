@@ -17,4 +17,4 @@ from repro.api.options import CheckpointOptions, OptionsError  # noqa: F401
 from repro.api.capabilities import (CheckReport, capabilities,  # noqa: F401
                                     check)
 from repro.api.session import (CheckpointSession,  # noqa: F401
-                               FrozenCheckpoint)
+                               FrozenCheckpoint, SnapshotWriteFailed)

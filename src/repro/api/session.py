@@ -26,6 +26,15 @@ from repro.api.options import CheckpointOptions
 PyTree = Any
 
 
+class SnapshotWriteFailed(RuntimeError):
+    """A background snapshot write failed.
+
+    Raised by step loops that poll :attr:`CheckpointSession.write_error`
+    (``Trainer.run_until`` / ``DecodeServer.decode_until``): the job must
+    abort promptly instead of running on while believing its recent
+    checkpoints committed."""
+
+
 class FrozenCheckpoint:
     """Handle to a dump frozen between capture (①–③) and commit (④)."""
 
@@ -71,7 +80,8 @@ class CheckpointSession:
                  mesh=None,
                  plugins: Optional[List[Any]] = None,
                  replicator=None,
-                 backend: str = "jax"):
+                 backend: str = "jax",
+                 planner=None):
         from repro.core.engine import SnapshotEngine
         self.run_dir = run_dir
         self.options = options if options is not None else CheckpointOptions()
@@ -79,6 +89,7 @@ class CheckpointSession:
         self.engine = SnapshotEngine(run_dir, plugins=plugins,
                                      options=self.options, mesh=mesh,
                                      replicator=replicator, backend=backend)
+        self._planner = planner
 
     # ------------------------------------------------------- constructors
     @classmethod
@@ -97,6 +108,7 @@ class CheckpointSession:
         self.backend_name = getattr(engine.device_plugin, "backend_name",
                                     "jax")
         self.engine = engine
+        self._planner = None
         return self
 
     # ------------------------------------------------------- preflight
@@ -126,9 +138,22 @@ class CheckpointSession:
     def add_plugin(self, plugin) -> None:
         self.engine.add_plugin(plugin)
 
+    def set_planner(self, planner) -> None:
+        """Attach an :class:`repro.runtime.interval.IntervalPlanner`: every
+        dump's measured frozen-window cost (``engine.last_stats``) is fed
+        into ``planner.observe(...)`` automatically, so τ* adapts to the
+        engine actually in use without callers hand-wiring stats."""
+        self._planner = planner
+
+    def _feed_planner(self) -> None:
+        if self._planner is not None and self.engine.last_stats:
+            self._planner.observe(self.engine.last_stats)
+
     # ------------------------------------------------------- lifecycle
     def checkpoint(self, step: int) -> str:
-        return self.engine.checkpoint(step)
+        path = self.engine.checkpoint(step)
+        self._feed_planner()
+        return path
 
     @contextlib.contextmanager
     def frozen(self, step: int):
@@ -152,6 +177,8 @@ class CheckpointSession:
         else:
             if not snap._done:
                 snap.commit()
+            if snap.path is not None:          # committed (not aborted)
+                self._feed_planner()
 
     def restore(self, step: Optional[int] = None, mesh=None,
                 shardings: Optional[Dict[str, Any]] = None,
@@ -181,6 +208,14 @@ class CheckpointSession:
         ``last_stats['write_error']``) even before ``wait_pending()``
         re-raises it."""
         return self.engine.write_error
+
+    @property
+    def frozen_window_s(self) -> Optional[float]:
+        """Blocked-window cost of the last dump in seconds: how long the
+        job was actually frozen (async: device→host copy only; sync: the
+        full dump+write).  This is the δ that drives τ*."""
+        from repro.runtime.interval import frozen_window_s
+        return frozen_window_s(self.engine.last_stats)
 
     def latest_step(self) -> Optional[int]:
         return self.engine.latest_step()

@@ -11,6 +11,8 @@ get the same treatment:
   python -m repro verify RUN_DIR [--step N]  CRC-verify every entry
   python -m repro gc RUN_DIR --keep N        retire old images (chain-safe)
   python -m repro restore RUN_DIR --dry-run  full restore path, host backend
+  python -m repro jobs RUN_DIR [--job ID]    inspect orchestrator job records
+  python -m repro orchestrate RUN_DIR        run a preemption scenario
 
 Exit status is 0 on success, 1 on any problem — scriptable from cron,
 GitHub Actions, or a cluster scheduler's health hook.
@@ -285,6 +287,108 @@ def cmd_restore(args) -> int:
     return 0
 
 
+# ------------------------------------------------------------------- jobs
+def cmd_jobs(args) -> int:
+    """Inspect a cluster's persisted job records without the owning
+    process (the `repro inspect` of the orchestrator plane)."""
+    from repro.orchestrator.job import list_job_records
+    recs = list_job_records(args.run_dir)
+    if not recs:
+        raise SystemExit(f"error: no job records under {args.run_dir!r} "
+                         f"(expected {args.run_dir}/jobs/*.json)")
+    if args.job is not None:
+        matching = [r for r in recs if r.spec.job_id == args.job]
+        if not matching:
+            raise SystemExit(f"error: no job {args.job!r} "
+                             f"(have: {[r.spec.job_id for r in recs]})")
+        rec = matching[0]
+        if args.json:
+            print(json.dumps(rec.to_dict(), indent=2, default=str))
+            return 0
+        print(f"job {rec.spec.job_id}  [{rec.spec.kind}]  "
+              f"priority {rec.spec.priority}")
+        print(f"  state:       {rec.state.value}")
+        print(f"  progress:    step {rec.step}/{rec.spec.total_steps}   "
+              f"attempts: {rec.attempt + 1}   restarts: {rec.restarts}")
+        print(f"  last ckpt:   "
+              f"{'-' if rec.last_ckpt_step is None else rec.last_ckpt_step}")
+        for i, b in enumerate(rec.recovery.breakdown()):
+            phases = "  ".join(
+                f"{k}={b[k]*1e3:.1f}ms" for k in
+                ("detect_s", "schedule_s", "restore_s", "replay_s")
+                if b[k] is not None)
+            print(f"  incident {i}:  {b['cause']}  {phases}"
+                  + (f"  replayed={b['steps_replayed']}"
+                     if b["steps_replayed"] is not None else ""))
+        for e in rec.events[-8:]:
+            desc = (f"{e['from']} -> {e['to']}" if "to" in e
+                    else ", ".join(f"{k}={v}" for k, v in e.items()
+                                   if k not in ("t", "step")))
+            print(f"  event:       t={e['t']:.3f} step={e.get('step', '-')} "
+                  f" {desc}")
+        return 0
+
+    if args.json:
+        # raw values, not display strings — scripts consume this
+        print(json.dumps([{
+            "job": rec.spec.job_id, "kind": rec.spec.kind,
+            "priority": rec.spec.priority, "state": rec.state.value,
+            "step": rec.step, "total_steps": rec.spec.total_steps,
+            "restarts": rec.restarts,
+            "incidents": rec.recovery.totals()["incidents"],
+            "recovery_s": rec.recovery.totals()["total_s"],
+        } for rec in recs], indent=2))
+        return 0
+    rows = []
+    for rec in recs:
+        tot = rec.recovery.totals()
+        rows.append([
+            rec.spec.job_id, rec.spec.kind, rec.spec.priority,
+            rec.state.value,
+            f"{rec.step}/{rec.spec.total_steps}",
+            rec.restarts, tot["incidents"],
+            f"{tot['total_s']:.2f}s" if tot["incidents"] else "-",
+        ])
+    print(f"{args.run_dir}: {len(rows)} job(s)")
+    print(_table(rows, ["job", "kind", "prio", "state", "progress",
+                        "restarts", "incidents", "recovery"]))
+    return 0
+
+
+# ------------------------------------------------------------ orchestrate
+def cmd_orchestrate(args) -> int:
+    """Run a deterministic multi-tenant scenario and assert recovery."""
+    from repro.api import CheckpointOptions
+    from repro.orchestrator import run_scenario
+    opts = CheckpointOptions(mode=args.mode, pack_format=args.pack_format,
+                             io_threads=args.io_threads)
+    summary = run_scenario(args.scenario, args.run_dir, options=opts,
+                           total_steps=args.steps, kind=args.kind,
+                           capacity=args.capacity)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+    print(f"scenario {args.scenario!r} ({args.mode} engine, "
+          f"capacity {summary['capacity']}): "
+          f"{summary['ticks']} ticks, {summary['wall_s']:.2f}s wall, "
+          f"cluster goodput {summary['cluster_goodput']:.2f}")
+    bad = 0
+    for job_id, j in sorted(summary["jobs"].items()):
+        ok = j["state"] == "done" and j["step"] == j["total_steps"]
+        bad += not ok
+        tot = j["recovery_totals"]
+        rec = (f"  recovery {tot['total_s']*1e3:.0f}ms over "
+               f"{tot['incidents']} incident(s)" if tot["incidents"] else "")
+        print(f"  {job_id:10s} [{j['kind']}] prio {j['priority']}: "
+              f"{j['state']} at {j['step']}/{j['total_steps']} "
+              f"({j['restarts']} restart(s), goodput {j['goodput']:.2f})"
+              + rec)
+    if bad:
+        print(f"error: {bad} job(s) did not recover to completion",
+              file=sys.stderr)
+    return 1 if bad else 0
+
+
 def _iter_leaves(node, prefix=""):
     if isinstance(node, dict):
         for k, v in node.items():
@@ -330,6 +434,30 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--step", type=int, default=None)
     p.add_argument("--dry-run", action="store_true")
     p.set_defaults(fn=cmd_restore)
+
+    p = sub.add_parser("jobs", help="inspect orchestrator job records "
+                       "(offline, no owning process)")
+    p.add_argument("run_dir")
+    p.add_argument("--job", default=None, help="show one job in full")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_jobs)
+
+    p = sub.add_parser("orchestrate", help="run a deterministic "
+                       "multi-tenant preemption/failure scenario")
+    p.add_argument("run_dir")
+    p.add_argument("--scenario", default="mixed",
+                   choices=["preemption", "failure", "straggler", "mixed"])
+    p.add_argument("--steps", type=int, default=10,
+                   help="steps per low-priority job")
+    p.add_argument("--kind", default="train",
+                   choices=["train", "serve", "intercept"])
+    p.add_argument("--mode", default="async", choices=["sync", "async"])
+    p.add_argument("--pack-format", type=int, default=2, choices=[1, 2])
+    p.add_argument("--io-threads", type=int, default=0)
+    p.add_argument("--capacity", type=int, default=None)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also dump the full summary JSON here")
+    p.set_defaults(fn=cmd_orchestrate)
     return ap
 
 

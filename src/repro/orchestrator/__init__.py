@@ -1,0 +1,26 @@
+"""repro.orchestrator — multi-tenant preemption orchestrator.
+
+The subsystem that makes the repo's checkpoint mechanism *scheduler-
+driven*: N concurrent checkpointable jobs under a priority scheduler with
+preemption, heartbeat failure detection, straggler-triggered JIT dumps,
+and τ*-adaptive checkpoint cadence — with every lifecycle transition
+timestamped into a per-job recovery log so recovery time and goodput are
+measurable per scenario (the paper's multi-tenant framing, reproduced).
+
+    from repro.orchestrator import Orchestrator, JobSpec, run_scenario
+
+    summary = run_scenario("preemption", run_dir)
+    assert summary["all_done"]
+"""
+from repro.orchestrator.job import (InvalidTransition, JobRecord,  # noqa: F401
+                                    JobSpec, JobState, list_job_records)
+from repro.orchestrator.orchestrator import (Orchestrator,  # noqa: F401
+                                             OrchestratorConfig)
+from repro.orchestrator.recovery import GoodputMeter, RecoveryLog  # noqa: F401
+from repro.orchestrator.scheduler import Decision, Scheduler  # noqa: F401
+from repro.orchestrator.signals import Signal, SignalChannel  # noqa: F401
+from repro.orchestrator.scenarios import (SCENARIOS, run_scenario,  # noqa: F401
+                                          scenario_specs)
+from repro.orchestrator.workloads import (InterceptionWorkload,  # noqa: F401
+                                          ServeWorkload, TrainWorkload,
+                                          make_workload_factory)

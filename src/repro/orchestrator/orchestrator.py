@@ -1,0 +1,377 @@
+"""Orchestrator — the event loop that drives preemption and recovery.
+
+One process plays the cluster: a priority :class:`Scheduler` over
+simulated device capacity, a :class:`SignalChannel` for SIGTERM-style
+preemption, ``FailureDetector`` heartbeats for crash detection,
+per-job ``StragglerMonitor`` JIT-checkpoint triggers, and per-job
+``IntervalPlanner`` τ* cadence (auto-fed from measured frozen windows via
+``CheckpointSession.set_planner``).  Jobs run cooperatively in slices —
+each tick gives every running job up to ``slice_steps`` steps, with the
+preemption predicate checked between steps so a signal lands mid-run.
+
+The lifecycle per interruption (the paper's recovery story, measured):
+
+    signal/crash -> detect -> [RecoveryLog] -> reschedule -> restore
+    (image read) -> replay to the interrupted step -> caught up
+
+Every transition persists the job's JSON record, so ``python -m repro
+jobs RUN_DIR`` inspects a (possibly dead) cluster offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.orchestrator.job import JobRecord, JobSpec, JobState
+from repro.orchestrator.scheduler import Scheduler
+from repro.orchestrator.signals import Signal, SignalChannel
+from repro.orchestrator.workloads import make_workload_factory
+from repro.runtime.fault import FailureDetector, StragglerMonitor
+from repro.runtime.interval import IntervalPlanner
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    capacity: int = 2               # simulated device slots
+    slice_steps: int = 2            # steps per job per tick
+    heartbeat_deadline_s: float = 0.05
+    max_ticks: int = 10_000
+    mtbf_guess_s: float = 3600.0    # planner prior per job
+    planner_min_interval_s: float = 0.5
+    jit_cooldown_steps: int = 8
+    idle_sleep_s: float = 0.005     # when a tick ran nothing (await detect)
+
+
+class Orchestrator:
+    def __init__(self, run_dir: str, specs: List[JobSpec],
+                 workload_factory: Optional[Callable] = None,
+                 config: Optional[OrchestratorConfig] = None,
+                 options=None, mesh=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.run_dir = run_dir
+        self.cfg = config or OrchestratorConfig()
+        self.clock = clock
+        self.factory = workload_factory or make_workload_factory(
+            run_dir, options=options, mesh=mesh)
+        self.channel = SignalChannel()
+        self.scheduler = Scheduler(self.cfg.capacity, self.channel)
+        self.detector = FailureDetector(self.cfg.heartbeat_deadline_s)
+        for s in specs:
+            if s.devices > self.cfg.capacity:
+                raise ValueError(
+                    f"job {s.job_id!r} demands {s.devices} device(s) but "
+                    f"the cluster has {self.cfg.capacity}: it could never "
+                    f"be scheduled")
+        self.records: Dict[str, JobRecord] = {
+            s.job_id: JobRecord(s, run_dir) for s in specs}
+        for rec in self.records.values():
+            rec.save()
+        self.workloads: Dict[str, Any] = {}
+        self.planners: Dict[str, IntervalPlanner] = {
+            s.job_id: IntervalPlanner(
+                mtbf_guess_s=self.cfg.mtbf_guess_s,
+                min_interval_s=self.cfg.planner_min_interval_s)
+            for s in specs}
+        self.stragglers: Dict[str, StragglerMonitor] = {
+            s.job_id: StragglerMonitor(min_samples=4) for s in specs}
+        self._last_jit: Dict[str, int] = {}
+        self._crash_t: Dict[str, float] = {}
+        self.final: Dict[str, Dict[str, Any]] = {}
+        self.ticks = 0
+        self.t0: Optional[float] = None
+
+    # ---------------------------------------------------------- lifecycle
+    def _all_settled(self) -> bool:
+        return all(r.terminal or r.exhausted for r in self.records.values())
+
+    def run(self) -> Dict[str, Any]:
+        self.t0 = self.clock()
+        while self.ticks < self.cfg.max_ticks and not self._all_settled():
+            self._tick(self.ticks)
+            self.ticks += 1
+        for job_id, wl in list(self.workloads.items()):
+            try:
+                wl.finish()
+            except Exception as e:          # drain failure on exit: the
+                self.records[job_id].events.append(  # record says why
+                    {"t": self.clock(), "drain_error": repr(e)})
+                self.records[job_id].save()
+        return self.summary()
+
+    # --------------------------------------------------------------- tick
+    def _tick(self, tick: int) -> None:
+        # every live workload beats at tick start: a crashed "process"
+        # (its workload object is gone) cannot, so only real deaths age
+        # past the deadline — another job's long slice or a checkpoint
+        # write in *this* process must never read as a missed beat
+        for job_id in self._running_jobs():
+            self.detector.heartbeat(job_id)
+        self._detect_failures()
+        self._schedule(tick)
+        ran = self._run_slices()
+        if not ran:
+            # nothing runnable this tick (e.g. waiting out the heartbeat
+            # deadline of a crashed job) — don't hot-spin the loop
+            time.sleep(self.cfg.idle_sleep_s)
+
+    # ------------------------------------------------- failure detection
+    def _detect_failures(self) -> None:
+        now = self.clock()
+        for job_id in self.detector.dead_workers():
+            rec = self.records.get(job_id)
+            self.detector.last_beat.pop(job_id, None)
+            if rec is None or rec.state != JobState.RUNNING:
+                continue
+            rec.recovery.open(
+                "failure",
+                t_interrupt=self._crash_t.pop(job_id, now),
+                t_detect=now, step_at_interrupt=rec.step,
+                last_ckpt_step=rec.last_ckpt_step)
+            rec.transition(JobState.FAILED, detected="heartbeat")
+            self._evict(job_id)
+
+    def _evict(self, job_id: str) -> None:
+        self.scheduler.release(job_id)
+        self.channel.unregister(job_id)
+        self.detector.last_beat.pop(job_id, None)
+        self.workloads.pop(job_id, None)
+
+    # --------------------------------------------------------- scheduling
+    def _schedule(self, tick: int) -> None:
+        decision = self.scheduler.plan(self.records, tick)
+        for job_id in decision.admit:
+            rec = self.records[job_id]
+            self.scheduler.allocate(job_id, rec.spec.devices)
+            if rec.state == JobState.PENDING:
+                self._start_fresh(rec)
+            else:
+                self._restore_job(rec)
+
+    def _start_fresh(self, rec: JobRecord) -> None:
+        wl = self.factory(rec.spec, rec.attempt)
+        wl.start()
+        self._register(rec, wl)
+        rec.transition(JobState.RUNNING)
+
+    def _restore_job(self, rec: JobRecord) -> None:
+        job_id = rec.spec.job_id
+        now = self.clock()
+        rec.recovery.mark_scheduled(now)
+        rec.transition(JobState.RESTORING)
+        rec.attempt += 1
+        wl = self.factory(rec.spec, rec.attempt)
+        t0 = self.clock()
+        try:
+            restored_step = wl.restore()
+        except FileNotFoundError:
+            # interrupted before any image existed: cold restart
+            wl.start()
+            restored_step = 0
+        restore_s = self.clock() - t0
+        rec.step = restored_step
+        meta = {"restore_wall_s": restore_s}
+        if getattr(wl, "session", None) is not None:
+            stats = wl.session.last_stats
+            meta.update({k: stats[k] for k in
+                         ("read_s", "decompress_s", "place_s",
+                          "topology_mode") if k in stats})
+        rec.recovery.mark_restored(self.clock(),
+                                   restored_step=restored_step, **meta)
+        self._register(rec, wl)
+        rec.transition(JobState.RUNNING)
+        inc = rec.recovery.current
+        if inc is not None and restored_step >= inc["step_at_interrupt"]:
+            # dump landed exactly at the interrupt step: nothing to replay
+            rec.recovery.mark_caught_up(self.clock())
+        rec.save()
+
+    def _register(self, rec: JobRecord, wl) -> None:
+        job_id = rec.spec.job_id
+        self.workloads[job_id] = wl
+        self.detector.register(job_id)
+        # signal-handler tier: delivery is timestamped into the job
+        # record the moment the scheduler sends it, so `repro jobs`
+        # shows who was asked to yield even before the poll-side ack
+        self.channel.register(
+            job_id, lambda sig, rec=rec: rec.events.append(
+                {"t": self.clock(), "signal": sig.value,
+                 "step": rec.step}))
+        if getattr(wl, "session", None) is not None:
+            # glue: measured frozen windows feed τ* with no hand-wiring
+            wl.session.set_planner(self.planners[job_id])
+
+    # ------------------------------------------------------------- slices
+    def _running_jobs(self) -> List[str]:
+        return [j for j, r in self.records.items()
+                if r.state == JobState.RUNNING and j in self.workloads]
+
+    def _run_slices(self) -> int:
+        from repro.api.session import SnapshotWriteFailed
+        from repro.runtime.trainer import SimulatedFailure
+        ran = 0
+        for job_id in self._running_jobs():
+            rec = self.records[job_id]
+            wl = self.workloads[job_id]
+            now = self.clock()
+            if self.channel.pending(job_id) == Signal.KILL:
+                # no grace window: the job just disappears; the detector
+                # notices via the missed heartbeats
+                self.channel.consume(job_id)
+                self._crash_t[job_id] = now
+                self.workloads.pop(job_id, None)
+                continue
+            prev_step = rec.step
+            try:
+                out = wl.run_slice(self.cfg.slice_steps,
+                                   preempt=self.channel.checker(job_id))
+            except SnapshotWriteFailed as e:
+                # in-band abort: a background dump failed; the job stops
+                # promptly instead of trusting phantom checkpoints
+                self._fail_write_error(rec, now, e)
+                continue
+            except SimulatedFailure:
+                # crash: the "process" dies silently — heartbeats stop,
+                # detection happens at the deadline like a real dead node.
+                # Record the true progress at death so the incident's
+                # replay accounting covers the partially-executed slice.
+                rec.step = wl.step
+                rec.save()
+                self._crash_t[job_id] = self.clock()
+                self.workloads.pop(job_id, None)
+                continue
+            ran += 1
+            rec.step = wl.step
+            rec.goodput.record_slice(prev_step, rec.step, out["wall_s"])
+            self.detector.heartbeat(job_id)
+            self._update_catch_up(rec)
+            if out.get("preempted"):
+                self._freeze_and_yield(rec, wl, out)
+                continue
+            if getattr(wl, "session", None) is not None:
+                latest = wl.session.latest_step()
+                if latest is not None:
+                    rec.last_ckpt_step = max(rec.last_ckpt_step or 0, latest)
+            if wl.done:
+                try:
+                    wl.finish()            # drain pending async writes
+                except Exception as e:
+                    # the job's last dump never committed: this is a
+                    # write_error fault, not a completed job
+                    self._fail_write_error(rec, now, e)
+                    continue
+                self.final[job_id] = {"digest": wl.digest(),
+                                      "step": rec.step,
+                                      "jit_triggers": getattr(
+                                          wl, "jit_triggers", 0)}
+                rec.transition(JobState.DONE)
+                self._evict(job_id)
+                continue
+            try:
+                self._maybe_checkpoint(rec, wl, out)
+            except Exception as e:
+                # a dump that fails at freeze/commit time (e.g. a pending
+                # async failure re-raised by wait_pending) is the same
+                # fault as an in-slice write_error: stop the job promptly
+                self._fail_write_error(rec, now, e)
+                continue
+            rec.save()
+        return ran
+
+    def _fail_write_error(self, rec: JobRecord, t_interrupt: float,
+                          exc: BaseException) -> None:
+        """A snapshot write failed for this job: open an incident, mark
+        it FAILED, and release its resources — never the whole loop."""
+        rec.recovery.open("write_error", t_interrupt=t_interrupt,
+                          t_detect=self.clock(),
+                          step_at_interrupt=rec.step,
+                          last_ckpt_step=rec.last_ckpt_step)
+        rec.transition(JobState.FAILED, write_error=repr(exc))
+        self._evict(rec.spec.job_id)
+
+    def _update_catch_up(self, rec: JobRecord) -> None:
+        inc = rec.recovery.current
+        if (inc is not None and inc["t_restored"] is not None
+                and rec.step >= inc["step_at_interrupt"]):
+            rec.recovery.mark_caught_up(self.clock())
+
+    def _freeze_and_yield(self, rec: JobRecord, wl, out) -> None:
+        job_id = rec.spec.job_id
+        sig = self.channel.consume(job_id)
+        rec.transition(JobState.FREEZING, signal=getattr(sig, "value", sig),
+                       ckpt_path=out.get("ckpt_path"))
+        try:
+            wl.finish()               # drain async writers: image committed
+        except Exception as e:
+            # the checkpoint-on-signal never landed: the job yields as
+            # FAILED and its restore falls back to the previous image
+            self._fail_write_error(rec, self.clock(), e)
+            return
+        rec.last_ckpt_step = rec.step
+        now = self.clock()
+        rec.recovery.open("preemption", t_interrupt=now, t_detect=now,
+                          step_at_interrupt=rec.step,
+                          last_ckpt_step=rec.step)
+        rec.transition(JobState.PREEMPTED)
+        self._evict(job_id)
+
+    # ----------------------------------------------------------- cadence
+    def _maybe_checkpoint(self, rec: JobRecord, wl, out) -> None:
+        job_id = rec.spec.job_id
+        last = rec.last_ckpt_step or 0
+        since = rec.step - last
+        step_time = out["wall_s"] / max(out.get("steps", 1), 1)
+        due = False
+        jit = False
+        if rec.spec.ckpt_every > 0:
+            due = since >= rec.spec.ckpt_every
+        else:
+            # τ*-driven cadence: the planner's cost estimate tracks the
+            # session's measured frozen windows (set_planner glue)
+            due = since >= self.planners[job_id].steps_between_checkpoints(
+                step_time)
+        if self.stragglers[job_id].record(step_time):
+            cool = rec.step - self._last_jit.get(job_id, -10**9)
+            if cool >= self.cfg.jit_cooldown_steps:
+                due = jit = True
+                self._last_jit[job_id] = rec.step
+        if due and since > 0:
+            wl.checkpoint(rec.step)
+            rec.last_ckpt_step = rec.step
+            rec.events.append({"t": self.clock(), "checkpoint": rec.step,
+                               "jit": jit})
+
+    # ----------------------------------------------------------- summary
+    def summary(self) -> Dict[str, Any]:
+        now = self.clock()
+        wall = now - (self.t0 if self.t0 is not None else now)
+        jobs = {}
+        useful_s = 0.0
+        for job_id, rec in self.records.items():
+            job_wall = ((rec.finished_t or now) - rec.created_t) or 1e-9
+            useful_s += rec.goodput.useful_step_seconds()
+            jobs[job_id] = {
+                "kind": rec.spec.kind,
+                "priority": rec.spec.priority,
+                "state": rec.state.value,
+                "step": rec.step,
+                "total_steps": rec.spec.total_steps,
+                "attempts": rec.attempt + 1,
+                "restarts": rec.restarts,
+                "goodput": rec.goodput.goodput(job_wall),
+                "recovery": rec.recovery.breakdown(),
+                "recovery_totals": rec.recovery.totals(),
+                "checkpoints": sum(1 for e in rec.events
+                                   if "checkpoint" in e),
+                "jit_checkpoints": (
+                    sum(1 for e in rec.events if e.get("jit"))
+                    + self.final.get(job_id, {}).get("jit_triggers", 0)),
+                "last_ckpt_step": rec.last_ckpt_step,
+                "digest": self.final.get(job_id, {}).get("digest"),
+            }
+        return {"wall_s": wall, "ticks": self.ticks,
+                "capacity": self.cfg.capacity,
+                "cluster_goodput": useful_s / wall if wall > 0 else 0.0,
+                "all_done": all(r.state == JobState.DONE
+                                for r in self.records.values()),
+                "jobs": jobs}

@@ -1,0 +1,170 @@
+"""Recovery-time accounting: per-incident phase breakdown + goodput.
+
+The paper's headline numbers are *recovery time* and *steady-state
+overhead*; a multi-tenant cluster adds the phases around the mechanism.
+Each interruption (preemption, failure, straggler-triggered JIT dump that
+turned into a reschedule) becomes one ``incident`` with four measured
+phases:
+
+    detect_s    interruption happened -> orchestrator noticed
+                (signal delivery is ~0; heartbeat death costs the deadline)
+    schedule_s  noticed -> scheduler found capacity again
+    restore_s   restore started -> state back on devices (dominated by
+                image read; the engine's read_s/place_s live in meta)
+    replay_s    restored step -> step at interruption re-reached (work
+                lost since the last checkpoint, re-executed)
+
+Goodput is useful-step-seconds / wall-clock: a step's cost counts as
+useful once — re-executions of replayed steps count only against the
+denominator.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+PHASES = ("detect_s", "schedule_s", "restore_s", "replay_s")
+
+
+class RecoveryLog:
+    """Timestamped incidents for one job; at most one open at a time."""
+
+    def __init__(self) -> None:
+        self.incidents: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------ record
+    def open(self, cause: str, t_interrupt: float, t_detect: float,
+             step_at_interrupt: int,
+             last_ckpt_step: Optional[int]) -> Dict[str, Any]:
+        inc = {"cause": cause,
+               "t_interrupt": t_interrupt,
+               "t_detect": t_detect,
+               "t_scheduled": None,
+               "t_restored": None,
+               "t_caught_up": None,
+               "step_at_interrupt": step_at_interrupt,
+               "last_ckpt_step": last_ckpt_step,
+               "restored_step": None,
+               "meta": {}}
+        self.incidents.append(inc)
+        return inc
+
+    @property
+    def current(self) -> Optional[Dict[str, Any]]:
+        if self.incidents and self.incidents[-1]["t_caught_up"] is None:
+            return self.incidents[-1]
+        return None
+
+    def mark_scheduled(self, t: float) -> None:
+        if self.current is not None:
+            self.current["t_scheduled"] = t
+
+    def mark_restored(self, t: float, restored_step: int,
+                      **meta: Any) -> None:
+        if self.current is not None:
+            self.current["t_restored"] = t
+            self.current["restored_step"] = restored_step
+            self.current["meta"].update(meta)
+
+    def mark_caught_up(self, t: float) -> None:
+        if self.current is not None:
+            self.current["t_caught_up"] = t
+
+    # ------------------------------------------------------------ report
+    @staticmethod
+    def _breakdown(inc: Dict[str, Any]) -> Dict[str, Any]:
+        def gap(a, b):
+            if inc[a] is None or inc[b] is None:
+                return None
+            return max(0.0, inc[b] - inc[a])
+
+        out = {"cause": inc["cause"],
+               "detect_s": gap("t_interrupt", "t_detect"),
+               "schedule_s": gap("t_detect", "t_scheduled"),
+               "restore_s": gap("t_scheduled", "t_restored"),
+               "replay_s": gap("t_restored", "t_caught_up"),
+               "total_s": gap("t_interrupt", "t_caught_up"),
+               "steps_replayed": None,
+               "meta": dict(inc["meta"])}
+        if inc["restored_step"] is not None:
+            out["steps_replayed"] = (inc["step_at_interrupt"]
+                                     - inc["restored_step"])
+        return out
+
+    def breakdown(self) -> List[Dict[str, Any]]:
+        return [self._breakdown(i) for i in self.incidents]
+
+    def totals(self) -> Dict[str, float]:
+        """Phase sums across closed incidents (the bench's table rows)."""
+        tot = {k: 0.0 for k in PHASES + ("total_s",)}
+        tot["incidents"] = 0
+        for b in self.breakdown():
+            if b["total_s"] is None:
+                continue
+            tot["incidents"] += 1
+            for k in PHASES + ("total_s",):
+                if b[k] is not None:
+                    tot[k] += b[k]
+        return tot
+
+    # ------------------------------------------------------- persistence
+    def to_list(self) -> List[Dict[str, Any]]:
+        return [dict(i) for i in self.incidents]
+
+    @classmethod
+    def from_list(cls, items: List[Dict[str, Any]]) -> "RecoveryLog":
+        log = cls()
+        log.incidents = [dict(i) for i in items]
+        return log
+
+
+class GoodputMeter:
+    """Useful-step-seconds / wall-clock, replay-aware.
+
+    ``record_slice(start_step, end_step, wall_s)`` attributes the slice's
+    wall time to the steps in ``[start_step, end_step)``; a step index
+    executed more than once (replay after restoring to an older
+    checkpoint) is useful only once.
+    """
+
+    def __init__(self) -> None:
+        self.step_seconds = 0.0         # cost of every executed step
+        self.steps_executed = 0         # including re-executions
+        self.max_step = 0               # highest step index completed
+
+    def record_slice(self, start_step: int, end_step: int,
+                     wall_s: float) -> None:
+        n = max(0, end_step - start_step)
+        if n == 0:
+            return
+        self.steps_executed += n
+        self.step_seconds += wall_s
+        self.max_step = max(self.max_step, end_step)
+
+    @property
+    def useful_steps(self) -> int:
+        return self.max_step
+
+    def useful_step_seconds(self) -> float:
+        if self.steps_executed == 0:
+            return 0.0
+        return self.step_seconds * (self.useful_steps
+                                    / self.steps_executed)
+
+    def goodput(self, wall_clock_s: float) -> float:
+        if wall_clock_s <= 0:
+            return 0.0
+        return self.useful_step_seconds() / wall_clock_s
+
+    # ------------------------------------------------------- persistence
+    def to_dict(self) -> Dict[str, float]:
+        return {"step_seconds": self.step_seconds,
+                "steps_executed": self.steps_executed,
+                "max_step": self.max_step}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "GoodputMeter":
+        m = cls()
+        m.step_seconds = d.get("step_seconds", 0.0)
+        m.steps_executed = d.get("steps_executed", 0)
+        m.max_step = d.get("max_step", 0)
+        return m

@@ -1,0 +1,91 @@
+"""Reproducible scenario matrix — the bench/CI entry points.
+
+A scenario is a deterministic multi-tenant script: which jobs exist, who
+arrives when, and which faults are injected.  The same matrix drives
+``python -m repro orchestrate``, ``benchmarks/bench_orchestrator.py``,
+and the CI smoke job, so the paper-style comparison (engine × scenario)
+is one function call from anywhere.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.orchestrator.job import JobSpec
+from repro.orchestrator.orchestrator import (Orchestrator,
+                                             OrchestratorConfig)
+from repro.orchestrator.workloads import make_workload_factory
+
+SCENARIOS = ("preemption", "failure", "straggler", "mixed")
+
+
+def scenario_specs(name: str, total_steps: int = 10,
+                   kind: str = "train") -> List[JobSpec]:
+    """Job set for one named scenario (deterministic by construction)."""
+    if name == "preemption":
+        # low-priority job is mid-run when a high-priority job arrives;
+        # capacity 1 forces checkpoint-on-signal + reschedule
+        return [
+            JobSpec("lo", kind=kind, priority=0, total_steps=total_steps,
+                    ckpt_every=0),
+            JobSpec("hi", kind=kind, priority=5,
+                    total_steps=max(total_steps // 2, 2), arrive_tick=2),
+        ]
+    if name == "failure":
+        # periodic checkpoints + a mid-run crash; heartbeat detection,
+        # restore from the newest image, replay the gap
+        return [
+            JobSpec("crashy", kind=kind, priority=1,
+                    total_steps=total_steps, ckpt_every=2,
+                    fail_at_step=total_steps // 2 + 1),
+        ]
+    if name == "straggler":
+        # injected stall -> StragglerMonitor flags it -> JIT checkpoint;
+        # the stall lands late enough that the monitors have their minimum
+        # sample history (8 steps) but with slices to spare afterwards so
+        # the orchestrator-level trigger also gets a turn
+        return [
+            JobSpec("slowpoke", kind=kind, priority=1,
+                    total_steps=max(total_steps, 12),
+                    straggle_at_step=8),
+        ]
+    if name == "mixed":
+        # the CI smoke: one preemption + one injected failure sharing
+        # the cluster — both must recover step-exact
+        return [
+            JobSpec("lo", kind=kind, priority=0, total_steps=total_steps,
+                    ckpt_every=2, fail_at_step=None),
+            JobSpec("crashy", kind=kind, priority=1,
+                    total_steps=total_steps, ckpt_every=2,
+                    fail_at_step=total_steps // 2 + 1),
+            JobSpec("hi", kind=kind, priority=5,
+                    total_steps=max(total_steps // 2, 2), arrive_tick=2),
+        ]
+    raise ValueError(f"unknown scenario {name!r}; pick from {SCENARIOS}")
+
+
+def run_scenario(name: str, run_dir: str, options=None, mesh=None,
+                 total_steps: int = 10, kind: str = "train",
+                 capacity: Optional[int] = None,
+                 config: Optional[OrchestratorConfig] = None) -> Dict:
+    """Build and run one scenario; returns the orchestrator summary."""
+    from repro.orchestrator.job import jobs_dir
+    import os
+    if os.path.isdir(jobs_dir(run_dir)):
+        # stale job records + images from a previous invocation would be
+        # restored silently (restore picks the newest image in the job's
+        # dir) — a scenario is only reproducible in a fresh run_dir
+        raise ValueError(
+            f"{run_dir!r} already holds an orchestrator run "
+            f"({jobs_dir(run_dir)} exists); pick a fresh run_dir")
+    specs = scenario_specs(name, total_steps=total_steps, kind=kind)
+    if config is None:
+        # capacity 1 for single-job scenarios exercises nothing extra but
+        # keeps wall time down; preemption scenarios need contention
+        cap = capacity if capacity is not None else (
+            1 if name in ("preemption", "failure", "straggler") else 2)
+        config = OrchestratorConfig(capacity=cap, slice_steps=2)
+    orch = Orchestrator(run_dir, specs,
+                        workload_factory=make_workload_factory(
+                            run_dir, options=options, mesh=mesh),
+                        config=config)
+    return orch.run()

@@ -23,7 +23,22 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Any, List, Mapping, Optional
+
+# preference order for the measured blocked window in an engine stats
+# dict: async dumps block only for the device→host copy (locked_total_s),
+# sync dumps for the whole dump+write (total_s); frozen_s (capture phase
+# only) is the floor either way
+_WINDOW_KEYS = ("locked_total_s", "total_s", "frozen_s")
+
+
+def frozen_window_s(stats: Mapping[str, Any]) -> Optional[float]:
+    """Extract the job-blocked window δ from ``engine.last_stats``."""
+    for k in _WINDOW_KEYS:
+        v = stats.get(k)
+        if v is not None:
+            return float(v)
+    return None
 
 
 def young_daly(ckpt_cost_s: float, mtbf_s: float) -> float:
@@ -56,6 +71,15 @@ class IntervalPlanner:
 
     def record_checkpoint_cost(self, blocked_s: float) -> None:
         self._costs.append(float(blocked_s))
+
+    def observe(self, stats: Mapping[str, Any]) -> Optional[float]:
+        """Feed one dump's measured stats (``engine.last_stats``) — the
+        blocked window is extracted with the async/sync preference above.
+        ``CheckpointSession.set_planner`` calls this after every dump."""
+        w = frozen_window_s(stats)
+        if w is not None:
+            self.record_checkpoint_cost(w)
+        return w
 
     def record_failure(self, t_s: float) -> None:
         self._failure_times.append(float(t_s))

@@ -9,7 +9,7 @@ for fast cold-start).
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -89,14 +89,51 @@ class DecodeServer:
 
         return walk(cache)
 
-    def decode(self, n_tokens: int) -> np.ndarray:
-        for _ in range(n_tokens):
+    def decode_until(self, target_pos: int,
+                     preempt: Optional[Callable[[], bool]] = None,
+                     fail_at: Optional[int] = None,
+                     straggle_at: Optional[int] = None) -> Dict[str, Any]:
+        """Decode to `target_pos`; resumable and preemptible.
+
+        Mirrors ``Trainer.run_until``: `preempt` is polled between tokens
+        and triggers a checkpoint-on-signal (``session.frozen`` at the
+        current position) before yielding; a failed async snapshot write
+        aborts the generation promptly with :class:`SnapshotWriteFailed`.
+        """
+        from repro.api.session import SnapshotWriteFailed
+        t0 = time.perf_counter()
+        executed = 0
+        preempted = False
+        ckpt_path = None
+        while self.pos < target_pos:
+            if self.session.write_error is not None:
+                raise SnapshotWriteFailed(
+                    f"async snapshot write failed at pos {self.pos}: "
+                    f"{self.session.write_error}")
+            if preempt is not None and preempt():
+                with self.session.frozen(self.pos) as snap:
+                    pass                               # dump-and-yield
+                ckpt_path = snap.path
+                preempted = True
+                break
+            if fail_at is not None and self.pos == fail_at:
+                from repro.runtime.trainer import SimulatedFailure
+                raise SimulatedFailure(f"injected failure at pos {self.pos}")
+            if straggle_at is not None and self.pos == straggle_at:
+                time.sleep(0.25)                   # injected straggler
             last = jnp.asarray(self.tokens[:, -1])
             logits, self.cache = self._decode(self.params, self.cache,
                                               last, jnp.int32(self.pos))
             nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             self.tokens = np.concatenate([self.tokens, nxt[:, None]], axis=1)
             self.pos += 1
+            executed += 1
+        return {"steps": executed, "pos": self.pos, "preempted": preempted,
+                "ckpt_path": ckpt_path,
+                "wall_s": time.perf_counter() - t0}
+
+    def decode(self, n_tokens: int) -> np.ndarray:
+        self.decode_until(self.pos + n_tokens)
         return self.tokens
 
     # ------------------------------------------------------------- ckpt

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -156,12 +156,39 @@ class Trainer:
         return self.step
 
     # ------------------------------------------------------------- loop
-    def run(self, num_steps: int, fail_at: Optional[int] = None,
-            straggle_at: Optional[int] = None) -> Dict[str, Any]:
+    def run_until(self, target_step: int,
+                  preempt: Optional[Callable[[], bool]] = None,
+                  fail_at: Optional[int] = None,
+                  straggle_at: Optional[int] = None) -> Dict[str, Any]:
+        """Run to `target_step`; resumable and preemptible.
+
+        `preempt` is polled between steps (the SIGTERM-trap analogue): when
+        it fires the trainer checkpoints-on-signal — ``session.frozen``
+        dump at the current step — and returns with ``preempted=True``
+        instead of raising, so an orchestrator can release the devices and
+        reschedule the job.  A failed *async* snapshot write aborts the run
+        promptly with :class:`SnapshotWriteFailed` rather than surfacing at
+        the next explicit dump — the job must not keep running on the
+        assumption that its recent checkpoints exist.
+        """
+        from repro.api.session import SnapshotWriteFailed
         if self.params is None:
             self.initialize()
         t_loop = time.perf_counter()
-        for _ in range(num_steps):
+        executed = 0
+        preempted = False
+        ckpt_path = None
+        while self.step < target_step:
+            if self.session.write_error is not None:
+                raise SnapshotWriteFailed(
+                    f"async snapshot write failed at step {self.step}: "
+                    f"{self.session.write_error}")
+            if preempt is not None and preempt():
+                with self.session.frozen(self.step) as snap:
+                    pass                               # dump-and-yield
+                ckpt_path = snap.path
+                preempted = True
+                break
             if fail_at is not None and self.step == fail_at:
                 raise SimulatedFailure(f"injected failure at {self.step}")
             batch_np = self.pipeline.next()
@@ -176,11 +203,25 @@ class Trainer:
             self.metrics_history["loss"].append(loss)
             dt = time.perf_counter() - t0
             self.step += 1
+            executed += 1
             if self.straggler.record(dt):
                 self.jit_ckpt.on_signal(self.step)     # just-in-time ckpt
             if (self.tcfg.ckpt_every
                     and self.step % self.tcfg.ckpt_every == 0):
                 self.session.checkpoint(self.step)
+        return {"steps": executed, "step": self.step,
+                "preempted": preempted, "ckpt_path": ckpt_path,
+                "loss": (self.metrics_history["loss"][-1]
+                         if self.metrics_history["loss"] else None),
+                "wall_s": time.perf_counter() - t_loop}
+
+    def run(self, num_steps: int, fail_at: Optional[int] = None,
+            straggle_at: Optional[int] = None) -> Dict[str, Any]:
+        if self.params is None:
+            self.initialize()
+        t_loop = time.perf_counter()
+        self.run_until(self.step + num_steps, fail_at=fail_at,
+                       straggle_at=straggle_at)
         self.session.wait_pending()
         return {"steps": self.step,
                 "loss": self.metrics_history["loss"][-1],

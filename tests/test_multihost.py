@@ -102,6 +102,48 @@ def test_wait_committed_times_out(tmp_path):
         c.wait_committed()
 
 
+def test_coordinator_commit_times_out_without_all_hosts(tmp_path):
+    """The commit() path itself (barrier + manifest cut) raises
+    BarrierTimeout when a host never prepares — and crucially no manifest
+    is written, so the step does not exist."""
+    run = str(tmp_path)
+    _write_host_pack(run, 7, 0, np.zeros((2, 2), np.float32))
+    c = MultiHostCommit(run, 7, 0, num_hosts=2, deadline_s=0.2)
+    c.prepare()
+    called = []
+    with pytest.raises(BarrierTimeout):
+        c.commit(lambda: called.append(1))
+    assert not called                          # manifest writer never ran
+    assert not c.committed()
+    assert SnapshotStore(run).list_steps() == []
+
+
+def test_phase2_crash_restores_previous_committed_snapshot(tmp_path):
+    """Coordinator dies after the barrier but before cutting MANIFEST:
+    the newer step is invisible and restore falls back to the previous
+    committed snapshot (the cross-host torn-image guarantee, end to end
+    through the engine)."""
+    run = str(tmp_path)
+    good = {"w": np.full((8, 8), 3.0, np.float32)}
+    eng = SnapshotEngine(run)
+    eng.attach(lambda: {"train_state": good})
+    eng.checkpoint(1)                          # committed image at step 1
+
+    # step 2: phase 1 completes on this host (pack + PREPARED marker),
+    # then the coordinator crashes before phase 2 — no MANIFEST
+    _write_host_pack(run, 2, 0, np.full((4, 4), 9.0, np.float32))
+    MultiHostCommit(run, 2, 0, num_hosts=2).prepare()
+    assert os.path.isdir(snapshot_dir(run, 2))
+
+    store = SnapshotStore(run)
+    assert store.list_steps() == [1]           # step 2 does not exist
+    eng2 = SnapshotEngine(run)
+    eng2.attach(lambda: {"train_state": None})
+    restored = eng2.restore()                  # newest *valid* image
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["w"]), good["w"])
+
+
 # ---------------------------------------------------------------- τ*
 def test_young_daly_formula():
     assert young_daly(60.0, 6 * 3600.0) == pytest.approx(
