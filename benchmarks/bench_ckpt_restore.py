@@ -42,7 +42,7 @@ def run(sizes=("S", "M", "L", "XL")) -> None:
     import jax
     import jax.numpy as jnp
 
-    from benchmarks.common import (LADDER, POLICY, Timer, ladder_config,
+    from benchmarks.common import (POLICY, Timer, ladder_config,
                                    mesh1)
     from repro.api import CheckpointSession
     from repro.optim import AdamW

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import shutil
 import tempfile
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ iteration count, while CRIUgpu's steady state is exactly the baseline
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp

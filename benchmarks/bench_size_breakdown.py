@@ -8,17 +8,15 @@ construction for any real training job.
 """
 from __future__ import annotations
 
-import os
 import shutil
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import POLICY, emit, ladder_config, mesh1
+from benchmarks.common import POLICY, emit, mesh1
 from repro.configs import get_smoke_config
 from repro.api import CheckpointSession
-from repro.core.snapshot_io import SnapshotStore
 from repro.data import TokenPipeline
 from repro.models.encdec import build_model
 from repro.optim import AdamW

@@ -1,0 +1,191 @@
+"""Cross-host checkpoint transfer: cold CAS vs warm CAS vs full copy.
+
+The paper's multi-tenant recovery story needs checkpoint images to reach
+the host a preempted job restarts on; what this bench measures is the
+content-addressed delta path against the copy-everything baseline on the
+*incremental-chain workload* (one full image + K delta children, a fixed
+fraction of entries mutated per step — the shape Check-N-Run-style
+training checkpoints actually have):
+
+  full   DirReplicator: whole files, the pre-CAS data path
+  cold   DeltaReplicator into an empty CAS (first contact with the host)
+  warm   DeltaReplicator into a CAS that already holds the chain up to
+         step K-1 (the job was migrated or replicated there before) —
+         only the newest delta's chunks move
+
+plus the end-to-end recovery wall (transfer + restore on the target),
+the number the orchestrator's RecoveryLog attributes to the transfer and
+restore phases of a migration incident.
+
+Byte counts are deterministic given ``--seed`` (the regression gate in CI
+holds them to a tight tolerance); wall-clock is indicative on shared
+runners (loose tolerance).
+
+Usage::
+
+    python -m benchmarks.bench_transfer --json BENCH_transfer.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+RECORDS: dict = {}
+
+
+def _emit(name, value, unit=""):
+    from benchmarks.common import emit
+    emit(name, value, unit)
+    RECORDS[name] = value
+
+
+def build_chain(run_dir: str, steps: int, entries: int, entry_kb: int,
+                mutate: float, seed: int):
+    """One full image + (steps-1) incremental children; `mutate` of the
+    entries get fresh content each step."""
+    from repro.api import CheckpointOptions, CheckpointSession
+    rng = np.random.default_rng(seed)
+    state = {f"t{i:03d}": rng.integers(0, 8, size=entry_kb * 256)
+             .astype(np.float32) for i in range(entries)}
+    opts = CheckpointOptions(mode="sync", incremental=True, pack_format=2)
+    session = CheckpointSession(run_dir, opts, backend="host")
+    session.attach(lambda: {"train_state": state})
+    n_mut = max(1, int(entries * mutate))
+    names = sorted(state)
+    for step in range(1, steps + 1):
+        if step > 1:
+            # rotate the mutation window so every chain step stays
+            # referenced by the final image (a genuine delta chain, not
+            # one hot entry set) — the closure then spans the whole chain
+            start = ((step - 2) * n_mut) % entries
+            for i in range(start, start + n_mut):
+                k = names[i % entries]
+                state[k] = rng.integers(0, 8, size=entry_kb * 256) \
+                    .astype(np.float32)
+        session.checkpoint(step)
+    return session
+
+
+def _restore_wall(run_dir: str) -> float:
+    from repro.core.engine import SnapshotEngine
+    eng = SnapshotEngine(run_dir, backend="host")
+    eng.attach(lambda: {"train_state": None})
+    t0 = time.perf_counter()
+    eng.restore()
+    return time.perf_counter() - t0
+
+
+def run(steps: int = 6, entries: int = 16, entry_kb: int = 128,
+        mutate: float = 0.25, seed: int = 0, repeats: int = 3) -> None:
+    from repro.core.replication import DirReplicator
+    from repro.transfer import DeltaReplicator
+    from repro.transfer.delta import transfer_closure
+
+    for k, v in [("steps", steps), ("entries", entries),
+                 ("entry_kb", entry_kb), ("mutate", mutate)]:
+        _emit(f"transfer.workload.{k}", v)
+
+    src = tempfile.mkdtemp(prefix="bench_xfer_src_")
+    scratch = []
+    try:
+        session = build_chain(src, steps, entries, entry_kb, mutate, seed)
+        final = session.latest_step()
+        closure = transfer_closure(session.store, final)
+        _emit("transfer.workload.closure_steps", len(closure))
+
+        def best_of(fn):
+            """min wall over `repeats` runs into fresh targets (shared
+            boxes: the fastest run is the least contaminated), plus the
+            last run's stats/target (byte counts are deterministic)."""
+            walls, stats, target = [], None, None
+            for _ in range(max(repeats, 1)):
+                target = tempfile.mkdtemp(prefix="bench_xfer_dst_")
+                scratch.append(target)
+                wall, stats = fn(target)
+                walls.append(wall)
+            return min(walls), stats, target
+
+        # ---- full copy (DirReplicator over the closure)
+        def full_copy(target):
+            rep = DirReplicator(target)
+            t0 = time.perf_counter()
+            nbytes = 0
+            for s in closure:
+                nbytes += rep.push(src, s)["bytes_copied"]
+            return time.perf_counter() - t0, {"bytes": nbytes}
+
+        full_wall, st, target = best_of(full_copy)
+        full_bytes = st["bytes"]
+        _emit("transfer.full.bytes", full_bytes, "B")
+        _emit("transfer.full.wall_s", full_wall, "s")
+        _emit("transfer.recovery.full_s",
+              full_wall + _restore_wall(target), "s")
+
+        # ---- cold CAS (first delta contact: everything ships, but the
+        # CAS already dedups identical content across the chain)
+        def cold(target):
+            st = DeltaReplicator(target).push(src, final)
+            return st["push_s"], st
+
+        wall, st, target = best_of(cold)
+        _emit("transfer.cold.bytes", st["bytes_sent"], "B")
+        _emit("transfer.cold.dedup_bytes", st["bytes_reused"], "B")
+        _emit("transfer.cold.wall_s", wall, "s")
+        _emit("transfer.recovery.cold_s",
+              wall + _restore_wall(target), "s")
+
+        # ---- warm CAS (chain minus the newest delta already present:
+        # the steady state of repeated migration/replication)
+        def warm(target):
+            rep = DeltaReplicator(target)
+            rep.push(src, closure[-2] if len(closure) > 1 else final)
+            st = rep.push(src, final)
+            return st["push_s"], st
+
+        wall, st, target = best_of(warm)
+        _emit("transfer.warm.bytes", st["bytes_sent"], "B")
+        _emit("transfer.warm.dedup_bytes", st["bytes_reused"], "B")
+        _emit("transfer.warm.wall_s", wall, "s")
+        _emit("transfer.recovery.warm_s",
+              wall + _restore_wall(target), "s")
+
+        # ---- the headline ratio the acceptance criteria gate on
+        _emit("transfer.warm_vs_full.byte_ratio",
+              st["bytes_sent"] / max(full_bytes, 1))
+        _emit("transfer.cold_vs_full.byte_ratio",
+              RECORDS["transfer.cold.bytes"] / max(full_bytes, 1))
+    finally:
+        shutil.rmtree(src, ignore_errors=True)
+        for d in scratch:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=6,
+                    help="chain length (1 full + N-1 deltas)")
+    ap.add_argument("--entries", type=int, default=16)
+    ap.add_argument("--entry-kb", type=int, default=128)
+    ap.add_argument("--mutate", type=float, default=0.25,
+                    help="fraction of entries rewritten per step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per mode (min wins)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all records as JSON (BENCH_transfer.json)")
+    args = ap.parse_args(argv)
+    run(steps=args.steps, entries=args.entries, entry_kb=args.entry_kb,
+        mutate=args.mutate, seed=args.seed, repeats=args.repeats)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RECORDS, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,12 +7,7 @@ tee one machine-readable stream.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Dict, List
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.sharding import get_policy

@@ -1,0 +1,162 @@
+"""Bench regression gate: diff fresh BENCH_*.json against committed
+baselines and fail on regression.
+
+Baselines live in ``benchmarks/baselines/<same-basename>.json`` and are
+ordinary bench outputs (flat ``{metric: value}``), so refreshing one is
+just re-running the bench and committing the file.
+
+Metrics are classified by name, because their stability differs:
+
+  bytes   ``*bytes*`` / ``*.byte_ratio`` / ``*ratio*`` — deterministic
+          given the bench's fixed seed; tight tolerance (``--tolerance``,
+          default 10%); lower is better.
+  speedup ``*speedup*`` — higher is better; time-class tolerance.
+  time    ``*_s`` / ``*_ms`` / ``*wall*`` — absolute sub-second wall
+          clock swings several-x run-to-run on shared runners, so it is
+          informational by default (printed, never gated); pass
+          ``--time-tolerance`` explicitly to gate it (2.0 = a 3x
+          slowdown fails); lower is better.  ``speedup`` metrics are
+          ratios of two times from the same run and stay gated.
+  info    everything else (workload params, counts) — compared for
+          *presence* only: a metric that disappears from the fresh run
+          is a failure (a renamed metric must rename its baseline, not
+          silently stop being gated).
+
+Exit status: 0 when every gated metric is within tolerance, 1 otherwise.
+
+Usage (what CI runs)::
+
+    python -m benchmarks.compare_bench BENCH_transfer.json \\
+        --baseline-dir benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def classify(name: str) -> str:
+    low = name.lower()
+    if "speedup" in low:
+        return "speedup"
+    if "dedup" in low:
+        return "info"     # more dedup is an improvement, never a regression
+    if "bytes" in low or "ratio" in low:
+        return "bytes"
+    if low.endswith("_s") or low.endswith("_ms") or "wall" in low:
+        return "time"
+    return "info"
+
+
+SPEEDUP_TOLERANCE = 2.0       # a speedup may halve-and-some before failing
+
+
+def check_metric(name: str, base: float, fresh: float,
+                 tol_bytes: float, tol_time: Optional[float]
+                 ) -> Tuple[bool, Optional[float]]:
+    """(ok, relative regression).  Regression > 0 means worse than the
+    baseline by that fraction in the metric's bad direction.
+    ``tol_time=None`` leaves wall-clock metrics informational."""
+    kind = classify(name)
+    if kind == "info":
+        return True, None
+    if not isinstance(base, (int, float)) or \
+            not isinstance(fresh, (int, float)):
+        return True, None
+    if base == 0:
+        return (fresh == 0) if kind == "bytes" else True, None
+    if kind == "speedup":                     # higher is better
+        if fresh <= 0:
+            return False, float("inf")
+        reg = base / fresh - 1                # 4x -> 2x == 100% worse
+        return reg <= SPEEDUP_TOLERANCE, reg
+    reg = fresh / base - 1                    # lower is better
+    if kind == "time":
+        return (True if tol_time is None else reg <= tol_time), reg
+    return reg <= tol_bytes, reg
+
+
+def compare_file(fresh_path: str, base_path: str, tol_bytes: float,
+                 tol_time: Optional[float]) -> List[str]:
+    """Human-readable regression list (empty = gate passes)."""
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    problems = []
+    rows = []
+    for name in sorted(base):
+        if name not in fresh:
+            problems.append(f"{name}: present in baseline, missing from "
+                            f"fresh run (renamed without updating the "
+                            f"baseline?)")
+            continue
+        b, fv = base[name], fresh[name]
+        ok, reg = check_metric(name, b, fv, tol_bytes, tol_time)
+        mark = "ok" if ok else "REGRESSION"
+        if reg is not None:
+            rows.append((name, b, fv, reg, mark))
+        if not ok:
+            kind = classify(name)
+            tol = (tol_bytes if kind == "bytes" else
+                   SPEEDUP_TOLERANCE if kind == "speedup" else tol_time)
+            problems.append(
+                f"{name}: baseline {b:.6g} -> fresh {fv:.6g} "
+                f"({reg:+.1%} worse, {kind} tolerance {tol:.0%})")
+    if rows:
+        w = max(len(r[0]) for r in rows)
+        print(f"  {'metric'.ljust(w)}  {'baseline':>12}  {'fresh':>12} "
+              f" {'delta':>8}")
+        for name, b, fv, reg, mark in rows:
+            print(f"  {name.ljust(w)}  {b:>12.6g}  {fv:>12.6g} "
+                  f" {reg:>+7.1%}  {mark}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="+",
+                    help="freshly produced BENCH_*.json file(s)")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "baselines"),
+                    help="directory of committed baseline JSONs")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative tolerance for byte/ratio metrics")
+    ap.add_argument("--time-tolerance", type=float, default=None,
+                    help="gate wall-clock metrics at this relative "
+                         "tolerance (2.0 = three times as slow fails); "
+                         "default: informational only — sub-second wall "
+                         "clock swings several-x on shared runners")
+    args = ap.parse_args(argv)
+
+    failures: Dict[str, List[str]] = {}
+    for fresh_path in args.fresh:
+        base_path = os.path.join(args.baseline_dir,
+                                 os.path.basename(fresh_path))
+        print(f"== {fresh_path} vs {base_path}")
+        if not os.path.exists(base_path):
+            failures[fresh_path] = [f"no baseline at {base_path} — "
+                                    f"commit one to enable the gate"]
+            continue
+        problems = compare_file(fresh_path, base_path,
+                                args.tolerance, args.time_tolerance)
+        if problems:
+            failures[fresh_path] = problems
+
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for path, problems in failures.items():
+            for p in problems:
+                print(f"  {path}: {p}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate OK "
+          f"({len(args.fresh)} file(s) within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

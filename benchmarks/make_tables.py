@@ -122,6 +122,44 @@ def dataplane_table(recs):
     return "\n".join(out) if out else "(no BENCH_*.json artifacts found)"
 
 
+def fmt_bytes(n):
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.2f}{unit}"
+        n /= 1024
+
+
+def transfer_table(recs):
+    """Cross-host transfer & recovery-time table (from
+    BENCH_transfer.json): bytes moved + recovery wall per transfer mode
+    on the incremental-chain workload."""
+    out = []
+    for name, r in recs:
+        if "transfer.full.bytes" not in r:
+            continue
+        out.append(f"### {name}: checkpoint transfer & migration "
+                   f"(incremental chain, "
+                   f"{r.get('transfer.workload.steps', '?')} steps, "
+                   f"{r.get('transfer.workload.mutate', '?')} mutated "
+                   f"per step)\n")
+        out.append("| transfer | bytes moved | deduped | transfer wall "
+                   "(ms) | recovery incl. restore (ms) |")
+        out.append("|---|---|---|---|---|")
+        for mode, label in (("full", "full copy"),
+                            ("cold", "delta, cold CAS"),
+                            ("warm", "delta, warm CAS")):
+            out.append(
+                f"| {label} | {fmt_bytes(r[f'transfer.{mode}.bytes'])} | "
+                f"{fmt_bytes(r.get(f'transfer.{mode}.dedup_bytes', 0))} | "
+                f"{fmt(r[f'transfer.{mode}.wall_s'] * 1e3)} | "
+                f"{fmt(r[f'transfer.recovery.{mode}_s'] * 1e3)} |")
+        ratio = r.get("transfer.warm_vs_full.byte_ratio")
+        if ratio is not None:
+            out.append(f"\nwarm-CAS delta moves {ratio:.1%} of the bytes "
+                       f"of a full copy\n")
+    return "\n".join(out) if out else "(no BENCH_transfer.json artifacts)"
+
+
 def main():
     recs = load_all()
     print("## single-pod baseline roofline\n")
@@ -132,8 +170,11 @@ def main():
     print(memory_table(recs))
     print("\n## hillclimb iterations\n")
     print(perf_rows(recs))
+    bench = load_bench()
     print("\n## snapshot data plane (serial vs pipelined)\n")
-    print(dataplane_table(load_bench()))
+    print(dataplane_table(bench))
+    print("\n## checkpoint transfer & migration\n")
+    print(transfer_table(bench))
 
 
 if __name__ == "__main__":

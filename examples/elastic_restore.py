@@ -57,7 +57,7 @@ def main():
     session.register_host_state("data_cursor", lambda: {"step": 100},
                                 lambda st: None)
     session.checkpoint(100)
-    print(f"snapshot taken on mesh (4,2): 8 devices")
+    print("snapshot taken on mesh (4,2): 8 devices")
 
     print("=== node loss: restore onto mesh (2,2) — 4 devices ===")
     mesh_b = mesh_of((2, 2))

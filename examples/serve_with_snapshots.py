@@ -38,7 +38,7 @@ def main():
 
     batch = TokenPipeline(cfg, 4, 12, seed=7).next()
     srv.start(batch)
-    print(f"prefilled batch of 4 prompts (12 tokens each)")
+    print("prefilled batch of 4 prompts (12 tokens each)")
 
     srv.decode(5)
     print(f"decoded 5 tokens; pos={srv.pos}")

@@ -68,7 +68,11 @@ def capabilities() -> Dict[str, Any]:
             "striped_io": True,           # N pack files/host, appender each
             "pipelined_writer": True,     # capture → compress → write stages
             "chunk_dedup": True,          # incremental reuse at chunk grain
+            "delta_transfer": True,       # CAS have/want cross-host ship
+            "content_addressed_store": True,   # repro.transfer.ChunkStore
+            "migration": True,            # orchestrator migrate scenario
         },
+        "transfer_modes": ["copy", "delta"],
     }
 
 

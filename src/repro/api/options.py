@@ -17,6 +17,7 @@ import os
 from typing import Dict, Optional
 
 _MODES = ("sync", "async")
+_TRANSFERS = ("copy", "delta")
 
 # env-var names, one per field (the `criu_set_*` <-> CRIU_* convention)
 _ENV_PREFIX = "REPRO_CKPT_"
@@ -50,6 +51,12 @@ class CheckpointOptions:
                      on-demand-parallelism optimization).
     replicate_to     peer directory for snapshot replication (Gemini-style);
                      None disables.
+    transfer         how bytes reach the replication peer: "copy" (whole
+                     files, skipped when size+mtime match) or "delta"
+                     (content-addressed: only chunks missing from the
+                     peer's CAS ship — the cross-host migration path).
+    transfer_workers parallel chunk-ship lanes for delta transfer;
+                     0 = auto-size like io_threads.
     verify_restore   CRC-verify images before restoring from them (both the
                      newest-valid scan and explicitly requested steps).
     pack_format      2 (default): chunked/striped packs written by the
@@ -71,6 +78,8 @@ class CheckpointOptions:
     lock_timeout_s: float = 10.0
     restore_threads: int = 0
     replicate_to: Optional[str] = None
+    transfer: str = "copy"
+    transfer_workers: int = 0
     verify_restore: bool = True
     pack_format: int = 2
     io_threads: int = 0
@@ -96,6 +105,13 @@ class CheckpointOptions:
                                f"got {self.restore_threads!r}")
         if self.replicate_to is not None and not self.replicate_to:
             raise OptionsError("replicate_to must be a path or None")
+        if self.transfer not in _TRANSFERS:
+            raise OptionsError(f"transfer must be one of {_TRANSFERS}, "
+                               f"got {self.transfer!r}")
+        if not isinstance(self.transfer_workers, int) or \
+                self.transfer_workers < 0:
+            raise OptionsError("transfer_workers must be an int >= 0, "
+                               f"got {self.transfer_workers!r}")
         if self.pack_format not in (1, 2):
             raise OptionsError(f"pack_format must be 1 or 2, "
                                f"got {self.pack_format!r}")
@@ -140,6 +156,9 @@ class CheckpointOptions:
             lock_timeout_s=get("LOCK_TIMEOUT_S", float, cls.lock_timeout_s),
             restore_threads=get("RESTORE_THREADS", int, cls.restore_threads),
             replicate_to=get("REPLICATE_TO", str, cls.replicate_to),
+            transfer=get("TRANSFER", str, cls.transfer),
+            transfer_workers=get("TRANSFER_WORKERS", int,
+                                 cls.transfer_workers),
             verify_restore=get("VERIFY_RESTORE", as_bool, cls.verify_restore),
             pack_format=get("PACK_FORMAT", int, cls.pack_format),
             io_threads=get("IO_THREADS", int, cls.io_threads),
@@ -156,6 +175,8 @@ class CheckpointOptions:
             _ENV_PREFIX + "KEEP": str(self.keep),
             _ENV_PREFIX + "LOCK_TIMEOUT_S": repr(self.lock_timeout_s),
             _ENV_PREFIX + "RESTORE_THREADS": str(self.restore_threads),
+            _ENV_PREFIX + "TRANSFER": self.transfer,
+            _ENV_PREFIX + "TRANSFER_WORKERS": str(self.transfer_workers),
             _ENV_PREFIX + "VERIFY_RESTORE": "1" if self.verify_restore
             else "0",
             _ENV_PREFIX + "PACK_FORMAT": str(self.pack_format),

@@ -210,6 +210,15 @@ class CheckpointSession:
         return self.engine.write_error
 
     @property
+    def last_commit_step(self) -> Optional[int]:
+        """Step of the newest image committed *by this session* (None
+        until the first dump lands).  Unlike :meth:`latest_step`, a
+        leftover on-disk image from a previous incarnation does not
+        count — use this to decide whether re-dumping the current step
+        would be redundant."""
+        return self.engine.last_commit_step
+
+    @property
     def frozen_window_s(self) -> Optional[float]:
         """Blocked-window cost of the last dump in seconds: how long the
         job was actually frozen (async: device→host copy only; sync: the

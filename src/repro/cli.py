@@ -13,6 +13,8 @@ get the same treatment:
   python -m repro restore RUN_DIR --dry-run  full restore path, host backend
   python -m repro jobs RUN_DIR [--job ID]    inspect orchestrator job records
   python -m repro orchestrate RUN_DIR        run a preemption scenario
+  python -m repro migrate SRC DST            delta-transfer images to a peer
+  python -m repro transfer-stats DST         CAS contents + transfer history
 
 Exit status is 0 on success, 1 on any problem — scriptable from cron,
 GitHub Actions, or a cluster scheduler's health hook.
@@ -111,7 +113,7 @@ def _print_stripe_layout(store, m) -> None:
     if sizes:
         total = sum(sizes)
         util = min(sizes) / max(sizes) if max(sizes) else 0.0
-        print(f"  stripes:     "
+        print("  stripes:     "
               + "  ".join(f"[{k}] {_fmt_bytes(s)}"
                           for k, s in enumerate(sizes))
               + f"   (total {_fmt_bytes(total)}, balance {util:.2f})")
@@ -315,7 +317,8 @@ def cmd_jobs(args) -> int:
         for i, b in enumerate(rec.recovery.breakdown()):
             phases = "  ".join(
                 f"{k}={b[k]*1e3:.1f}ms" for k in
-                ("detect_s", "schedule_s", "restore_s", "replay_s")
+                ("detect_s", "transfer_s", "schedule_s", "restore_s",
+                 "replay_s")
                 if b[k] is not None)
             print(f"  incident {i}:  {b['cause']}  {phases}"
                   + (f"  replayed={b['steps_replayed']}"
@@ -361,15 +364,17 @@ def cmd_orchestrate(args) -> int:
     from repro.api import CheckpointOptions
     from repro.orchestrator import run_scenario
     opts = CheckpointOptions(mode=args.mode, pack_format=args.pack_format,
-                             io_threads=args.io_threads)
+                             io_threads=args.io_threads,
+                             incremental=args.incremental)
     summary = run_scenario(args.scenario, args.run_dir, options=opts,
                            total_steps=args.steps, kind=args.kind,
-                           capacity=args.capacity)
+                           capacity=args.capacity, hosts=args.hosts)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2, default=str)
     print(f"scenario {args.scenario!r} ({args.mode} engine, "
-          f"capacity {summary['capacity']}): "
+          f"capacity {summary['capacity']}, "
+          f"{summary.get('hosts', 1)} host(s)): "
           f"{summary['ticks']} ticks, {summary['wall_s']:.2f}s wall, "
           f"cluster goodput {summary['cluster_goodput']:.2f}")
     bad = 0
@@ -379,14 +384,124 @@ def cmd_orchestrate(args) -> int:
         tot = j["recovery_totals"]
         rec = (f"  recovery {tot['total_s']*1e3:.0f}ms over "
                f"{tot['incidents']} incident(s)" if tot["incidents"] else "")
+        mig = j.get("migration")
+        mig_s = ""
+        if mig:
+            moved = mig.get("bytes_sent", 0) + mig.get("bytes_copied", 0)
+            mig_s = (f"  migrated {mig['from']}->{mig['to']} "
+                     f"({_fmt_bytes(moved)} moved, "
+                     f"{_fmt_bytes(mig.get('bytes_reused', 0))} deduped)"
+                     if mig["state"] == "transferred"
+                     else f"  migration {mig['state']}")
         print(f"  {job_id:10s} [{j['kind']}] prio {j['priority']}: "
               f"{j['state']} at {j['step']}/{j['total_steps']} "
               f"({j['restarts']} restart(s), goodput {j['goodput']:.2f})"
-              + rec)
+              + rec + mig_s)
     if bad:
         print(f"error: {bad} job(s) did not recover to completion",
               file=sys.stderr)
     return 1 if bad else 0
+
+
+# ---------------------------------------------------------------- migrate
+def cmd_migrate(args) -> int:
+    """Push snapshot image(s) from a run dir to a peer store, delta or
+    full-copy, then prove the transferred image restorable (CRC)."""
+    from repro.core.snapshot_io import SnapshotStore
+    store = _store(args.run_dir)
+    step = args.step if args.step is not None else store.latest_step()
+    if args.transfer == "delta":
+        from repro.transfer import DeltaReplicator
+        rep = DeltaReplicator(args.dest, workers=args.workers)
+        stats = rep.push(args.run_dir, step)
+    else:
+        from repro.core.replication import DirReplicator
+        from repro.transfer.delta import transfer_closure
+        rep = DirReplicator(args.dest)
+        stats = {"bytes_copied": 0, "files_copied": 0, "bytes_skipped": 0,
+                 "files_skipped": 0, "step": step}
+        for s in transfer_closure(store, step):
+            st = rep.push(args.run_dir, s)
+            for k in ("bytes_copied", "files_copied",
+                      "bytes_skipped", "files_skipped"):
+                stats[k] += st[k]
+    # the transferred image must be restorable *now*, while the source
+    # still exists — a corrupt target fails here, not at restore time
+    from repro.api.options import auto_io_threads
+    reader = SnapshotStore(args.dest).reader(step, verify=True,
+                                             io_threads=auto_io_threads())
+    try:
+        reader.verify_all()
+    finally:
+        reader.close()
+    if args.json:
+        print(json.dumps(stats, indent=2, default=str))
+        return 0
+    print(f"migrated step {step}: {args.run_dir} -> {args.dest} "
+          f"({args.transfer})")
+    if args.transfer == "delta":
+        moved = stats["bytes_sent"] + stats["bytes_copied"]
+        print(f"  sent:        {_fmt_bytes(moved)} in "
+              f"{stats['chunks_sent']} chunk(s)"
+              + (f" + {stats['files_copied']} v1 file(s)"
+                 if stats["files_copied"] else ""))
+        print(f"  deduped:     {_fmt_bytes(stats['bytes_reused'])} "
+              f"({stats['chunks_reused']} chunk(s) already in the "
+              f"target CAS)")
+        print(f"  steps:       {stats['steps_transferred']} transferred, "
+              f"{stats['steps_skipped']} already present")
+        if stats.get("corrupt_objects_healed"):
+            print(f"  healed:      {stats['corrupt_objects_healed']} "
+                  f"corrupt CAS object(s) re-fetched from source")
+        print(f"  wall:        {stats['push_s']*1e3:.1f}ms")
+    else:
+        print(f"  copied:      {_fmt_bytes(stats['bytes_copied'])} "
+              f"({stats['files_copied']} file(s))")
+        print(f"  skipped:     {_fmt_bytes(stats['bytes_skipped'])} "
+              f"({stats['files_skipped']} unchanged file(s))")
+    print(f"  verified:    step {step} CRC-clean at destination")
+    return 0
+
+
+def cmd_transfer_stats(args) -> int:
+    """Inspect a peer store's CAS and transfer history offline."""
+    from repro.transfer.cas import ChunkStore, default_cas_dir
+    cas_dir = default_cas_dir(args.dest)
+    if not os.path.isdir(cas_dir):
+        raise SystemExit(f"error: no chunk store under {args.dest!r} "
+                         f"(expected {cas_dir})")
+    store = ChunkStore(cas_dir)
+    st = store.stats()
+    log = store.transfer_log()
+    if args.fsck:
+        bad = store.fsck()
+        st["corrupt_objects"] = len(bad)
+    if args.json:
+        print(json.dumps({"cas": st, "transfers": log}, indent=2,
+                         default=str))
+        return 1 if st.get("corrupt_objects") else 0
+    print(f"{args.dest}: {st['objects']} CAS object(s), "
+          f"{_fmt_bytes(st['bytes'])}")
+    if args.fsck:
+        print("  fsck:        "
+              + (f"{st['corrupt_objects']} corrupt object(s)!"
+                 if st["corrupt_objects"] else "all objects CRC-clean"))
+    if log:
+        rows = []
+        for r in log[-12:]:
+            rows.append([
+                _fmt_time(r.get("t")), r.get("step", "-"),
+                _fmt_bytes(r.get("bytes_sent", 0)
+                           + r.get("bytes_copied", 0)),
+                _fmt_bytes(r.get("bytes_reused", 0)),
+                r.get("steps_transferred", 0),
+                f"{r.get('push_s', 0)*1e3:.1f}ms",
+            ])
+        print(_table(rows, ["time", "step", "sent", "deduped",
+                            "steps", "wall"]))
+    else:
+        print("  (no transfers logged)")
+    return 1 if st.get("corrupt_objects") else 0
 
 
 def _iter_leaves(node, prefix=""):
@@ -443,10 +558,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.set_defaults(fn=cmd_jobs)
 
     p = sub.add_parser("orchestrate", help="run a deterministic "
-                       "multi-tenant preemption/failure scenario")
+                       "multi-tenant preemption/failure/migration scenario")
     p.add_argument("run_dir")
     p.add_argument("--scenario", default="mixed",
-                   choices=["preemption", "failure", "straggler", "mixed"])
+                   choices=["preemption", "failure", "straggler", "migrate",
+                            "mixed"])
     p.add_argument("--steps", type=int, default=10,
                    help="steps per low-priority job")
     p.add_argument("--kind", default="train",
@@ -455,9 +571,34 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--pack-format", type=int, default=2, choices=[1, 2])
     p.add_argument("--io-threads", type=int, default=0)
     p.add_argument("--capacity", type=int, default=None)
+    p.add_argument("--hosts", type=int, default=None,
+                   help="simulated hosts (migrate defaults to 2)")
+    p.add_argument("--incremental", action="store_true",
+                   help="delta images (what the migrate transfer dedups)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="also dump the full summary JSON here")
     p.set_defaults(fn=cmd_orchestrate)
+
+    p = sub.add_parser("migrate", help="transfer snapshot images to a "
+                       "peer store (content-addressed delta by default)")
+    p.add_argument("run_dir", help="source run directory")
+    p.add_argument("dest", help="destination peer store directory")
+    p.add_argument("--step", type=int, default=None,
+                   help="snapshot step (default: newest)")
+    p.add_argument("--transfer", default="delta",
+                   choices=["delta", "copy"])
+    p.add_argument("--workers", type=int, default=0,
+                   help="parallel ship lanes (0 = auto)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_migrate)
+
+    p = sub.add_parser("transfer-stats", help="inspect a peer store's "
+                       "chunk CAS and transfer history")
+    p.add_argument("dest", help="peer store directory (holds .cas/)")
+    p.add_argument("--fsck", action="store_true",
+                   help="CRC-check every CAS object")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_transfer_stats)
     return ap
 
 

@@ -22,9 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, FrozenSet, Iterable, Optional, Tuple
+from typing import Any, Callable, Dict, FrozenSet, Iterable
 
-from repro.core.plugins import (PLUGIN_API_VERSION, Hook, HookContext,
+from repro.core.plugins import (PLUGIN_API_VERSION, HookContext,
                                 Plugin, PluginVersionError)
 
 try:  # Protocol is typing-only sugar; keep the module importable anywhere
@@ -156,7 +156,6 @@ class HostNumpyBackend(Plugin):
 
     def checkpoint_devices(self, ctx: HookContext) -> None:
         import numpy as np
-        from repro.serialization.pack import dtype_to_str
         t0 = time.perf_counter()
         host_bytes = 0
         for name, tree in getattr(ctx, "roots", {}).items():

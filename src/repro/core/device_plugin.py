@@ -17,15 +17,14 @@ of device state as ``jax.Array`` shards; the plugin:
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backends import JAX_BACKEND_FEATURES
 from repro.core.lock import DeviceLock
-from repro.core.plugins import Hook, HookContext, Plugin
+from repro.core.plugins import HookContext, Plugin
 from repro.core.topology import (resolve_sharding, sharding_descriptor)
 from repro.serialization.pack import dtype_to_str, dtype_from_str
 
@@ -142,7 +141,7 @@ def restore_array(entry: Dict[str, Any], target_mesh=None,
     the new layout.
     """
     shape = tuple(entry["shape"])
-    dtype = dtype_from_str(entry["dtype"])
+    dtype_from_str(entry["dtype"])      # validates the stored dtype
     sharding = target_sharding
     if sharding is None:
         sharding = resolve_sharding(entry["sharding"], target_mesh)

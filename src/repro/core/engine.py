@@ -42,8 +42,8 @@ import jax
 from repro.core.lock import LockTimeout
 from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
                                 PluginRegistry)
-from repro.core.snapshot_io import (SnapshotStore, SnapshotReader,
-                                    SnapshotWriter, pack_host_blob)
+from repro.core.snapshot_io import (SnapshotStore, SnapshotWriter,
+                                    pack_host_blob)
 from repro.core.topology import mesh_fingerprint
 
 PyTree = Any
@@ -110,8 +110,14 @@ class SnapshotEngine:
         self.keep = self.options.keep
         self.replicator = replicator
         if replicator is None and self.options.replicate_to:
-            from repro.core.replication import DirReplicator
-            self.replicator = DirReplicator(self.options.replicate_to)
+            if self.options.transfer == "delta":
+                from repro.transfer import DeltaReplicator
+                self.replicator = DeltaReplicator(
+                    self.options.replicate_to,
+                    workers=self.options.transfer_workers)
+            else:
+                from repro.core.replication import DirReplicator
+                self.replicator = DirReplicator(self.options.replicate_to)
         self.mesh = mesh
         self._provider: Optional[StateProvider] = None
         self._pending: Optional[threading.Thread] = None
@@ -119,6 +125,11 @@ class SnapshotEngine:
         self._pending_err: List[BaseException] = []
         self._write_error: Optional[str] = None
         self.last_stats: Dict[str, Any] = {}
+        # step of the newest image committed by THIS engine instance —
+        # lets callers distinguish "an image of step N exists" from "WE
+        # dumped step N" (a leftover from a previous incarnation may
+        # carry a different trajectory)
+        self.last_commit_step: Optional[int] = None
 
     def _make_backend(self, backend) -> Plugin:
         from repro.core.backends import create_backend
@@ -198,6 +209,7 @@ class SnapshotEngine:
             self.registry.exit_all("dump", True)
             self.last_stats = dict(ctx.stats)
             self._write_error = None               # last dump is clean
+            self.last_commit_step = ctx.step
             return path
 
         # async: resume immediately, write in background (CheckFreq-style)
@@ -209,6 +221,7 @@ class SnapshotEngine:
             try:
                 self._write(ctx)
                 self._write_error = None           # last dump is clean
+                self.last_commit_step = ctx.step
                 self.registry.exit_all("dump", True)
             except BaseException as e:
                 self._pending_err.append(e)
@@ -236,9 +249,15 @@ class SnapshotEngine:
         opts = self.options
         prev_manifest = None
         if self.incremental:
-            prev_step = self.store.latest_step()
-            if prev_step is not None:
-                prev_manifest = self.store.manifest(prev_step)
+            # parent = newest step strictly below the one being dumped: a
+            # re-dump of an existing step (checkpoint-on-signal right
+            # after a periodic dump of the same step) must never use the
+            # image it is about to overwrite as its own parent — the
+            # locations would point at a pack the commit just replaced
+            prev_steps = [s for s in self.store.list_steps()
+                          if s < ctx.step]
+            if prev_steps:
+                prev_manifest = self.store.manifest(prev_steps[-1])
         writer = SnapshotWriter(self.run_dir, ctx.step,
                                 host_id=jax.process_index(),
                                 compress=self.compress,
@@ -277,7 +296,15 @@ class SnapshotEngine:
             writer.abort()
             raise
         if self.replicator is not None:
+            t_rep = time.perf_counter()
             self.replicator.push(self.run_dir, ctx.step)
+            ctx.stats["replicate_s"] = time.perf_counter() - t_rep
+            # replication counters (files/bytes copied vs skipped for the
+            # dir replicator, chunks/bytes sent vs reused for the delta
+            # one) ride along in the dump stats under a replica_ prefix
+            for k, v in getattr(self.replicator, "last_stats", {}).items():
+                if isinstance(v, (int, float)):
+                    ctx.stats[f"replica_{k}"] = v
         if self.keep:
             self.store.gc(self.keep)
         return path

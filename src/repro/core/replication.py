@@ -11,32 +11,81 @@ replicates the committed snapshot bytes to a peer store:
 
 Both push after manifest commit (so only *valid* images replicate) and can
 re-materialise a snapshot directory into a run_dir on pull.
+
+``DirReplicator`` pushes are O(delta), not O(image): a file already at the
+peer with the same size and mtime is skipped (``copy2`` preserves mtime,
+so a replica's fingerprint matches its source until the source changes).
+Committed snapshots are immutable, so on an incremental chain this turns
+re-pushes and shared-parent pushes into metadata stats.  The skip/copy
+counters surface in ``last_stats`` (and, via the engine, in
+``last_stats["replica_files_skipped"]`` etc. of the dump).
+
+For cross-host transfer that dedups at *chunk* grain against a
+content-addressed store, see :class:`repro.transfer.DeltaReplicator` —
+same ``push``/``pull_latest`` contract.
 """
 from __future__ import annotations
 
 import os
 import shutil
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 from repro.core.snapshot_io import MANIFEST, snapshot_dir
+
+
+def _same_file(src: str, dst: str) -> bool:
+    """Unchanged replica fingerprint: same size + same mtime (copy2
+    preserves mtime, and committed pack files are never rewritten)."""
+    try:
+        s, d = os.stat(src), os.stat(dst)
+    except OSError:
+        return False
+    return s.st_size == d.st_size and abs(s.st_mtime - d.st_mtime) < 1e-6
 
 
 class DirReplicator:
     def __init__(self, peer_dir: str):
         self.peer_dir = peer_dir
         os.makedirs(peer_dir, exist_ok=True)
+        self.last_stats: Dict[str, Any] = {}
 
-    def push(self, run_dir: str, step: int) -> None:
+    def push(self, run_dir: str, step: int) -> Dict[str, Any]:
         src = snapshot_dir(run_dir, step)
         dst = snapshot_dir(self.peer_dir, step)
-        if os.path.isdir(dst):
-            shutil.rmtree(dst)
-        os.makedirs(os.path.dirname(dst), exist_ok=True)
-        # copy payload first, manifest last (commit ordering preserved)
-        os.makedirs(dst)
+        os.makedirs(dst, exist_ok=True)
         names = sorted(os.listdir(src))
-        for n in [n for n in names if n != MANIFEST] + [MANIFEST]:
-            shutil.copy2(os.path.join(src, n), os.path.join(dst, n))
+        stats = {"files_copied": 0, "files_skipped": 0,
+                 "bytes_copied": 0, "bytes_skipped": 0}
+        payload = [n for n in names if n != MANIFEST]
+        changed = [n for n in payload + [MANIFEST]
+                   if not _same_file(os.path.join(src, n),
+                                     os.path.join(dst, n))]
+        stale = set(os.listdir(dst)) - set(names)
+        if changed or stale:
+            # the peer must never hold a committed manifest over payload
+            # that is mid-replacement: drop its manifest first, then
+            # prune/copy, then re-commit the manifest last
+            try:
+                os.remove(os.path.join(dst, MANIFEST))
+            except OSError:
+                pass
+            if MANIFEST not in changed:
+                changed.append(MANIFEST)   # just unlinked: must re-land
+        for n in sorted(stale):
+            os.remove(os.path.join(dst, n))
+        for n in payload + [MANIFEST]:
+            sp, dp = os.path.join(src, n), os.path.join(dst, n)
+            if n not in changed:
+                stats["files_skipped"] += 1
+                stats["bytes_skipped"] += os.path.getsize(sp)
+                continue
+            tmp = dp + ".tmp"
+            shutil.copy2(sp, tmp)          # atomic per file: copy + rename
+            os.replace(tmp, dp)
+            stats["files_copied"] += 1
+            stats["bytes_copied"] += os.path.getsize(sp)
+        self.last_stats = stats
+        return stats
 
     def pull_latest(self, run_dir: str) -> Optional[int]:
         from repro.core.snapshot_io import SnapshotStore

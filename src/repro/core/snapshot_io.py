@@ -31,8 +31,8 @@ import msgpack
 import numpy as np
 
 from repro.serialization.integrity import atomic_write_json, read_json
-from repro.serialization.pack import (DEFAULT_CHUNK_BYTES, PackReader,
-                                      PackWriter, PackWriterV2, open_pack)
+from repro.serialization.pack import (DEFAULT_CHUNK_BYTES, PackWriter,
+                                      PackWriterV2, open_pack)
 
 MANIFEST = "MANIFEST.json"
 

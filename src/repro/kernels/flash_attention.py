@@ -18,8 +18,6 @@ Causal + sliding-window masking is positional (absolute q/k positions via
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

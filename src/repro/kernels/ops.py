@@ -13,7 +13,6 @@ import os
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rn

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.flash_attention import pl_scratch
 
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):

@@ -26,7 +26,7 @@ import re
 import subprocess
 import sys
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 # TPU v5e-class hardware constants (roofline targets; CPU is the host here)
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -15,7 +15,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None) -> int:

@@ -10,7 +10,7 @@ archs record the cell as skipped (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

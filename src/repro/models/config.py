@@ -9,7 +9,6 @@ selects which layers use expert FFNs.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 

@@ -16,7 +16,6 @@ Batch dict keys (all optional except "tokens"):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -150,7 +149,6 @@ class LM:
                        tokens, axis=0)
         ve = batch.get("vision_embeds")
         if ve is not None:
-            pv = ve.shape[1]
             emb = jax.lax.dynamic_update_slice_in_dim(
                 emb, ve.astype(self.compute_dtype), 0, axis=1)
         return constrain(emb, self.policy, "batch", "seq", "act_d")

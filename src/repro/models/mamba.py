@@ -14,7 +14,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import ParamSpec, rmsnorm
 from repro.sharding.policy import ShardingPolicy, constrain

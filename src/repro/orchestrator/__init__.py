@@ -14,7 +14,8 @@ measurable per scenario (the paper's multi-tenant framing, reproduced).
 """
 from repro.orchestrator.job import (InvalidTransition, JobRecord,  # noqa: F401
                                     JobSpec, JobState, list_job_records)
-from repro.orchestrator.orchestrator import (Orchestrator,  # noqa: F401
+from repro.orchestrator.orchestrator import (MigrationPlan,  # noqa: F401
+                                             Orchestrator,
                                              OrchestratorConfig)
 from repro.orchestrator.recovery import GoodputMeter, RecoveryLog  # noqa: F401
 from repro.orchestrator.scheduler import Decision, Scheduler  # noqa: F401

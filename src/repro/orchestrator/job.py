@@ -67,6 +67,7 @@ class JobSpec:
     arrive_tick: int = 0            # scheduler ignores the job before this
     fail_at_step: Optional[int] = None      # injected crash
     straggle_at_step: Optional[int] = None  # injected stall
+    migrate_at_step: Optional[int] = None   # live-migrate to another host
     max_restarts: int = 3
 
     def to_dict(self) -> Dict[str, Any]:
@@ -96,6 +97,7 @@ class JobRecord:
         self.clock = clock
         self.state = JobState.PENDING
         self.step = 0
+        self.host: Optional[str] = None  # placement (multi-host clusters)
         self.attempt = 0                # workload incarnations so far
         self.restarts = 0               # recoveries (preempt or failure)
         self.last_ckpt_step: Optional[int] = None
@@ -138,6 +140,7 @@ class JobRecord:
             "spec": self.spec.to_dict(),
             "state": self.state.value,
             "step": self.step,
+            "host": self.host,
             "attempt": self.attempt,
             "restarts": self.restarts,
             "last_ckpt_step": self.last_ckpt_step,
@@ -162,6 +165,7 @@ class JobRecord:
         rec.run_dir = run_dir
         rec.state = JobState(d["state"])
         rec.step = d["step"]
+        rec.host = d.get("host")
         rec.attempt = d["attempt"]
         rec.restarts = d["restarts"]
         rec.last_ckpt_step = d.get("last_ckpt_step")

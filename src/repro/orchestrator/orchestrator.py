@@ -20,6 +20,7 @@ jobs RUN_DIR`` inspects a (possibly dead) cluster offline.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -41,6 +42,23 @@ class OrchestratorConfig:
     planner_min_interval_s: float = 0.5
     jit_cooldown_steps: int = 8
     idle_sleep_s: float = 0.005     # when a tick ran nothing (await detect)
+    hosts: int = 1                  # simulated hosts (job dirs per host)
+    transfer: str = "delta"         # migration data path: "delta" | "copy"
+    transfer_workers: int = 0       # delta-ship lanes (0 = auto)
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """One planned live migration: checkpoint the job on its current
+    host, delta-transfer the image to another host's store, restore it
+    there.  Driven by ``JobSpec.migrate_at_step``; state advances
+    pending → signalled → transferred (or failed)."""
+    job_id: str
+    at_step: int
+    src_host: Optional[str] = None
+    dst_host: Optional[str] = None
+    state: str = "pending"
+    stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 class Orchestrator:
@@ -63,6 +81,16 @@ class Orchestrator:
                     f"job {s.job_id!r} demands {s.devices} device(s) but "
                     f"the cluster has {self.cfg.capacity}: it could never "
                     f"be scheduled")
+        self.hosts: List[str] = (
+            [f"host{i:02d}" for i in range(self.cfg.hosts)]
+            if self.cfg.hosts > 1 else [])
+        self.migrations: Dict[str, MigrationPlan] = {
+            s.job_id: MigrationPlan(s.job_id, s.migrate_at_step)
+            for s in specs if s.migrate_at_step is not None}
+        if self.migrations and len(self.hosts) < 2:
+            raise ValueError(
+                "jobs with migrate_at_step need a multi-host cluster "
+                f"(OrchestratorConfig(hosts=2+), got {self.cfg.hosts})")
         self.records: Dict[str, JobRecord] = {
             s.job_id: JobRecord(s, run_dir) for s in specs}
         for rec in self.records.values():
@@ -148,19 +176,35 @@ class Orchestrator:
             else:
                 self._restore_job(rec)
 
+    def _host_load(self) -> Dict[str, int]:
+        load: Dict[str, int] = {}
+        for rec in self.records.values():
+            if rec.host is not None and not rec.terminal:
+                load[rec.host] = load.get(rec.host, 0) + 1
+        return load
+
+    def _make_workload(self, rec: JobRecord):
+        """Instantiate the job's workload on its assigned host.  The
+        host kwarg is only passed when placement is active so custom
+        two-argument factories (tests, embedders) keep working."""
+        if rec.host is not None:
+            return self.factory(rec.spec, rec.attempt, host=rec.host)
+        return self.factory(rec.spec, rec.attempt)
+
     def _start_fresh(self, rec: JobRecord) -> None:
-        wl = self.factory(rec.spec, rec.attempt)
+        if self.hosts and rec.host is None:
+            rec.host = Scheduler.place(self.hosts, self._host_load())
+        wl = self._make_workload(rec)
         wl.start()
         self._register(rec, wl)
         rec.transition(JobState.RUNNING)
 
     def _restore_job(self, rec: JobRecord) -> None:
-        job_id = rec.spec.job_id
         now = self.clock()
         rec.recovery.mark_scheduled(now)
         rec.transition(JobState.RESTORING)
         rec.attempt += 1
-        wl = self.factory(rec.spec, rec.attempt)
+        wl = self._make_workload(rec)
         t0 = self.clock()
         try:
             restored_step = wl.restore()
@@ -248,6 +292,7 @@ class Orchestrator:
             if out.get("preempted"):
                 self._freeze_and_yield(rec, wl, out)
                 continue
+            self._maybe_signal_migration(rec)
             if getattr(wl, "session", None) is not None:
                 latest = wl.session.latest_step()
                 if latest is not None:
@@ -295,6 +340,16 @@ class Orchestrator:
                 and rec.step >= inc["step_at_interrupt"]):
             rec.recovery.mark_caught_up(self.clock())
 
+    def _maybe_signal_migration(self, rec: JobRecord) -> None:
+        """A due migration is delivered as a PREEMPT signal: the job
+        checkpoints-on-signal and yields through the normal freeze path,
+        where the pending plan routes it to :meth:`_migrate`."""
+        plan = self.migrations.get(rec.spec.job_id)
+        if (plan is not None and plan.state == "pending"
+                and rec.step >= plan.at_step):
+            plan.state = "signalled"
+            self.channel.send(rec.spec.job_id, Signal.PREEMPT)
+
     def _freeze_and_yield(self, rec: JobRecord, wl, out) -> None:
         job_id = rec.spec.job_id
         sig = self.channel.consume(job_id)
@@ -308,12 +363,103 @@ class Orchestrator:
             self._fail_write_error(rec, self.clock(), e)
             return
         rec.last_ckpt_step = rec.step
+        plan = self.migrations.get(job_id)
+        if plan is not None and plan.state == "signalled":
+            self._migrate(rec, wl, plan)
+            return
         now = self.clock()
         rec.recovery.open("preemption", t_interrupt=now, t_detect=now,
                           step_at_interrupt=rec.step,
                           last_ckpt_step=rec.step)
         rec.transition(JobState.PREEMPTED)
         self._evict(job_id)
+
+    # ---------------------------------------------------------- migration
+    def _migrate(self, rec: JobRecord, wl, plan: MigrationPlan) -> None:
+        """The job is frozen with a committed image on its source host:
+        pick a destination, delta-transfer the image there, and yield as
+        PREEMPTED with ``rec.host`` rebound — the next scheduling round
+        restores it on the new host, step-exact."""
+        from repro.orchestrator.workloads import job_dir_for
+        job_id = rec.spec.job_id
+        now = self.clock()
+        rec.recovery.open("migration", t_interrupt=now, t_detect=now,
+                          step_at_interrupt=rec.step,
+                          last_ckpt_step=rec.step)
+        plan.src_host = rec.host
+        plan.dst_host = Scheduler.place(self.hosts, self._host_load(),
+                                        avoid=rec.host)
+        src_dir = job_dir_for(self.run_dir, job_id, plan.src_host)
+        dst_dir = job_dir_for(self.run_dir, job_id, plan.dst_host)
+        t0 = self.clock()
+        try:
+            stats = self._transfer_image(wl, src_dir, dst_dir,
+                                         plan.dst_host)
+        except Exception as e:
+            # the image never reached the destination: stay on the source
+            # host (its image is intact) and recover like a preemption
+            plan.state = "failed"
+            plan.stats = {"error": repr(e)}
+            rec.events.append({"t": self.clock(), "migration_error": repr(e)})
+        else:
+            plan.state = "transferred"
+            plan.stats = stats
+            rec.recovery.mark_transfer(
+                t0, self.clock(),
+                **{k: stats[k] for k in
+                   ("bytes_sent", "bytes_reused", "bytes_copied",
+                    "chunks_sent", "chunks_reused") if k in stats})
+            rec.host = plan.dst_host
+            rec.events.append({
+                "t": self.clock(), "step": rec.step,
+                "migrated": {"from": plan.src_host, "to": plan.dst_host,
+                             "bytes_sent": stats.get("bytes_sent",
+                                                     stats.get("bytes", 0)),
+                             "bytes_reused": stats.get("bytes_reused", 0)}})
+        rec.transition(JobState.PREEMPTED)
+        self._evict(job_id)
+
+    def _transfer_image(self, wl, src_dir: str, dst_dir: str,
+                        dst_host: str) -> Dict[str, Any]:
+        """Move one job's checkpoint state between host directories.
+        Session-backed workloads go through the content-addressed
+        :class:`DeltaReplicator` (or whole-file copy when configured);
+        sessionless baselines (interception) copy their replay logs."""
+        if getattr(wl, "session", None) is None:
+            import shutil
+            os.makedirs(dst_dir, exist_ok=True)
+            nbytes, nfiles = 0, 0
+            for name in sorted(os.listdir(src_dir)):
+                p = os.path.join(src_dir, name)
+                if os.path.isfile(p):
+                    shutil.copy2(p, os.path.join(dst_dir, name))
+                    nbytes += os.path.getsize(p)
+                    nfiles += 1
+            return {"mode": "full-copy", "bytes_copied": nbytes,
+                    "files_copied": nfiles}
+        step = wl.session.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no image to migrate under {src_dir}")
+        if self.cfg.transfer == "delta":
+            from repro.orchestrator.workloads import host_cas_dir
+            from repro.transfer import DeltaReplicator
+            rep = DeltaReplicator(
+                dst_dir, cas_dir=host_cas_dir(self.run_dir, dst_host),
+                workers=self.cfg.transfer_workers)
+            return dict(rep.push(src_dir, step), mode="delta")
+        # whole-file copy: the closure still has to move (an incremental
+        # child is unrestorable without its parents)
+        from repro.core.replication import DirReplicator
+        from repro.transfer.delta import transfer_closure
+        rep = DirReplicator(dst_dir)
+        total = {"mode": "copy", "bytes_copied": 0, "files_copied": 0,
+                 "bytes_skipped": 0, "files_skipped": 0}
+        for s in transfer_closure(wl.session.store, step):
+            st = rep.push(src_dir, s)
+            for k in ("bytes_copied", "files_copied",
+                      "bytes_skipped", "files_skipped"):
+                total[k] += st[k]
+        return total
 
     # ----------------------------------------------------------- cadence
     def _maybe_checkpoint(self, rec: JobRecord, wl, out) -> None:
@@ -350,10 +496,15 @@ class Orchestrator:
         for job_id, rec in self.records.items():
             job_wall = ((rec.finished_t or now) - rec.created_t) or 1e-9
             useful_s += rec.goodput.useful_step_seconds()
+            plan = self.migrations.get(job_id)
             jobs[job_id] = {
                 "kind": rec.spec.kind,
                 "priority": rec.spec.priority,
                 "state": rec.state.value,
+                "host": rec.host,
+                "migration": (None if plan is None else
+                              {"state": plan.state, "from": plan.src_host,
+                               "to": plan.dst_host, **plan.stats}),
                 "step": rec.step,
                 "total_steps": rec.spec.total_steps,
                 "attempts": rec.attempt + 1,
@@ -371,6 +522,7 @@ class Orchestrator:
             }
         return {"wall_s": wall, "ticks": self.ticks,
                 "capacity": self.cfg.capacity,
+                "hosts": max(self.cfg.hosts, 1),
                 "cluster_goodput": useful_s / wall if wall > 0 else 0.0,
                 "all_done": all(r.state == JobState.DONE
                                 for r in self.records.values()),

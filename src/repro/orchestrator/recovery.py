@@ -8,6 +8,9 @@ phases:
 
     detect_s    interruption happened -> orchestrator noticed
                 (signal delivery is ~0; heartbeat death costs the deadline)
+    transfer_s  image moved to the host the job restarts on (cross-host
+                migration: the delta-replication push; zero-width when the
+                job comes back where its image already is)
     schedule_s  noticed -> scheduler found capacity again
     restore_s   restore started -> state back on devices (dominated by
                 image read; the engine's read_s/place_s live in meta)
@@ -22,7 +25,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
-PHASES = ("detect_s", "schedule_s", "restore_s", "replay_s")
+PHASES = ("detect_s", "transfer_s", "schedule_s", "restore_s", "replay_s")
 
 
 class RecoveryLog:
@@ -38,6 +41,8 @@ class RecoveryLog:
         inc = {"cause": cause,
                "t_interrupt": t_interrupt,
                "t_detect": t_detect,
+               "t_transfer_start": None,
+               "t_transfer_end": None,
                "t_scheduled": None,
                "t_restored": None,
                "t_caught_up": None,
@@ -53,6 +58,16 @@ class RecoveryLog:
         if self.incidents and self.incidents[-1]["t_caught_up"] is None:
             return self.incidents[-1]
         return None
+
+    def mark_transfer(self, t_start: float, t_end: float,
+                      **meta: Any) -> None:
+        """Record the cross-host image-transfer window (between detect
+        and schedule: the orchestrator pre-stages the image on the
+        destination before the scheduler re-admits the job)."""
+        if self.current is not None:
+            self.current["t_transfer_start"] = t_start
+            self.current["t_transfer_end"] = t_end
+            self.current["meta"].update(meta)
 
     def mark_scheduled(self, t: float) -> None:
         if self.current is not None:
@@ -73,13 +88,23 @@ class RecoveryLog:
     @staticmethod
     def _breakdown(inc: Dict[str, Any]) -> Dict[str, Any]:
         def gap(a, b):
-            if inc[a] is None or inc[b] is None:
+            # .get: records persisted before the transfer phase existed
+            # have no t_transfer_* keys
+            ta, tb = inc.get(a), inc.get(b)
+            if ta is None or tb is None:
                 return None
-            return max(0.0, inc[b] - inc[a])
+            return max(0.0, tb - ta)
 
+        transfer_s = gap("t_transfer_start", "t_transfer_end")
+        # the transfer (if any) happens inside the detect→schedule window;
+        # account it separately so schedule_s stays pure queueing time
+        schedule_anchor = ("t_transfer_end"
+                           if inc.get("t_transfer_end") is not None
+                           else "t_detect")
         out = {"cause": inc["cause"],
                "detect_s": gap("t_interrupt", "t_detect"),
-               "schedule_s": gap("t_detect", "t_scheduled"),
+               "transfer_s": transfer_s,
+               "schedule_s": gap(schedule_anchor, "t_scheduled"),
                "restore_s": gap("t_scheduled", "t_restored"),
                "replay_s": gap("t_restored", "t_caught_up"),
                "total_s": gap("t_interrupt", "t_caught_up"),

@@ -15,7 +15,7 @@ from repro.orchestrator.orchestrator import (Orchestrator,
                                              OrchestratorConfig)
 from repro.orchestrator.workloads import make_workload_factory
 
-SCENARIOS = ("preemption", "failure", "straggler", "mixed")
+SCENARIOS = ("preemption", "failure", "straggler", "migrate", "mixed")
 
 
 def scenario_specs(name: str, total_steps: int = 10,
@@ -48,6 +48,16 @@ def scenario_specs(name: str, total_steps: int = 10,
                     total_steps=max(total_steps, 12),
                     straggle_at_step=8),
         ]
+    if name == "migrate":
+        # live cross-host migration: the job checkpoints-on-signal on
+        # host A mid-run, its image delta-transfers to host B's CAS, and
+        # it restores there step-exact (periodic checkpoints beforehand
+        # build the incremental chain the delta transfer dedups against)
+        return [
+            JobSpec("mover", kind=kind, priority=1,
+                    total_steps=max(total_steps, 6), ckpt_every=2,
+                    migrate_at_step=max(total_steps // 2, 3)),
+        ]
     if name == "mixed":
         # the CI smoke: one preemption + one injected failure sharing
         # the cluster — both must recover step-exact
@@ -65,7 +75,7 @@ def scenario_specs(name: str, total_steps: int = 10,
 
 def run_scenario(name: str, run_dir: str, options=None, mesh=None,
                  total_steps: int = 10, kind: str = "train",
-                 capacity: Optional[int] = None,
+                 capacity: Optional[int] = None, hosts: Optional[int] = None,
                  config: Optional[OrchestratorConfig] = None) -> Dict:
     """Build and run one scenario; returns the orchestrator summary."""
     from repro.orchestrator.job import jobs_dir
@@ -80,10 +90,15 @@ def run_scenario(name: str, run_dir: str, options=None, mesh=None,
     specs = scenario_specs(name, total_steps=total_steps, kind=kind)
     if config is None:
         # capacity 1 for single-job scenarios exercises nothing extra but
-        # keeps wall time down; preemption scenarios need contention
+        # keeps wall time down; preemption scenarios need contention;
+        # migration needs somewhere else to land (hosts >= 2)
         cap = capacity if capacity is not None else (
-            1 if name in ("preemption", "failure", "straggler") else 2)
-        config = OrchestratorConfig(capacity=cap, slice_steps=2)
+            1 if name in ("preemption", "failure", "straggler", "migrate")
+            else 2)
+        n_hosts = hosts if hosts is not None else (
+            2 if name == "migrate" else 1)
+        config = OrchestratorConfig(capacity=cap, slice_steps=2,
+                                    hosts=n_hosts)
     orch = Orchestrator(run_dir, specs,
                         workload_factory=make_workload_factory(
                             run_dir, options=options, mesh=mesh),

@@ -19,7 +19,7 @@ bare :class:`JobRecord`-likes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 from repro.orchestrator.job import JobRecord, JobState
 from repro.orchestrator.signals import Signal, SignalChannel
@@ -57,6 +57,18 @@ class Scheduler:
     def release(self, job_id: str) -> None:
         self.allocations.pop(job_id, None)
         self._preempting.discard(job_id)
+
+    # ------------------------------------------------------- placement
+    @staticmethod
+    def place(hosts: Sequence[str], load: Dict[str, int],
+              avoid: Optional[str] = None) -> str:
+        """Pick the host a (re)started job lands on: least-loaded wins,
+        ties broken by host order (deterministic).  `avoid` excludes a
+        host — a migration must restore somewhere *else* — unless it is
+        the only one."""
+        candidates = [h for h in hosts if h != avoid] or list(hosts)
+        return min(candidates, key=lambda h: (load.get(h, 0),
+                                              list(hosts).index(h)))
 
     # ------------------------------------------------------- planning
     def _waiting(self, records: Dict[str, JobRecord],

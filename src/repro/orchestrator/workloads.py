@@ -321,17 +321,35 @@ WORKLOADS = {"train": TrainWorkload, "serve": ServeWorkload,
              "intercept": InterceptionWorkload}
 
 
+def job_dir_for(base_run_dir: str, job_id: str,
+                host: Optional[str] = None) -> str:
+    """Where one job's images live.  Single-host clusters keep the flat
+    ``job_<id>`` layout; multi-host clusters nest it under the simulated
+    host (``<host>/job_<id>``) — the migration transfer moves images
+    between exactly these directories."""
+    if host is None:
+        return os.path.join(base_run_dir, f"job_{job_id}")
+    return os.path.join(base_run_dir, host, f"job_{job_id}")
+
+
+def host_cas_dir(base_run_dir: str, host: str) -> str:
+    """One content-addressed chunk store per simulated host: transfers
+    to the same host share dedup state across jobs and steps (the
+    warm-CAS recovery-time win)."""
+    return os.path.join(base_run_dir, host, ".cas")
+
+
 def make_workload_factory(base_run_dir: str,
                           options: Optional[CheckpointOptions] = None,
-                          mesh=None) -> Callable[[JobSpec, int], Any]:
+                          mesh=None) -> Callable[..., Any]:
     """Factory of factories: one job = one image dir under the run dir."""
     if mesh is None:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((1,), ("data",))
 
-    def factory(spec: JobSpec, attempt: int):
+    def factory(spec: JobSpec, attempt: int, host: Optional[str] = None):
         cls = WORKLOADS[spec.kind]
-        job_dir = os.path.join(base_run_dir, f"job_{spec.job_id}")
+        job_dir = job_dir_for(base_run_dir, spec.job_id, host)
         return cls(spec, job_dir, mesh=mesh, options=options,
                    attempt=attempt)
 

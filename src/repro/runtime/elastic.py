@@ -11,8 +11,6 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
-import jax
-
 from repro.api import CheckpointOptions, CheckpointSession
 
 

@@ -111,9 +111,17 @@ class DecodeServer:
                     f"async snapshot write failed at pos {self.pos}: "
                     f"{self.session.write_error}")
             if preempt is not None and preempt():
-                with self.session.frozen(self.pos) as snap:
-                    pass                               # dump-and-yield
-                ckpt_path = snap.path
+                if (self.session.last_commit_step == self.pos
+                        and self.session.latest_step() == self.pos):
+                    # THIS incarnation committed an image at this exact
+                    # position: yield it instead of re-dumping
+                    from repro.core.snapshot_io import snapshot_dir
+                    ckpt_path = snapshot_dir(self.session.run_dir,
+                                             self.pos)
+                else:
+                    with self.session.frozen(self.pos) as snap:
+                        pass                           # dump-and-yield
+                    ckpt_path = snap.path
                 preempted = True
                 break
             if fail_at is not None and self.pos == fail_at:

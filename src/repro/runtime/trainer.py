@@ -11,7 +11,6 @@ re-construct a fresh Trainer → engine.restore → continue — including onto 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -184,9 +183,20 @@ class Trainer:
                     f"async snapshot write failed at step {self.step}: "
                     f"{self.session.write_error}")
             if preempt is not None and preempt():
-                with self.session.frozen(self.step) as snap:
-                    pass                               # dump-and-yield
-                ckpt_path = snap.path
+                if (self.session.last_commit_step == self.step
+                        and self.session.latest_step() == self.step):
+                    # THIS incarnation committed an image of this exact
+                    # step (periodic dump landed right before the
+                    # signal): yield it instead of re-dumping the same
+                    # state.  A same-numbered leftover from an earlier
+                    # incarnation never matches last_commit_step.
+                    from repro.core.snapshot_io import snapshot_dir
+                    ckpt_path = snapshot_dir(self.session.run_dir,
+                                             self.step)
+                else:
+                    with self.session.frozen(self.step) as snap:
+                        pass                           # dump-and-yield
+                    ckpt_path = snap.path
                 preempted = True
                 break
             if fail_at is not None and self.step == fail_at:

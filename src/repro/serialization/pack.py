@@ -662,6 +662,35 @@ class PackReaderV2:
         buf = self._read_raw(name)
         return buf.view(dtype_from_str(rec["dtype"])).reshape(rec["shape"])
 
+    def read_stored_chunk(self, c: Dict[str, Any], verify: bool = True
+                          ) -> bytes:
+        """The *stored* (possibly compressed) bytes of one chunk record —
+        the unit of cross-host transfer.  CRC-checked against the chunk's
+        stored-byte hash so a torn stripe never ships."""
+        path = self._chunk_file(c)
+        f = self._handle(path)
+        f.seek(c["offset"])
+        data = f.read(c["nbytes"])
+        if len(data) != c["nbytes"]:
+            raise IOError(
+                f"{path}: chunk truncated at offset {c['offset']} "
+                f"(got {len(data)} of {c['nbytes']} bytes)")
+        if verify and crc32(data) != c["crc32"]:
+            raise IOError(f"{path}: chunk CRC mismatch at offset "
+                          f"{c['offset']} (torn write?)")
+        return data
+
+    def own_chunks(self) -> List[Tuple[str, int, Dict[str, Any]]]:
+        """(entry, chunk-index, record) for every chunk physically stored
+        in THIS pack's stripes (``ref`` chunks live in a parent pack and
+        are that pack's to export)."""
+        out = []
+        for name, rec in self.index.items():
+            for j, c in enumerate(rec["chunks"]):
+                if not c.get("ref"):
+                    out.append((name, j, c))
+        return out
+
     # ------------------------------------------------------------- verify
     def _verify_chunk(self, name: str, c: Dict[str, Any]) -> None:
         path = self._chunk_file(c)
@@ -735,3 +764,76 @@ def open_pack(base: str, verify: bool = True,
     if os.path.exists(stripe_path(base, 0)):
         return PackReaderV2(base, verify=verify, executor=executor)
     raise FileNotFoundError(f"no pack at {base} (nor {base}.0)")
+
+
+# ------------------------------------------------------------ v2 assembly
+HEADER_BYTES = len(MAGIC2) + 8        # magic + index-offset placeholder
+
+
+def write_pack_v2_from_chunks(base: str, footer: Dict[str, Any],
+                              fetch) -> None:
+    """Re-materialize a v2 pack from its logical index plus a chunk
+    source — the receive side of a cross-host transfer.
+
+    `footer` is the stripe-0 footer of the source pack (``entries`` with
+    every chunk's stripe/offset/nbytes/crc32).  ``fetch(chunk_record)``
+    must return that chunk's *stored* bytes.  Stripes are reconstructed
+    byte-for-byte at the recorded offsets, so incremental children whose
+    ``ref`` chunks point into this pack keep resolving, and every CRC in
+    the index stays valid.  Commit order mirrors :class:`PackWriterV2`:
+    all stripes written to ``*.tmp``, fsynced, stripe 0 (the index)
+    renamed last.
+    """
+    stripes = footer["stripes"]
+    per_stripe: List[List[Dict[str, Any]]] = [[] for _ in range(stripes)]
+    for rec in footer["entries"].values():
+        for c in rec["chunks"]:
+            if not c.get("ref"):
+                per_stripe[c["stripe"]].append(c)
+    files = []
+    try:
+        for k in range(stripes):
+            f = open(stripe_path(base, k) + ".tmp", "wb")
+            files.append(f)
+            f.write(MAGIC2)
+            f.write(struct.pack("<Q", 0))
+            pos = HEADER_BYTES
+            for c in sorted(per_stripe[k], key=lambda c: c["offset"]):
+                if c["offset"] != pos:
+                    raise IOError(
+                        f"{base}.{k}: non-contiguous chunk layout "
+                        f"(offset {c['offset']}, expected {pos}) — "
+                        f"source index is corrupt")
+                data = fetch(c)
+                if len(data) != c["nbytes"] or crc32(data) != c["crc32"]:
+                    raise IOError(
+                        f"{base}.{k}: fetched chunk does not match the "
+                        f"index at offset {c['offset']} (corrupt source "
+                        f"or chunk store)")
+                f.write(data)
+                pos += c["nbytes"]
+            idx = msgpack.packb(
+                footer if k == 0 else {"format": 2, "stripe": k},
+                use_bin_type=True)
+            f.write(idx)
+            f.seek(len(MAGIC2))
+            f.write(struct.pack("<Q", pos))
+            f.flush()
+            os.fsync(f.fileno())
+            f.close()
+    except BaseException:
+        for f in files:
+            try:
+                f.close()
+            except Exception:
+                pass
+        for k in range(stripes):
+            try:
+                os.remove(stripe_path(base, k) + ".tmp")
+            except OSError:
+                pass
+        raise
+    for k in range(stripes - 1, -1, -1):
+        p = stripe_path(base, k)
+        os.rename(p + ".tmp", p)
+    _remove_stale_layout(base, stripes)

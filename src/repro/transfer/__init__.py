@@ -1,0 +1,23 @@
+"""Cross-host checkpoint transfer: content-addressed chunk store + delta
+replication + migration support.
+
+CRIUgpu's recovery-time wins in a multi-tenant cluster depend on moving
+checkpoint images *between hosts* fast — a preempted job usually comes
+back somewhere else.  This package is that data path:
+
+  * :class:`ChunkStore` — a content-addressed store (CAS) keyed by the
+    raw-CRC content hashes pack v2 already computes per chunk; the
+    target host's dedup index and the resume log of interrupted
+    transfers.
+  * :class:`DeltaReplicator` — a drop-in replacement for
+    :class:`repro.core.replication.DirReplicator` that negotiates a
+    have/want set with the target's CAS and ships only missing chunks
+    (striped + parallel), then re-materializes byte-identical packs.
+  * :func:`transfer_closure` — the delta-chain closure of one snapshot
+    (incremental children need their parents on the target too).
+"""
+from repro.transfer.cas import CASCorruption, ChunkStore, chunk_key
+from repro.transfer.delta import DeltaReplicator, transfer_closure
+
+__all__ = ["CASCorruption", "ChunkStore", "chunk_key", "DeltaReplicator",
+           "transfer_closure"]

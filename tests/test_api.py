@@ -145,7 +145,7 @@ def test_session_round_trip(run_dir, mesh1):
     s.attach(lambda: {"train_state": state})
     s.register_host_state("host", lambda: host["v"],
                           lambda v: host.__setitem__("v", v))
-    path = s.checkpoint(3)
+    s.checkpoint(3)
     assert s.store.list_steps() == [3]
 
     host2 = {"v": None}

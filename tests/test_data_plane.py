@@ -5,14 +5,12 @@ and gc racing a concurrent restore."""
 import os
 import threading
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.api import CheckpointOptions, CheckpointSession
 from repro.core import SnapshotEngine
-from repro.core.snapshot_io import MANIFEST, SnapshotStore, snapshot_dir
+from repro.core.snapshot_io import SnapshotStore, snapshot_dir
 from repro.serialization.pack import pack_files, stripe_path
 
 

@@ -9,10 +9,9 @@ reproducibility bar cited by the paper)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
-from repro.runtime.trainer import (SimulatedFailure, TrainConfig, Trainer,
+from repro.runtime.trainer import (TrainConfig, Trainer,
                                    run_with_restarts)
 from repro.sharding import get_policy
 

@@ -8,8 +8,7 @@ import sys
 
 import pytest
 
-from repro.launch.dryrun import (DTYPE_BYTES, PEAK_FLOPS, analyse,
-                                 parse_collectives)
+from repro.launch.dryrun import DTYPE_BYTES, parse_collectives
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,10 +1,7 @@
 """SnapshotEngine unit + integration tests: the paper's checkpoint/restore
 workflow (lock → checkpoint → dump → unlock; restore), plugin hook ordering,
 abort semantics, async mode, incremental mode, GC, corruption fallback."""
-import json
 import os
-import threading
-import time
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +11,7 @@ import pytest
 from repro.core import SnapshotEngine
 from repro.core.engine import CheckpointAborted
 from repro.core.lock import DeviceLock, LockTimeout
-from repro.core.plugins import Hook, HookContext, Plugin
+from repro.core.plugins import Plugin
 from repro.core.snapshot_io import MANIFEST, SnapshotStore, snapshot_dir
 
 

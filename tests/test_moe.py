@@ -3,7 +3,6 @@ path vs single-device fallback parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from repro.configs import get_smoke_config
 from repro.launch.mesh import make_mesh
 from repro.models import moe as MOE

@@ -78,7 +78,6 @@ def test_bf16_scores_close_to_f32():
 
 def test_cast_params_once_close_to_master():
     cfg, model, params, batch = _model_and_batch()
-    l0 = model.forward(params, batch)
     L.CAST_PARAMS_ONCE = True
     # compute_dtype is f32 in smokes -> cast is identity there; force bf16
     model_bf16 = build_model(cfg, POLICY, None,

@@ -1,5 +1,4 @@
 """Sharding-policy unit + property tests."""
-import jax
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")

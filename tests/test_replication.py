@@ -2,12 +2,11 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SnapshotEngine
 from repro.core.replication import DirReplicator, MemReplicator
-from repro.core.snapshot_io import MANIFEST, snapshot_dir
+from repro.core.snapshot_io import MANIFEST
 
 
 def _state():

@@ -2,7 +2,6 @@
 run — train with periodic async unified snapshots, crash mid-run, restore
 on a replacement trainer bitwise-exactly, finish training, then serve the
 trained model with a mid-generation serving snapshot."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Fault-tolerance runtime tests: failure detection, stragglers, JIT
 checkpoint policy, periodic checkpoints, restart-to-completion."""
-import time
 
 import jax.numpy as jnp
 import numpy as np
