@@ -163,6 +163,103 @@ def run_dataplane(n_entries: int = 64, entry_kb: int = 384,
     return out
 
 
+def run_lazy(n_entries: int = 16, entry_kb: int = 384,
+             repeats: int = 3) -> dict:
+    """Time-to-first-step: priority-ordered lazy restore vs eager full
+    materialization.
+
+    The workload has the shape of a training checkpoint: hot params (the
+    critical set, 1/3 of the bytes), cold optimizer slots m+v (2/3), and
+    a small host blob.  The "first step" touches params only — exactly
+    what a resumed job's forward pass does while the optimizer slots are
+    still streaming in the background.  Lazy and eager results are
+    asserted bit-identical before anything is emitted."""
+    from repro.api import CheckpointOptions, CheckpointSession
+
+    rng = np.random.default_rng(1)
+
+    def block():
+        return rng.integers(0, 8, size=entry_kb * 256).astype(np.float32)
+
+    keys = [f"w{i:03d}" for i in range(n_entries)]
+    state = {"params": {k: block() for k in keys},
+             "opt": {"m": {k: block() for k in keys},
+                     "v": {k: block() for k in keys}}}
+    critical_bytes = sum(v.nbytes for v in state["params"].values())
+    total_bytes = critical_bytes * 3
+    _emit("lazy.workload.bytes_total", total_bytes / 2**20, "MiB")
+    _emit("lazy.workload.bytes_critical", critical_bytes / 2**20, "MiB")
+
+    run_dir = tempfile.mkdtemp(prefix="bench_lazy_")
+    try:
+        w = CheckpointSession(run_dir, CheckpointOptions(compress=True),
+                              backend="host")
+        w.attach(lambda: {"train_state": state})
+        w.register_host_state("cursor", lambda: {"step": 1},
+                              lambda st: None)
+        w.checkpoint(1)
+
+        def first_step(tree):
+            # the resumed job's forward pass: reads every param once
+            return float(sum(np.asarray(v).sum()
+                             for v in tree["params"].values()))
+
+        def check_exact(tree):
+            for k in keys:
+                np.testing.assert_array_equal(
+                    np.asarray(tree["params"][k]), state["params"][k])
+                np.testing.assert_array_equal(
+                    np.asarray(tree["opt"]["m"][k]), state["opt"]["m"][k])
+                np.testing.assert_array_equal(
+                    np.asarray(tree["opt"]["v"][k]), state["opt"]["v"][k])
+
+        eager_opts = CheckpointOptions(compress=True)
+        lazy_opts = CheckpointOptions(
+            compress=True, restore_mode="lazy",
+            critical_states=("train_state/params",))
+
+        eager_wall, eager_ttfs = [], []
+        for _ in range(repeats):
+            r = CheckpointSession(run_dir, eager_opts, backend="host")
+            r.attach(lambda: {"train_state": None})
+            r.register_host_state("cursor", lambda: None, lambda st: None)
+            t0 = time.perf_counter()
+            restored = r.restore()
+            eager_wall.append(time.perf_counter() - t0)
+            first_step(restored["train_state"])
+            eager_ttfs.append(time.perf_counter() - t0)
+            check_exact(restored["train_state"])
+
+        lazy_ttfs, lazy_full, lazy_resume = [], [], []
+        for _ in range(repeats):
+            r = CheckpointSession(run_dir, lazy_opts, backend="host")
+            r.attach(lambda: {"train_state": None})
+            r.register_host_state("cursor", lambda: None, lambda st: None)
+            t0 = time.perf_counter()
+            restored = r.restore(wait="critical")
+            lazy_resume.append(time.perf_counter() - t0)
+            first_step(restored["train_state"])      # critical set only
+            lazy_ttfs.append(time.perf_counter() - t0)
+            full = r.restore_barrier()
+            lazy_full.append(time.perf_counter() - t0)
+            check_exact(full["train_state"])         # bit-exact vs dump
+
+        out = {"eager_wall_s": min(eager_wall),
+               "eager_ttfs_s": min(eager_ttfs),
+               "lazy_resume_s": min(lazy_resume),
+               "lazy_ttfs_s": min(lazy_ttfs),
+               "lazy_full_s": min(lazy_full)}
+        for k, v in out.items():
+            _emit(f"lazy.{k}", v * 1e3, "ms")
+        ratio = out["lazy_ttfs_s"] / out["eager_ttfs_s"]
+        _emit("lazy.ttfs_vs_eager", ratio, "x")
+        _emit("lazy.speedup.ttfs",
+              out["eager_ttfs_s"] / out["lazy_ttfs_s"], "x")
+        return {**out, "ttfs_vs_eager": ratio}
+    finally:
+        shutil.rmtree(run_dir, ignore_errors=True)
+
+
 def run_sweep(n_entries: int = 64, entry_kb: int = 128,
               stripes=(1, 2, 4), threads=(1, 2, 4),
               repeats: int = 3) -> list:
@@ -198,6 +295,9 @@ def main(argv=None) -> int:
                     help="serial-compat vs pipelined comparison")
     ap.add_argument("--sweep", action="store_true",
                     help="stripes x io_threads grid")
+    ap.add_argument("--lazy", action="store_true",
+                    help="time-to-first-step: lazy (resume-before-read) "
+                         "vs eager full materialization")
     ap.add_argument("--entries", type=int, default=64)
     ap.add_argument("--entry-kb", type=int, default=384)
     ap.add_argument("--repeats", type=int, default=4)
@@ -211,6 +311,8 @@ def main(argv=None) -> int:
         run_dataplane(args.entries, args.entry_kb, args.repeats)
     if args.sweep:
         run_sweep(repeats=args.repeats)
+    if args.lazy:
+        run_lazy(repeats=args.repeats)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(RECORDS, f, indent=1, sort_keys=True)

@@ -47,7 +47,8 @@ def run_cell(engine: str, scenario: str, steps: int,
                            total_steps=steps, kind=kind)
 
     phases = {k: 0.0 for k in ("detect_s", "schedule_s", "restore_s",
-                               "replay_s", "total_s")}
+                               "restore_background_s", "replay_s",
+                               "total_s")}
     incidents = 0
     goodputs: List[float] = []
     ckpts = jit = 0

@@ -1,11 +1,21 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
 the dry-run artifacts.  Usage: PYTHONPATH=src:. python -m benchmarks.make_tables
+
+``--update-readme`` additionally renders the time-to-first-step table
+(from ``BENCH_restore_lazy.json``, falling back to the committed
+baseline) into README.md between the ``lazy-restore-table`` markers.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import re
+
+README = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "README.md")
+LAZY_BEGIN = "<!-- lazy-restore-table:begin -->"
+LAZY_END = "<!-- lazy-restore-table:end -->"
 
 ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "artifacts", "dryrun")
@@ -82,10 +92,17 @@ def perf_rows(recs):
 
 
 def load_bench(patterns=("BENCH_*.json", "artifacts/bench/*.json")):
-    """Perf-trajectory artifacts written by bench_ckpt_restore --json."""
+    """Perf-trajectory artifacts written by bench_ckpt_restore --json;
+    falls back to the committed baselines so tables can render from a
+    clean checkout."""
     recs = []
     for pat in patterns:
         for f in sorted(glob.glob(pat)):
+            recs.append((os.path.basename(f), json.load(open(f))))
+    if not recs:
+        base = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines", "*.json")
+        for f in sorted(glob.glob(base)):
             recs.append((os.path.basename(f), json.load(open(f))))
     return recs
 
@@ -120,6 +137,49 @@ def dataplane_table(recs):
                     f"{fmt(row['restore_s'] * 1e3)} |")
             out.append("")
     return "\n".join(out) if out else "(no BENCH_*.json artifacts found)"
+
+
+def lazy_table(recs):
+    """Time-to-first-step table (from BENCH_restore_lazy.json): lazy
+    (resume-before-read) vs eager full materialization."""
+    out = []
+    for name, r in recs:
+        if "lazy.ttfs_vs_eager" not in r:
+            continue
+        out.append(f"| restore | resumable at (ms) | first step at (ms) "
+                   f"| full image at (ms) |")
+        out.append("|---|---|---|---|")
+        out.append(f"| eager | {fmt(r['lazy.eager_wall_s'])} | "
+                   f"{fmt(r['lazy.eager_ttfs_s'])} | "
+                   f"{fmt(r['lazy.eager_wall_s'])} |")
+        out.append(f"| lazy | {fmt(r['lazy.lazy_resume_s'])} | "
+                   f"{fmt(r['lazy.lazy_ttfs_s'])} | "
+                   f"{fmt(r['lazy.lazy_full_s'])} |")
+        out.append(
+            f"\ntime-to-first-step: "
+            f"**{r['lazy.ttfs_vs_eager']:.0%} of the eager wall** "
+            f"({fmt(r['lazy.speedup.ttfs'])}x earlier) on a "
+            f"{fmt(r['lazy.workload.bytes_total'])} MiB image with a "
+            f"{fmt(r['lazy.workload.bytes_critical'])} MiB critical set "
+            f"(`{name}`)")
+        break
+    return "\n".join(out) if out else "(no BENCH_restore_lazy.json found)"
+
+
+def update_readme(recs, path=README):
+    """Render the lazy-restore table into README between the markers."""
+    table = lazy_table(recs)
+    with open(path) as f:
+        text = f.read()
+    if LAZY_BEGIN not in text or LAZY_END not in text:
+        raise SystemExit(f"{path}: missing {LAZY_BEGIN}/{LAZY_END} markers")
+    new = re.sub(
+        re.escape(LAZY_BEGIN) + r".*?" + re.escape(LAZY_END),
+        LAZY_BEGIN + "\n" + table + "\n" + LAZY_END,
+        text, flags=re.S)
+    with open(path, "w") as f:
+        f.write(new)
+    print(f"updated {path} (lazy-restore table)")
 
 
 def fmt_bytes(n):
@@ -160,7 +220,17 @@ def transfer_table(recs):
     return "\n".join(out) if out else "(no BENCH_transfer.json artifacts)"
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update-readme", action="store_true",
+                    help="render the time-to-first-step table into "
+                         "README.md between the lazy-restore markers")
+    args = ap.parse_args(argv)
+    bench = load_bench()
+    if args.update_readme:
+        update_readme(bench)
+        return
     recs = load_all()
     print("## single-pod baseline roofline\n")
     print(roofline_table(recs, "pod"))
@@ -170,11 +240,12 @@ def main():
     print(memory_table(recs))
     print("\n## hillclimb iterations\n")
     print(perf_rows(recs))
-    bench = load_bench()
     print("\n## snapshot data plane (serial vs pipelined)\n")
     print(dataplane_table(bench))
     print("\n## checkpoint transfer & migration\n")
     print(transfer_table(bench))
+    print("\n## lazy restore: time-to-first-step\n")
+    print(lazy_table(bench))
 
 
 if __name__ == "__main__":

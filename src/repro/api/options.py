@@ -14,10 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 _MODES = ("sync", "async")
 _TRANSFERS = ("copy", "delta")
+_RESTORE_MODES = ("eager", "lazy")
 
 # env-var names, one per field (the `criu_set_*` <-> CRIU_* convention)
 _ENV_PREFIX = "REPRO_CKPT_"
@@ -59,6 +60,16 @@ class CheckpointOptions:
                      0 = auto-size like io_threads.
     verify_restore   CRC-verify images before restoring from them (both the
                      newest-valid scan and explicitly requested steps).
+    restore_mode     "eager" (default: the whole image is materialized
+                     before restore() returns) or "lazy" (resume-before-
+                     read: restore() returns once the critical set is
+                     placed; a background LazyMaterializer streams the
+                     remaining entries, joined via restore_barrier()).
+    critical_states  which entries form the lazy critical set.  Each spec
+                     is "state" (every entry of that state) or
+                     "state/path-prefix" (a subtree, e.g.
+                     "train_state/params").  None = the first state in
+                     the image's recorded restore order.
     pack_format      2 (default): chunked/striped packs written by the
                      pipelined data plane; 1: serial-compat single-file
                      packs, byte-compatible with images from older code.
@@ -81,12 +92,18 @@ class CheckpointOptions:
     transfer: str = "copy"
     transfer_workers: int = 0
     verify_restore: bool = True
+    restore_mode: str = "eager"
+    critical_states: Optional[Tuple[str, ...]] = None
     pack_format: int = 2
     io_threads: int = 0
     chunk_mb: int = 4
     stripes: int = 2
 
     def __post_init__(self):
+        if isinstance(self.critical_states, (list, set)):
+            # frozen dataclass: normalize to a hashable tuple in place
+            object.__setattr__(self, "critical_states",
+                               tuple(self.critical_states))
         self.validate()
 
     # ------------------------------------------------------------ checks
@@ -112,6 +129,17 @@ class CheckpointOptions:
                 self.transfer_workers < 0:
             raise OptionsError("transfer_workers must be an int >= 0, "
                                f"got {self.transfer_workers!r}")
+        if self.restore_mode not in _RESTORE_MODES:
+            raise OptionsError(f"restore_mode must be one of "
+                               f"{_RESTORE_MODES}, got {self.restore_mode!r}")
+        if self.critical_states is not None:
+            if (not isinstance(self.critical_states, tuple)
+                    or not all(isinstance(s, str) and s
+                               for s in self.critical_states)):
+                raise OptionsError(
+                    "critical_states must be a tuple of non-empty "
+                    "'state' or 'state/path-prefix' specs, "
+                    f"got {self.critical_states!r}")
         if self.pack_format not in (1, 2):
             raise OptionsError(f"pack_format must be 1 or 2, "
                                f"got {self.pack_format!r}")
@@ -148,6 +176,10 @@ class CheckpointOptions:
         def as_bool(raw: str) -> bool:
             return raw.strip().lower() in ("1", "true", "yes", "on")
 
+        def as_specs(raw: str) -> Optional[Tuple[str, ...]]:
+            specs = tuple(s.strip() for s in raw.split(",") if s.strip())
+            return specs or None
+
         return cls(
             mode=get("MODE", str, cls.mode),
             incremental=get("INCREMENTAL", as_bool, cls.incremental),
@@ -160,6 +192,9 @@ class CheckpointOptions:
             transfer_workers=get("TRANSFER_WORKERS", int,
                                  cls.transfer_workers),
             verify_restore=get("VERIFY_RESTORE", as_bool, cls.verify_restore),
+            restore_mode=get("RESTORE_MODE", str, cls.restore_mode),
+            critical_states=get("CRITICAL_STATES", as_specs,
+                                cls.critical_states),
             pack_format=get("PACK_FORMAT", int, cls.pack_format),
             io_threads=get("IO_THREADS", int, cls.io_threads),
             chunk_mb=get("CHUNK_MB", int, cls.chunk_mb),
@@ -179,6 +214,7 @@ class CheckpointOptions:
             _ENV_PREFIX + "TRANSFER_WORKERS": str(self.transfer_workers),
             _ENV_PREFIX + "VERIFY_RESTORE": "1" if self.verify_restore
             else "0",
+            _ENV_PREFIX + "RESTORE_MODE": self.restore_mode,
             _ENV_PREFIX + "PACK_FORMAT": str(self.pack_format),
             _ENV_PREFIX + "IO_THREADS": str(self.io_threads),
             _ENV_PREFIX + "CHUNK_MB": str(self.chunk_mb),
@@ -186,6 +222,9 @@ class CheckpointOptions:
         }
         if self.replicate_to is not None:
             out[_ENV_PREFIX + "REPLICATE_TO"] = self.replicate_to
+        if self.critical_states is not None:
+            out[_ENV_PREFIX + "CRITICAL_STATES"] = ",".join(
+                self.critical_states)
         return out
 
     def to_dict(self) -> Dict[str, object]:

@@ -182,15 +182,39 @@ class CheckpointSession:
 
     def restore(self, step: Optional[int] = None, mesh=None,
                 shardings: Optional[Dict[str, Any]] = None,
-                verify: Optional[bool] = None) -> Dict[str, Any]:
+                verify: Optional[bool] = None,
+                wait: Optional[str] = None) -> Dict[str, Any]:
+        """`criu restore`.  ``wait="critical"`` (the default when
+        ``options.restore_mode == "lazy"``) returns as soon as the
+        critical set is placed — the job resumes while the rest of the
+        image streams in the background; join it with
+        :meth:`restore_barrier`.  ``wait="all"`` blocks until the whole
+        image is materialized."""
         return self.engine.restore(step=step, mesh=mesh,
-                                   shardings=shardings, verify=verify)
+                                   shardings=shardings, verify=verify,
+                                   wait=wait)
 
     def restore_into(self, template: PyTree, state: str = "train_state",
                      step: Optional[int] = None, mesh=None,
-                     shardings: Optional[PyTree] = None) -> PyTree:
+                     shardings: Optional[PyTree] = None,
+                     wait: Optional[str] = None) -> PyTree:
         return self.engine.restore_into(template, state=state, step=step,
-                                        mesh=mesh, shardings=shardings)
+                                        mesh=mesh, shardings=shardings,
+                                        wait=wait)
+
+    def restore_barrier(self) -> Optional[Dict[str, Any]]:
+        """Join the background restore stream (no-op after eager
+        restores): blocks until every lazily-scheduled entry has landed
+        and returns the complete restored tree.  Raises
+        :class:`repro.core.lazy.LazyRestoreError` if the stream died; the
+        step is quarantined and a retried :meth:`restore` falls back to
+        an eager restore of the previous committed image."""
+        return self.engine.restore_barrier()
+
+    @property
+    def lazy_pending(self) -> bool:
+        """True while a background restore stream is still outstanding."""
+        return self.engine.lazy_pending
 
     # ------------------------------------------------------- queries
     @property

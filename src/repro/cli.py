@@ -131,6 +131,41 @@ def _print_stripe_layout(store, m) -> None:
         pass                      # layout detail is best-effort cosmetics
 
 
+def _print_restore_schedule(m) -> None:
+    """Per-state restore-order breakdown: sizes, chunk counts, and
+    priority spans, grouped by state/top-level-subtree — the data an
+    operator needs to choose (and audit) the lazy critical set."""
+    order = m.get("restore_order") or []
+    sizes = m.get("entry_bytes") or {}
+    if not order:
+        return
+    chunk_bytes = m.get("chunk_bytes", 0)
+    groups: dict = {}
+    for i, name in enumerate(order):
+        if name == "__host__":
+            key = "(host blobs)"
+        else:
+            state, path = name.split("::", 1)[0], name.split("::")[1]
+            key = f"{state}/{path.split('/')[0]}" if "/" in path else state
+        g = groups.setdefault(key, {"entries": 0, "bytes": 0,
+                                    "chunks": 0, "lo": i, "hi": i})
+        g["entries"] += 1
+        nbytes = int(sizes.get(name, 0))
+        g["bytes"] += nbytes
+        g["chunks"] += (max(1, -(-nbytes // chunk_bytes))
+                        if chunk_bytes else 1)
+        g["lo"], g["hi"] = min(g["lo"], i), max(g["hi"], i)
+    rows = []
+    for key, g in sorted(groups.items(), key=lambda kv: kv[1]["lo"]):
+        rows.append([key, g["entries"], _fmt_bytes(g["bytes"]),
+                     g["chunks"], f"{g['lo']}-{g['hi']}"])
+    print("  restore schedule (priority = dump-time registration order;")
+    print("  lazy critical set defaults to the first state):")
+    for line in _table(rows, ["subtree", "entries", "bytes", "chunks",
+                              "priority"]).splitlines():
+        print(f"    {line}")
+
+
 # ---------------------------------------------------------------- inspect
 def cmd_inspect(args) -> int:
     store = _store(args.run_dir)
@@ -151,6 +186,7 @@ def cmd_inspect(args) -> int:
         print(f"  written:     {_fmt_bytes(m.get('written_bytes', 0))}   "
               f"reused: {_fmt_bytes(m.get('reused_bytes', 0))}")
         _print_stripe_layout(store, m)
+        _print_restore_schedule(m)
         chain = _parent_chain(store, args.step)
         print(f"  parent chain: {' -> '.join(map(str, chain))}")
         topo = m.get("topology") or {}
@@ -267,11 +303,35 @@ def cmd_restore(args) -> int:
             _RestoreProbe.step = ctx.step
 
     _store(args.run_dir)                              # friendly errors first
-    eng = SnapshotEngine(args.run_dir, backend="host")
+    options = None
+    if args.lazy:
+        from repro.api import CheckpointOptions
+        options = CheckpointOptions(
+            restore_mode="lazy",
+            critical_states=tuple(args.critical) or None)
+    eng = SnapshotEngine(args.run_dir, backend="host", options=options)
     eng.add_plugin(_RestoreProbe())
-    restored = eng.restore(step=args.step, verify=True)
+    import time as _time
+    t0 = _time.perf_counter()
+    restored = eng.restore(step=args.step, verify=True,
+                           wait="critical" if args.lazy else None)
+    t_resume = _time.perf_counter() - t0
+    if args.lazy:
+        restored = eng.restore_barrier()
+        t_full = _time.perf_counter() - t0
     print(f"step {_RestoreProbe.step}: restore pipeline ran on the "
           f"'host' backend")
+    if args.lazy:
+        st = eng.last_stats
+        print(f"  lazy:        resumed on the critical set in "
+              f"{t_resume*1e3:.1f}ms "
+              f"({int(st.get('critical_entries', 0))} entries, "
+              f"{_fmt_bytes(st.get('critical_bytes', 0))}); "
+              f"full materialization {t_full*1e3:.1f}ms "
+              f"({int(st.get('background_entries', 0))} background "
+              f"entries, {_fmt_bytes(st.get('background_bytes', 0))})")
+        print(f"  resume-before-read: job runnable after "
+              f"{t_resume/t_full:.0%} of the restore wall")
     host_names = _RestoreProbe.host_names
     total = 0
     rows = []
@@ -318,7 +378,7 @@ def cmd_jobs(args) -> int:
             phases = "  ".join(
                 f"{k}={b[k]*1e3:.1f}ms" for k in
                 ("detect_s", "transfer_s", "schedule_s", "restore_s",
-                 "replay_s")
+                 "restore_background_s", "replay_s")
                 if b[k] is not None)
             print(f"  incident {i}:  {b['cause']}  {phases}"
                   + (f"  replayed={b['steps_replayed']}"
@@ -548,6 +608,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("run_dir")
     p.add_argument("--step", type=int, default=None)
     p.add_argument("--dry-run", action="store_true")
+    p.add_argument("--lazy", action="store_true",
+                   help="priority-ordered lazy restore: time the "
+                        "critical-set resume vs full materialization")
+    p.add_argument("--critical", action="append", default=[],
+                   metavar="STATE[/SUBTREE]",
+                   help="critical-set spec (repeatable); default: the "
+                        "image's first recorded state")
     p.set_defaults(fn=cmd_restore)
 
     p = sub.add_parser("jobs", help="inspect orchestrator job records "

@@ -178,12 +178,29 @@ class HostNumpyBackend(Plugin):
         ctx.topology_map["mode"] = "host"
         ctx.topology_map["target"] = None
 
+    @staticmethod
+    def _place_entry(reader, state: str, path: str):
+        from repro.core.device_plugin import assemble_global
+        entry = reader.load_entry(state, path)
+        if entry["kind"] == "device_array":
+            return assemble_global(entry)
+        if entry["kind"] == "np":
+            return entry["data"]
+        return entry["value"]
+
     def resume_devices_late(self, ctx: HookContext) -> None:
         from repro.core.device_plugin import _unflatten_paths, assemble_global
         t0 = time.perf_counter()
         place_s = 0.0
         reader = ctx.reader
         threads = getattr(ctx, "restore_threads", 0) or self.restore_threads
+        if getattr(ctx, "lazy", False):
+            from repro.core.lazy import resume_with_schedule
+            resume_with_schedule(ctx, self._place_entry, threads)
+            self.lock.unlock()                        # resume on criticals
+            ctx.stats["host_to_device_s"] = time.perf_counter() - t0
+            ctx.stats["place_s"] = ctx.stats.get("place_critical_s", 0.0)
+            return
         for name in reader.state_names():
             keys = reader.entry_names(name)
             if threads > 1 and len(keys) > 1:

@@ -225,22 +225,58 @@ class DevicePlugin(Plugin):
         ctx.topology_map["mode"] = compatibility(saved, target)
         ctx.topology_map["target"] = target
 
+    def _flat_shardings(self, ctx: HookContext, state: str) -> Dict[str, Any]:
+        cache = getattr(ctx, "_flat_sh_cache", None)
+        if cache is None:
+            cache = ctx._flat_sh_cache = {}
+        if state not in cache:
+            flat: Dict[str, Any] = {}
+            shardings = ctx.target_shardings.get(state)
+            if shardings is not None:
+                for path, leaf in jax.tree_util.tree_flatten_with_path(
+                        shardings)[0]:
+                    flat[_key_str(path)] = leaf
+            cache[state] = flat
+        return cache[state]
+
+    def _place_entry(self, ctx: HookContext, reader, state: str,
+                     path: str):
+        """Load + rebuild one logical leaf — the unit the lazy
+        materializer streams, so arrays come back incrementally as their
+        shards land."""
+        entry = reader.load_entry(state, path)
+        if entry["kind"] == "device_array":
+            return restore_array(entry, ctx.target_mesh,
+                                 self._flat_shardings(ctx, state).get(path))
+        if entry["kind"] == "np":
+            return entry["data"]
+        return entry["value"]
+
     def resume_devices_late(self, ctx: HookContext) -> None:
         """host→device restore, with on-demand parallel entry loading (the
         paper cites this optimization from Yang et al. SoCC'24): worker
         threads stream pack entries from storage while the main thread
-        places shards on devices."""
+        places shards on devices.
+
+        Lazy mode (resume-before-read): only the critical set is placed
+        here; the rest of the image is handed to a LazyMaterializer the
+        engine starts after the job is unlocked, and arrays rebuild
+        incrementally as their shards land."""
         t0 = time.perf_counter()
-        place_s = 0.0
         reader = ctx.reader
         threads = getattr(ctx, "restore_threads", 0) or self.restore_threads
+        if getattr(ctx, "lazy", False):
+            from repro.core.lazy import resume_with_schedule
+            resume_with_schedule(
+                ctx, lambda r, s, p: self._place_entry(ctx, r, s, p),
+                threads)
+            self.lock.unlock()                        # resume on criticals
+            ctx.stats["host_to_device_s"] = time.perf_counter() - t0
+            ctx.stats["place_s"] = ctx.stats.get("place_critical_s", 0.0)
+            return
+        place_s = 0.0
         for name in reader.state_names():
-            shardings = ctx.target_shardings.get(name)
-            flat_sh = {}
-            if shardings is not None:
-                for path, leaf in jax.tree_util.tree_flatten_with_path(
-                        shardings)[0]:
-                    flat_sh[_key_str(path)] = leaf
+            flat_sh = self._flat_shardings(ctx, name)
             keys = reader.entry_names(name)
             if threads > 1 and len(keys) > 1:
                 from concurrent.futures import ThreadPoolExecutor

@@ -124,6 +124,14 @@ class SnapshotEngine:
         self._pending_ctx: Optional[HookContext] = None
         self._pending_err: List[BaseException] = []
         self._write_error: Optional[str] = None
+        # lazy-restore stream state: at most one background materializer
+        # per engine; a failed stream quarantines its step so the retry's
+        # newest-valid scan falls back past it (eager semantics)
+        self._lazy = None
+        self._lazy_ctx = None
+        self._lazy_step: Optional[int] = None
+        self._last_restored: Optional[Dict[str, Any]] = None
+        self._quarantined: set = set()
         self.last_stats: Dict[str, Any] = {}
         # step of the newest image committed by THIS engine instance —
         # lets callers distinguish "an image of step N exists" from "WE
@@ -169,6 +177,11 @@ class SnapshotEngine:
         if self._provider is None:
             raise RuntimeError("no state provider attached")
         self.wait_pending()
+        if self._lazy is not None:
+            # a dump must never freeze a half-restored job: join the
+            # background stream first (raises if it died — the caller's
+            # state is incomplete and must not be captured as an image)
+            self.restore_barrier()
 
         ctx = HookContext("dump", step)
         ctx.roots = self._provider()
@@ -341,34 +354,110 @@ class SnapshotEngine:
         return self._write_error
 
     # ------------------------------------------------------------ restore
+    def _verify_reader(self, reader, lazy: bool) -> None:
+        """Pre-restore image check: eager verifies every entry; lazy
+        verifies the critical set (plus the blobs read eagerly) so the
+        job can resume before the cold entries are even read — those keep
+        the same corruption guarantee because every background chunk read
+        re-checks its stored CRC."""
+        if lazy:
+            from repro.core.lazy import critical_pack_names, split_schedule
+            critical, _ = split_schedule(reader,
+                                         self.options.critical_states)
+            reader.verify_entries(critical_pack_names(reader, critical))
+        else:
+            reader.verify_all()
+
+    def _make_healer(self, step: int):
+        """Background-stream heal hook: re-pull the image (and its delta
+        chain) from the replica, so a torn background chunk is repaired
+        in place instead of killing the stream."""
+        rep = self.replicator
+        if rep is None or not hasattr(rep, "pull"):
+            return None
+
+        def heal(state: str, path: str, exc: BaseException) -> bool:
+            try:
+                manifest = self.store.manifest(step)
+                steps = sorted(self.store.referenced_steps(manifest)
+                               | {step})
+            except Exception:
+                steps = [step]
+            healed = False
+            for s in steps:
+                try:
+                    if rep.pull(self.run_dir, s) is not None:
+                        healed = True
+                except Exception:
+                    continue
+            return healed
+
+        return heal
+
+    def _abandon_lazy(self) -> None:
+        """A newer restore supersedes any still-streaming one: cancel it
+        and wait for the thread to stop (its reader is closed and its pin
+        released by the stream's own cleanup).  Errors are not raised —
+        the superseding restore is frequently the retry path."""
+        mat, self._lazy = self._lazy, None
+        self._lazy_ctx, self._lazy_step = None, None
+        if mat is not None and not mat.done:
+            mat.cancel()
+            mat.wait_done(timeout=60.0)
+
     def restore(self, step: Optional[int] = None, mesh=None,
                 shardings: Optional[Dict[str, Any]] = None,
-                verify: Optional[bool] = None) -> Dict[str, Any]:
+                verify: Optional[bool] = None,
+                wait: Optional[str] = None) -> Dict[str, Any]:
         """Unified restore.  Returns {state_name: nested-dict pytree}; host
-        state is pushed back through the registered CallbackPlugins."""
+        state is pushed back through the registered CallbackPlugins.
+
+        With ``options.restore_mode == "lazy"`` (or ``wait="critical"``)
+        the call returns as soon as the critical set is placed; the
+        remaining entries stream in the background and
+        :meth:`restore_barrier` joins them.  ``wait="all"`` forces a full
+        materialization before returning (eager restores always behave
+        this way)."""
         if verify is None:
             verify = self.options.verify_restore
+        if wait not in (None, "critical", "all"):
+            raise ValueError(f"wait must be 'critical' or 'all', "
+                             f"got {wait!r}")
+        # wait="critical" opts a single call into the lazy machinery even
+        # under eager options (per-call resume-before-read)
+        lazy = self.options.restore_mode == "lazy" or wait == "critical"
+        if wait is None:
+            wait = "critical" if lazy else "all"
         self.wait_pending()
+        self._abandon_lazy()
+        t_restore0 = time.perf_counter()
         io_threads = self.options.effective_io_threads()
-        # Hold the store lock for the whole restore so a gc running in
-        # another thread of THIS process (sharing this SnapshotStore,
+        # Hold the store lock for the whole critical phase so a gc running
+        # in another thread of THIS process (sharing this SnapshotStore,
         # e.g. a concurrent checkpoint with keep=N) cannot delete a step
         # or a delta-chain parent pack out from under the scan/reads.
-        # A gc from a different process (or a second store instance on
-        # the run_dir) is not serialized by this lock — the newest-valid
-        # scan tolerates vanishing images by falling back, but an
-        # explicitly requested step may still fail mid-read there.
+        # The lazy background stream runs *outside* the lock — it pins its
+        # step instead, so gc skips it without blocking behind a
+        # deliberately long-running restore.  A gc from a different
+        # process (or a second store instance on the run_dir) is not
+        # serialized by this lock — the newest-valid scan tolerates
+        # vanishing images by falling back, but an explicitly requested
+        # step may still fail mid-read there.
         with self.store.lock:
             steps = self.store.list_steps()
             if step is None:
                 # newest *valid* image: fall back past torn/corrupt images
+                # and past steps whose lazy background stream died (the
+                # quarantine — a retry must not pick the same bad image)
                 for s in reversed(steps):
+                    if s in self._quarantined:
+                        continue
                     reader = None
                     try:
                         reader = self.store.reader(s, verify=verify,
                                                    io_threads=io_threads)
                         if verify:
-                            reader.verify_all()
+                            self._verify_reader(reader, lazy)
                         step = s
                         break
                     except Exception:
@@ -379,9 +468,10 @@ class SnapshotEngine:
                     if self.replicator is not None:
                         got = self.replicator.pull_latest(self.run_dir)
                         if got is not None:
+                            self._quarantined.discard(got)
                             return self.restore(step=got, mesh=mesh,
                                                 shardings=shardings,
-                                                verify=verify)
+                                                verify=verify, wait=wait)
                     raise FileNotFoundError(
                         f"no restorable snapshot under {self.run_dir}")
             else:
@@ -393,7 +483,7 @@ class SnapshotEngine:
                                            io_threads=io_threads)
                 if verify:
                     try:
-                        reader.verify_all()
+                        self._verify_reader(reader, lazy)
                     except Exception:
                         reader.close()
                         raise
@@ -404,41 +494,123 @@ class SnapshotEngine:
             ctx.target_mesh = mesh if mesh is not None else self.mesh
             ctx.target_shardings = shardings or {}
             ctx.restore_threads = self.options.restore_threads or io_threads
+            ctx.lazy = lazy
+            if lazy:
+                ctx.critical_specs = self.options.critical_states
+                self.store.pin(step)
+                ctx.lazy_reopen = (
+                    lambda s=step: self.store.reader(
+                        s, verify=verify, io_threads=io_threads))
+                ctx.lazy_heal = self._make_healer(step)
+                ctx.lazy_on_done = (lambda s=step: self.store.unpin(s))
             self.registry.init_all("restore")
+            materializer = None
             try:
                 ctx.host_state = reader.host_state()
                 self.registry.run(Hook.RESTORE_EXT_STATE, ctx)
                 self.registry.run(Hook.UPDATE_TOPOLOGY_MAP, ctx)
                 self.registry.run(Hook.RESUME_DEVICES_LATE, ctx)
+                materializer = getattr(ctx, "materializer", None)
             except Exception:
                 self.registry.exit_all("restore", False)
-                raise
-            finally:
-                ctx.stats.update(reader.io_stats())   # read_s, decompress_s
+                ctx.stats.update(reader.io_stats())
                 reader.close()
+                if lazy:
+                    self.store.unpin(step)
+                raise
+            ctx.stats.update(reader.io_stats())   # read_s, decompress_s
+            if materializer is None:
+                reader.close()                    # eager: image fully read
+                if lazy:
+                    self.store.unpin(step)        # backend without lazy
         self.registry.exit_all("restore", True)
+        if lazy:
+            ctx.stats["restore_critical_s"] = (time.perf_counter()
+                                               - t_restore0)
+        ctx.stats["restore_mode"] = "lazy" if lazy else "eager"
         self.last_stats = dict(ctx.stats)
         self.last_stats["topology_mode"] = ctx.topology_map.get("mode")
+        self._last_restored = ctx.restored
+        if materializer is not None:
+            self._lazy = materializer
+            self._lazy_ctx = ctx
+            self._lazy_step = step
+            materializer.start()                  # stream the cold tail
+            if wait == "all":
+                return self.restore_barrier()
         return ctx.restored
 
-    def restore_into(self, template: PyTree, state: str = "train_state",
-                     step: Optional[int] = None, mesh=None,
-                     shardings: Optional[PyTree] = None) -> PyTree:
-        """Restore one state into the caller's pytree structure (types
-        preserved — e.g. OptState dataclasses)."""
+    def restore_barrier(self) -> Optional[Dict[str, Any]]:
+        """Join the background restore stream.
+
+        Blocks until every lazily-scheduled entry has landed, then
+        returns the complete restored tree.  If the stream died (torn
+        chunk that could not be healed, vanished pack), raises
+        :class:`repro.core.lazy.LazyRestoreError`, quarantines the step,
+        and a retried :meth:`restore` falls back to an eager restore of
+        the previous committed image.  A no-op after eager restores."""
+        mat = self._lazy
+        if mat is None:
+            return self._last_restored
+        try:
+            mat.join()
+        except BaseException:
+            if self._lazy_step is not None:
+                self._quarantined.add(self._lazy_step)
+            self._lazy, self._lazy_ctx, self._lazy_step = None, None, None
+            raise
+        for k in ("background_s", "background_bytes",
+                  "background_entries", "healed_entries"):
+            self.last_stats[k] = mat.stats.get(k, 0.0)
+        self.last_stats["restore_background_s"] = mat.stats["background_s"]
+        restored = self._lazy_ctx.restored
+        self._last_restored = restored
+        self._lazy, self._lazy_ctx, self._lazy_step = None, None, None
+        return restored
+
+    @property
+    def lazy_pending(self) -> bool:
+        """True while a background restore stream is still outstanding."""
+        return self._lazy is not None
+
+    @staticmethod
+    def retree(template: PyTree, raw_tree: Any) -> PyTree:
+        """Rebuild `template`'s pytree types (e.g. OptState dataclasses)
+        from a raw nested-dict restore view."""
         from repro.core.device_plugin import flatten_with_paths
-        restored = self.restore(step=step, mesh=mesh,
-                                shardings={state: shardings}
-                                if shardings is not None else None)
         flat = flatten_with_paths(template)
-        raw = flatten_with_paths(restored[state])
+        raw = flatten_with_paths(raw_tree)
         missing = set(flat) - set(raw)
         if missing:
             raise KeyError(f"snapshot missing leaves: {sorted(missing)[:5]}")
-        leaves, treedef = jax.tree_util.tree_flatten(template)
-        keys = list(flatten_with_paths(template))
+        _, treedef = jax.tree_util.tree_flatten(template)
         return jax.tree_util.tree_unflatten(
-            treedef, [raw[k] for k in keys])
+            treedef, [raw[k] for k in flat])
+
+    def restore_into(self, template: PyTree, state: str = "train_state",
+                     step: Optional[int] = None, mesh=None,
+                     shardings: Optional[PyTree] = None,
+                     wait: Optional[str] = None) -> PyTree:
+        """Restore one state into the caller's pytree structure (types
+        preserved — e.g. OptState dataclasses).
+
+        In lazy mode the typed reassembly needs every template leaf, so
+        if the background stream has not yet landed them all this joins
+        it (`restore_barrier`) before rebuilding — callers that want the
+        resume-before-read overlap should use :meth:`restore` with
+        ``wait="critical"`` and :meth:`retree` the cold subtrees after
+        the barrier (see ``runtime.Trainer.restore``)."""
+        from repro.core.device_plugin import flatten_with_paths
+        restored = self.restore(step=step, mesh=mesh,
+                                shardings={state: shardings}
+                                if shardings is not None else None,
+                                wait=wait)
+        if self._lazy is not None:
+            flat = flatten_with_paths(template)
+            raw = flatten_with_paths(restored.get(state, {}))
+            if set(flat) - set(raw):
+                restored = self.restore_barrier()
+        return self.retree(template, restored[state])
 
     def latest_step(self) -> Optional[int]:
         return self.store.latest_step()

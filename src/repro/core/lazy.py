@@ -1,0 +1,313 @@
+"""Priority-ordered lazy restore — the "resume-before-read" data plane.
+
+The paper's second headline claim is recovery time; PhoenixOS (PAPERS.md)
+shows that most of a restore's wall clock is spent reading state the first
+iteration never touches.  This module is the mechanism: the image's
+``restore_order`` hint (recorded at dump time from the order states were
+registered — params/opt first, host blobs and cold optimizer slots last)
+splits into a *critical set* that is placed before ``restore()`` returns
+and a *background schedule* that a :class:`LazyMaterializer` keeps
+streaming into the restored tree while the job is already running.
+
+Corruption guarantees are unchanged: every chunk read re-checks its stored
+CRC, so a torn background chunk raises inside the stream; the failure
+surfaces at :meth:`LazyMaterializer.join` (the engine's
+``restore_barrier()``), the image is quarantined, and a retry falls back
+to an eager restore of the previous committed step.  When the engine has a
+replicator, a corrupt background entry is first *healed* from the replica
+and the stream continues.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+Spec = str                    # "state" or "state/path-prefix"
+WorkItem = Tuple[str, str]    # (state, path)
+
+
+class LazyRestoreError(RuntimeError):
+    """The background materializer died; the restored tree is incomplete."""
+
+
+def match_critical(state: str, path: str, specs: Sequence[Spec]) -> bool:
+    """Does entry (state, path) belong to the critical set?
+
+    A spec is ``"state"`` (every entry of that state) or
+    ``"state/path-prefix"`` (that subtree only) — e.g.
+    ``"train_state/params"`` makes the parameters critical while the
+    optimizer slots stream in the background.
+    """
+    for spec in specs:
+        if "/" not in spec:
+            if state == spec:
+                return True
+            continue
+        s, prefix = spec.split("/", 1)
+        if state == s and (path == prefix
+                           or path.startswith(prefix + "/")):
+            return True
+    return False
+
+
+def split_schedule(reader, critical_specs: Optional[Sequence[Spec]]
+                   ) -> Tuple[List[WorkItem], List[WorkItem]]:
+    """Partition the image's priority-ordered entry schedule into
+    (critical, background) work lists.
+
+    With no explicit specs the critical set defaults to the first state in
+    the image's recorded restore order — the state registered first at
+    dump time, conventionally the one the job cannot take a step without.
+    """
+    specs: Tuple[Spec, ...]
+    if critical_specs:
+        specs = tuple(critical_specs)
+    else:
+        first = None
+        for name in reader.restore_order():
+            if name != "__host__":
+                first = name.split("::", 1)[0]
+                break
+        specs = (first,) if first else ()
+    critical: List[WorkItem] = []
+    background: List[WorkItem] = []
+    for state, path in reader.entry_schedule():
+        if match_critical(state, path, specs):
+            critical.append((state, path))
+        else:
+            background.append((state, path))
+    return critical, background
+
+
+def critical_pack_names(reader, critical: Sequence[WorkItem]) -> List[str]:
+    """Pack-entry names the lazy pre-verify must cover before the job
+    resumes on the critical set: the critical leaves plus the blobs the
+    restore machinery itself reads eagerly (`__meta__`, `__host__`)."""
+    names: List[str] = []
+    for state, path in critical:
+        names.extend(reader.pack_entries(state, path))
+    for blob in ("__meta__", "__host__"):
+        if blob in reader.manifest.get("locations", {}):
+            names.append(blob)
+    return names
+
+
+def insert_leaf(root: Dict[str, Any], state: str, path: str,
+                leaf: Any) -> None:
+    """Place one restored leaf into the nested {state: tree} dict —
+    the incremental version of ``_unflatten_paths`` (arrays rebuild one
+    at a time as their shards land)."""
+    node = root.setdefault(state, {})
+    parts = path.split("/")
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = leaf
+
+
+class LazyMaterializer:
+    """Streams the background schedule into the restored tree.
+
+    One daemon thread walks `work` in priority order, loading each entry
+    through the snapshot reader (chunk CRCs verified on read, chunk
+    fan-out on the reader's I/O pool) and placing the rebuilt leaf via
+    `place_fn`.  Consumers block per-entry (:meth:`wait_entry`) or on the
+    whole stream (:meth:`join`); the engine exposes the latter as
+    ``restore_barrier()``.
+
+    `heal(state, path, exc)` — optional: invoked once per failed entry;
+    returning True means the underlying image was repaired (e.g. re-pulled
+    from a replica) and the entry should be retried through a fresh reader
+    from `reopen()`.
+    """
+
+    def __init__(self, reader, work: Sequence[WorkItem],
+                 place_fn: Callable[[Any, str, str], Any],
+                 restored: Dict[str, Any], *,
+                 reopen: Optional[Callable[[], Any]] = None,
+                 heal: Optional[Callable[[str, str, BaseException],
+                                         bool]] = None,
+                 on_done: Optional[Callable[[], None]] = None):
+        self._reader = reader
+        self._work = list(work)
+        self._place = place_fn
+        self._restored = restored
+        self._reopen = reopen
+        self._heal = heal
+        self._on_done = on_done
+        self._lock = threading.Lock()
+        self._events = {item: threading.Event() for item in self._work}
+        self._done = threading.Event()
+        self._cancelled = False
+        self._thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+        self.failed_item: Optional[WorkItem] = None
+        self.stats: Dict[str, float] = {
+            "background_entries": 0.0, "background_bytes": 0.0,
+            "background_s": 0.0, "healed_entries": 0.0}
+
+    # ------------------------------------------------------------ control
+    def start(self) -> "LazyMaterializer":
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name="repro-lazy-materializer")
+        self._thread.start()
+        return self
+
+    def cancel(self) -> None:
+        """Abandon the stream (a newer restore supersedes this one).  The
+        current entry finishes; nothing further is placed."""
+        self._cancelled = True
+
+    # -------------------------------------------------------------- wait
+    def wait_entry(self, state: str, path: str,
+                   timeout: Optional[float] = None) -> None:
+        """Block until one background leaf has landed (first-touch wait)."""
+        ev = self._events.get((state, path))
+        if ev is None:                     # not background: already placed
+            return
+        if not ev.wait(timeout):
+            raise TimeoutError(f"lazy restore of {state}/{path} did not "
+                               f"land within {timeout}s")
+        self._raise_if_failed()
+
+    def wait_done(self, timeout: Optional[float] = None) -> bool:
+        """Wait for the stream to stop (success, failure, or cancel)
+        without raising — the abandon path of a superseding restore."""
+        return self._done.wait(timeout)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Block until the whole background stream has landed; raises
+        :class:`LazyRestoreError` if it died (torn chunk, lost pack)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"lazy restore stream still running after "
+                               f"{timeout}s")
+        self._raise_if_failed()
+        if self._cancelled:
+            raise LazyRestoreError(
+                "lazy restore stream was cancelled before completing")
+
+    def _raise_if_failed(self) -> None:
+        if self.error is not None:
+            state, path = self.failed_item or ("?", "?")
+            raise LazyRestoreError(
+                f"background materializer failed at {state}/{path}: "
+                f"{self.error!r}") from self.error
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def ok(self) -> bool:
+        return self._done.is_set() and self.error is None \
+            and not self._cancelled
+
+    # -------------------------------------------------------------- loop
+    def _load_one(self, state: str, path: str) -> Any:
+        return self._place(self._reader, state, path)
+
+    def _run(self) -> None:
+        t0 = time.perf_counter()
+        try:
+            for item in self._work:
+                if self._cancelled:
+                    break
+                state, path = item
+                try:
+                    leaf = self._load_one(state, path)
+                except BaseException as e:
+                    if not self._try_heal(state, path, e):
+                        self.error = e
+                        self.failed_item = item
+                        break
+                    try:
+                        leaf = self._load_one(state, path)
+                    except BaseException as e2:
+                        self.error = e2
+                        self.failed_item = item
+                        break
+                with self._lock:
+                    insert_leaf(self._restored, state, path, leaf)
+                try:
+                    self.stats["background_bytes"] += \
+                        self._reader.entry_nbytes(state, path)
+                except Exception:
+                    pass
+                self.stats["background_entries"] += 1
+                self._events[item].set()
+        finally:
+            self.stats["background_s"] = time.perf_counter() - t0
+            for ev in self._events.values():
+                ev.set()                   # unblock every first-touch wait
+            try:
+                self._reader.close()
+            except Exception:
+                pass
+            if self._on_done is not None:
+                try:
+                    self._on_done()
+                except Exception:
+                    pass
+            self._done.set()
+
+    # ------------------------------------------------------------- heal
+    def _try_heal(self, state: str, path: str, exc: BaseException) -> bool:
+        if self._heal is None or self._cancelled:
+            return False
+        try:
+            healed = self._heal(state, path, exc)
+        except Exception:
+            return False
+        if not healed:
+            return False
+        # the image under the reader changed on disk: cached stripe
+        # handles may hold pre-heal inodes, so reopen before retrying
+        if self._reopen is not None:
+            try:
+                fresh = self._reopen()
+            except Exception:
+                return False
+            old, self._reader = self._reader, fresh
+            try:
+                old.close()
+            except Exception:
+                pass
+        self.stats["healed_entries"] += 1
+        return True
+
+
+def resume_with_schedule(ctx, place_fn: Callable[[Any, str, str], Any],
+                         threads: int) -> LazyMaterializer:
+    """The lazy half of RESUME_DEVICES_LATE, shared by the device
+    backends: place the critical set now (parallel entry loads, priority
+    order), hand everything else to a materializer the engine will start
+    once the job is unlocked.  `place_fn(reader, state, path)` loads one
+    logical leaf through the reader and rebuilds it for this backend."""
+    reader = ctx.reader
+    critical, background = split_schedule(
+        reader, getattr(ctx, "critical_specs", None))
+    t0 = time.perf_counter()
+    if threads > 1 and len(critical) > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=threads) as ex:
+            leaves = list(ex.map(lambda it: place_fn(reader, *it),
+                                 critical))
+    else:
+        leaves = [place_fn(reader, *it) for it in critical]
+    for (state, path), leaf in zip(critical, leaves):
+        insert_leaf(ctx.restored, state, path, leaf)
+    ctx.stats["place_critical_s"] = time.perf_counter() - t0
+    ctx.stats["critical_entries"] = float(len(critical))
+    ctx.stats["background_entries_planned"] = float(len(background))
+    try:
+        ctx.stats["critical_bytes"] = float(
+            sum(reader.entry_nbytes(s, p) for s, p in critical))
+    except Exception:                                  # pragma: no cover
+        pass
+    ctx.materializer = LazyMaterializer(
+        reader, background, place_fn, ctx.restored,
+        reopen=getattr(ctx, "lazy_reopen", None),
+        heal=getattr(ctx, "lazy_heal", None),
+        on_done=getattr(ctx, "lazy_on_done", None))
+    return ctx.materializer

@@ -87,19 +87,26 @@ class DirReplicator:
         self.last_stats = stats
         return stats
 
-    def pull_latest(self, run_dir: str) -> Optional[int]:
-        from repro.core.snapshot_io import SnapshotStore
-        steps = SnapshotStore(self.peer_dir).list_steps()
-        if not steps:
-            return None
-        step = steps[-1]
+    def pull(self, run_dir: str, step: int) -> Optional[int]:
+        """Re-materialize one snapshot from the peer over the local copy
+        — the heal path a lazy background stream uses when it hits a torn
+        chunk (the replica pushed at commit time is known-good)."""
         src = snapshot_dir(self.peer_dir, step)
+        if not os.path.exists(os.path.join(src, MANIFEST)):
+            return None
         dst = snapshot_dir(run_dir, step)
         if os.path.isdir(dst):
             shutil.rmtree(dst)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
         shutil.copytree(src, dst)
         return step
+
+    def pull_latest(self, run_dir: str) -> Optional[int]:
+        from repro.core.snapshot_io import SnapshotStore
+        steps = SnapshotStore(self.peer_dir).list_steps()
+        if not steps:
+            return None
+        return self.pull(run_dir, steps[-1])
 
 
 class MemReplicator:

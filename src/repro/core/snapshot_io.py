@@ -25,7 +25,7 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
@@ -125,6 +125,12 @@ class SnapshotWriter:
         self.entry_crcs: Dict[str, int] = {}
         self.reused_bytes = 0
         self.written_bytes = 0
+        # restore-priority hint: entry names in registration order (the
+        # order states were handed to _put — params/opt first, host blobs
+        # last), plus per-entry raw sizes so the critical-set choice is
+        # auditable offline (`repro inspect`)
+        self.restore_order: List[str] = []
+        self.entry_bytes: Dict[str, int] = {}
 
     # --------------------------------------------------- chunk-level dedup
     def _parent_entry(self, name: str):
@@ -156,6 +162,8 @@ class SnapshotWriter:
     def _put(self, name: str, data: np.ndarray) -> None:
         from repro.serialization.integrity import crc32
         raw = np.asarray(data, order="C")
+        self.restore_order.append(name)
+        self.entry_bytes[name] = int(raw.nbytes)
         prev = self._prev.get(name)
         if self.format == 1:
             c = crc32(raw.tobytes())
@@ -233,9 +241,13 @@ class SnapshotWriter:
             self.meta[state] = meta
 
     def write_host_state(self, host_state: Dict[str, Any]) -> None:
-        self._writer.add_bytes("__host__", pack_host_blob(host_state))
+        blob = pack_host_blob(host_state)
+        self._writer.add_bytes("__host__", blob)
         self.locations["__host__"] = os.path.join(
             f"step_{self.step:08d}", self.pack_name)
+        # host blobs restore last in the lazy schedule (coldest priority)
+        self.restore_order.append("__host__")
+        self.entry_bytes["__host__"] = len(blob)
 
     def _close_parent_packs(self) -> None:
         for r in self._parent_packs.values():
@@ -277,6 +289,8 @@ class SnapshotWriter:
             "reused_bytes": self.reused_bytes,
             "written_bytes": self.written_bytes,
             "ref_steps": sorted(ref_steps),
+            "restore_order": self.restore_order,
+            "entry_bytes": self.entry_bytes,
         }
         if self.format == 2:
             manifest["chunk_bytes"] = self.chunk_bytes
@@ -350,6 +364,9 @@ class SnapshotReader:
             path = os.path.join(self.run_dir, "snapshots", loc)
             r = open_pack(path, verify=self._verify,
                           executor=self._executor)
+            order = self.manifest.get("restore_order")
+            if order and hasattr(r, "set_priorities"):
+                r.set_priorities(order)
             if getattr(r, "format", 1) == 2:
                 # v2 readers are thread-safe; share one (index read once)
                 with self._packs_lock:
@@ -378,6 +395,68 @@ class SnapshotReader:
 
     def entry_names(self, state: str) -> List[str]:
         return list(self.meta[state])
+
+    # ------------------------------------------------------- lazy schedule
+    def restore_order(self) -> List[str]:
+        """Pack-entry names, most-critical first: the manifest's
+        ``restore_order`` hint (dump-time registration order), derived
+        from the meta tables for legacy images that predate the hint."""
+        order = self.manifest.get("restore_order")
+        if order:
+            return list(order)
+        out: List[str] = []
+        for state in self.state_names():
+            for path, m in self.meta[state].items():
+                if m["kind"] == "device_array":
+                    out.extend(f"{state}::{path}::s{i}"
+                               for i in range(len(m["shards"])))
+                elif m["kind"] == "np":
+                    out.append(f"{state}::{path}::np")
+        out.append("__host__")
+        return out
+
+    def pack_entries(self, state: str, path: str) -> List[str]:
+        """The pack-entry names backing one logical (state, path) leaf."""
+        m = self.meta[state][path]
+        if m["kind"] == "device_array":
+            return [f"{state}::{path}::s{i}"
+                    for i in range(len(m["shards"]))]
+        if m["kind"] == "np":
+            return [f"{state}::{path}::np"]
+        return []                          # host value: lives in the meta
+
+    def entry_schedule(self) -> List[Tuple[str, str]]:
+        """Every logical (state, path) leaf, ordered by restore priority —
+        the streaming order of the lazy materializer.  Meta-resident host
+        values sort first (they cost no I/O)."""
+        prio = {n: i for i, n in enumerate(self.restore_order())}
+        items: List[Tuple[str, str, int]] = []
+        for state in self.state_names():
+            for path in self.meta[state]:
+                names = self.pack_entries(state, path)
+                if not names:
+                    items.append((state, path, -1))
+                else:
+                    items.append((state, path,
+                                  min(prio.get(n, len(prio))
+                                      for n in names)))
+        items.sort(key=lambda t: t[2])
+        return [(s, p) for s, p, _ in items]
+
+    def entry_nbytes(self, state: str, path: str) -> int:
+        """Raw payload bytes of one logical leaf (0 for meta-resident
+        host values)."""
+        sizes = self.manifest.get("entry_bytes", {})
+        total = 0
+        for n in self.pack_entries(state, path):
+            if n in sizes:
+                total += int(sizes[n])
+            else:                          # legacy image: ask the pack
+                loc = self.manifest["locations"][n]
+                pack = self._pack_for(loc)
+                total += int(getattr(pack, "entry_nbytes",
+                                     lambda _n: 0)(n))
+        return total
 
     def load_entry(self, state: str, path: str) -> Dict[str, Any]:
         m = self.meta[state][path]
@@ -413,7 +492,13 @@ class SnapshotReader:
         v2 packs verify without decompressing (chunk CRCs cover the
         stored bytes); entries run in parallel when the reader has an
         I/O pool."""
-        names = list(self.manifest["locations"])
+        self.verify_entries(list(self.manifest["locations"]))
+
+    def verify_entries(self, names: List[str]) -> None:
+        """CRC-check a subset of pack entries.  The lazy restore path
+        pre-verifies only the critical set (plus ``__host__``/``__meta__``)
+        before resuming the job; background entries keep the same
+        guarantee because every chunk read re-checks its stored CRC."""
         if self._io_threads > 1 and len(names) > 1:
             from concurrent.futures import ThreadPoolExecutor
             # a pool distinct from the chunk executor: entry tasks block
@@ -456,6 +541,24 @@ class SnapshotStore:
         # serializes gc against concurrent restore scans on this store
         # (the async-writer thread gc's while restore() may be reading)
         self.lock = threading.RLock()
+        # steps a background lazy materializer is still streaming from;
+        # gc treats them (and their delta-chain parents) as kept.  The
+        # stream cannot hold the store lock for its whole lifetime — a
+        # concurrent checkpoint's gc would block behind a restore that is
+        # deliberately long-running — so it pins instead.
+        self._pins: Dict[int, int] = {}
+
+    def pin(self, step: int) -> None:
+        with self.lock:
+            self._pins[step] = self._pins.get(step, 0) + 1
+
+    def unpin(self, step: int) -> None:
+        with self.lock:
+            n = self._pins.get(step, 0) - 1
+            if n <= 0:
+                self._pins.pop(step, None)
+            else:
+                self._pins[step] = n
 
     def list_steps(self) -> List[int]:
         if not os.path.isdir(self.root):
@@ -511,6 +614,7 @@ class SnapshotStore:
             if len(steps) <= keep:
                 return []
             keep_steps = set(steps[-keep:])
+            keep_steps.update(s for s in self._pins if s in set(steps))
             # chase pack references of kept snapshots
             changed = True
             while changed:

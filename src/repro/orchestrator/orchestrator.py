@@ -219,7 +219,12 @@ class Orchestrator:
             stats = wl.session.last_stats
             meta.update({k: stats[k] for k in
                          ("read_s", "decompress_s", "place_s",
-                          "topology_mode") if k in stats})
+                          "topology_mode", "restore_mode",
+                          "restore_critical_s", "critical_bytes",
+                          "critical_entries") if k in stats})
+        # under a lazy restore wl.restore() returned on the critical set:
+        # t_restored is the RESUME point, and the background stream is
+        # closed out by _update_materialized once the workload joins it
         rec.recovery.mark_restored(self.clock(),
                                    restored_step=restored_step, **meta)
         self._register(rec, wl)
@@ -252,6 +257,7 @@ class Orchestrator:
 
     def _run_slices(self) -> int:
         from repro.api.session import SnapshotWriteFailed
+        from repro.core.lazy import LazyRestoreError
         from repro.runtime.trainer import SimulatedFailure
         ran = 0
         for job_id in self._running_jobs():
@@ -274,6 +280,12 @@ class Orchestrator:
                 # promptly instead of trusting phantom checkpoints
                 self._fail_write_error(rec, now, e)
                 continue
+            except LazyRestoreError as e:
+                # the lazy background stream died (torn cold chunk, no
+                # replica): this job is half-restored and must stop —
+                # never the whole loop; its retry falls back eagerly
+                self._fail_write_error(rec, now, e, cause="restore_error")
+                continue
             except SimulatedFailure:
                 # crash: the "process" dies silently — heartbeats stop,
                 # detection happens at the deadline like a real dead node.
@@ -288,6 +300,7 @@ class Orchestrator:
             rec.step = wl.step
             rec.goodput.record_slice(prev_step, rec.step, out["wall_s"])
             self.detector.heartbeat(job_id)
+            self._update_materialized(rec, wl)
             self._update_catch_up(rec)
             if out.get("preempted"):
                 self._freeze_and_yield(rec, wl, out)
@@ -324,15 +337,38 @@ class Orchestrator:
         return ran
 
     def _fail_write_error(self, rec: JobRecord, t_interrupt: float,
-                          exc: BaseException) -> None:
-        """A snapshot write failed for this job: open an incident, mark
-        it FAILED, and release its resources — never the whole loop."""
-        rec.recovery.open("write_error", t_interrupt=t_interrupt,
+                          exc: BaseException,
+                          cause: str = "write_error") -> None:
+        """A snapshot write (or lazy restore stream) failed for this job:
+        open an incident, mark it FAILED, and release its resources —
+        never the whole loop."""
+        rec.recovery.open(cause, t_interrupt=t_interrupt,
                           t_detect=self.clock(),
                           step_at_interrupt=rec.step,
                           last_ckpt_step=rec.last_ckpt_step)
         rec.transition(JobState.FAILED, write_error=repr(exc))
         self._evict(rec.spec.job_id)
+
+    def _update_materialized(self, rec: JobRecord, wl) -> None:
+        """Close the restore-background phase once the workload's
+        first-touch join has drained the lazy stream (the session records
+        ``restore_background_s`` at the barrier)."""
+        session = getattr(wl, "session", None)
+        if session is None:
+            return
+        bg = session.last_stats.get("restore_background_s")
+        if bg is None or session.lazy_pending:
+            return
+        incs = rec.recovery.incidents
+        if incs and incs[-1].get("t_restored") is not None \
+                and incs[-1].get("t_materialized") is None:
+            # anchor at t_restored + the measured stream wall rather than
+            # "now": the barrier happened inside the workload's slice, and
+            # this stays correct under injected test clocks
+            rec.recovery.mark_materialized(
+                incs[-1]["t_restored"] + bg, restore_background_s=bg,
+                background_bytes=session.last_stats.get(
+                    "background_bytes"))
 
     def _update_catch_up(self, rec: JobRecord) -> None:
         inc = rec.recovery.current

@@ -12,8 +12,17 @@ phases:
                 migration: the delta-replication push; zero-width when the
                 job comes back where its image already is)
     schedule_s  noticed -> scheduler found capacity again
-    restore_s   restore started -> state back on devices (dominated by
-                image read; the engine's read_s/place_s live in meta)
+    restore_s   restore started -> the job RESUMED.  Under a lazy
+                (resume-before-read) restore this is the *critical* set
+                only — the job is running again while the cold tail
+                still streams; also surfaced as ``restore_critical_s``
+                in the breakdown
+    restore_background_s
+                resumed -> the background stream finished materializing
+                the rest of the image (zero-width for eager restores).
+                Overlaps replay, which is exactly why GoodputMeter
+                credits the earlier resume: replayed steps start
+                accruing at t_restored, not at full materialization
     replay_s    restored step -> step at interruption re-reached (work
                 lost since the last checkpoint, re-executed)
 
@@ -25,7 +34,8 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
-PHASES = ("detect_s", "transfer_s", "schedule_s", "restore_s", "replay_s")
+PHASES = ("detect_s", "transfer_s", "schedule_s", "restore_s",
+          "restore_background_s", "replay_s")
 
 
 class RecoveryLog:
@@ -45,6 +55,7 @@ class RecoveryLog:
                "t_transfer_end": None,
                "t_scheduled": None,
                "t_restored": None,
+               "t_materialized": None,
                "t_caught_up": None,
                "step_at_interrupt": step_at_interrupt,
                "last_ckpt_step": last_ckpt_step,
@@ -80,6 +91,18 @@ class RecoveryLog:
             self.current["restored_step"] = restored_step
             self.current["meta"].update(meta)
 
+    def mark_materialized(self, t: float, **meta: Any) -> None:
+        """The lazy background stream finished: the whole image is on
+        devices.  May legitimately land *after* catch-up (replay overlaps
+        the stream), so this targets the newest incident that restored
+        but has no materialization timestamp yet."""
+        for inc in reversed(self.incidents):
+            if inc.get("t_restored") is not None \
+                    and inc.get("t_materialized") is None:
+                inc["t_materialized"] = t
+                inc["meta"].update(meta)
+                return
+
     def mark_caught_up(self, t: float) -> None:
         if self.current is not None:
             self.current["t_caught_up"] = t
@@ -101,11 +124,19 @@ class RecoveryLog:
         schedule_anchor = ("t_transfer_end"
                            if inc.get("t_transfer_end") is not None
                            else "t_detect")
+        restore_s = gap("t_scheduled", "t_restored")
         out = {"cause": inc["cause"],
                "detect_s": gap("t_interrupt", "t_detect"),
                "transfer_s": transfer_s,
                "schedule_s": gap(schedule_anchor, "t_scheduled"),
-               "restore_s": gap("t_scheduled", "t_restored"),
+               # restore_s ends at RESUME: under a lazy restore that is
+               # the critical set only (alias restore_critical_s);
+               # the background tail is accounted separately and
+               # overlaps replay
+               "restore_s": restore_s,
+               "restore_critical_s": restore_s,
+               "restore_background_s": gap("t_restored",
+                                           "t_materialized"),
                "replay_s": gap("t_restored", "t_caught_up"),
                "total_s": gap("t_interrupt", "t_caught_up"),
                "steps_replayed": None,

@@ -35,8 +35,17 @@ class DecodeServer:
         self.cache = None
         self.tokens: Optional[np.ndarray] = None       # generated so far
         self.pos = 0
-        self.session = session or CheckpointSession(run_dir, options,
-                                                    mesh=mesh)
+        if session is None:
+            if (options is not None and options.restore_mode == "lazy"
+                    and options.critical_states is None):
+                # resume-before-read default: the decode loop touches
+                # params immediately; the (large) KV cache streams in
+                # behind the resumed server
+                options = options.replace(
+                    critical_states=("serve_state/params",))
+            session = CheckpointSession(run_dir, options, mesh=mesh)
+        self.session = session
+        self._pending_cache_template = None   # lazy: cache still streaming
         self.engine = self.session.engine              # back-compat alias
         self.session.attach(lambda: {"serve_state": {
             "params": self.params, "cache": self.cache}})
@@ -111,6 +120,9 @@ class DecodeServer:
                     f"async snapshot write failed at pos {self.pos}: "
                     f"{self.session.write_error}")
             if preempt is not None and preempt():
+                # a dump captures the live roots: the streaming cache
+                # must have landed before the freeze
+                self._finish_lazy_restore()
                 if (self.session.last_commit_step == self.pos
                         and self.session.latest_step() == self.pos):
                     # THIS incarnation committed an image at this exact
@@ -129,6 +141,8 @@ class DecodeServer:
                 raise SimulatedFailure(f"injected failure at pos {self.pos}")
             if straggle_at is not None and self.pos == straggle_at:
                 time.sleep(0.25)                   # injected straggler
+            # first-touch join of the lazily-streaming cache
+            self._finish_lazy_restore()
             last = jnp.asarray(self.tokens[:, -1])
             logits, self.cache = self._decode(self.params, self.cache,
                                               last, jnp.int32(self.pos))
@@ -146,6 +160,10 @@ class DecodeServer:
 
     # ------------------------------------------------------------- ckpt
     def checkpoint(self, tag: int = 0) -> str:
+        # a dump captures self.cache through the provider: the lazily
+        # streaming cache must be adopted first, or the image would pair
+        # restored params with the pre-restore cache
+        self._finish_lazy_restore()
         return self.session.checkpoint(tag)
 
     def restore(self, params_template=None, step: Optional[int] = None):
@@ -156,8 +174,38 @@ class DecodeServer:
             # rebuild an abstract cache skeleton for typed restore
             raise RuntimeError("restore() requires a started server or "
                                "use engine.restore() raw view")
+        if self.session.options.restore_mode == "lazy":
+            # resume-before-read: params place now, the KV cache streams
+            # behind the server and is joined before the first decode step
+            restored = self.session.restore(step=step, wait="critical")
+            engine = self.session.engine
+            raw = restored.get("serve_state", {})
+            try:
+                self.params = engine.retree(template["params"],
+                                            raw.get("params", {}))
+            except (KeyError, RuntimeError):
+                # critical spec did not cover the whole params subtree:
+                # join the stream and retree from the complete tree
+                raw = self.session.restore_barrier()["serve_state"]
+                self.params = engine.retree(template["params"],
+                                            raw["params"])
+            if self.session.lazy_pending:
+                self._pending_cache_template = template["cache"]
+            else:
+                self.cache = engine.retree(template["cache"], raw["cache"])
+            return self.pos
         restored = self.session.restore_into(template, state="serve_state",
                                              step=step)
         self.params = restored["params"]
         self.cache = restored["cache"]
         return self.pos
+
+    def _finish_lazy_restore(self) -> None:
+        """Join the background stream and adopt the cold KV cache."""
+        if self._pending_cache_template is None:
+            return
+        template, self._pending_cache_template = \
+            self._pending_cache_template, None
+        full = self.session.restore_barrier()
+        self.cache = self.session.engine.retree(
+            template, full["serve_state"]["cache"])

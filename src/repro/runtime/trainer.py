@@ -86,10 +86,21 @@ class Trainer:
             if engine is not None:       # migration aid: wrap a bare engine
                 session = CheckpointSession.from_engine(engine)
             else:
+                opts = tcfg.checkpoint_options()
+                if (opts.restore_mode == "lazy"
+                        and opts.critical_states is None):
+                    # resume-before-read default: the first step's forward
+                    # pass touches params; optimizer slots are cold and
+                    # stream in behind the resumed job
+                    opts = opts.replace(
+                        critical_states=("train_state/params",))
                 session = CheckpointSession(
-                    run_dir, tcfg.checkpoint_options(), mesh=mesh,
+                    run_dir, opts, mesh=mesh,
                     replicator=replicator)
         self.session = session
+        # lazy restore: the optimizer template whose leaves are still
+        # streaming; joined right before the first step runs
+        self._pending_opt_template = None
         self.engine = session.engine     # back-compat alias
         # transparent wiring: live state via provider, host bits via plugins
         self.session.attach(lambda: {"train_state": {
@@ -137,7 +148,13 @@ class Trainer:
         self.step = 0
 
     def restore(self, step: Optional[int] = None, mesh=None) -> int:
-        """Unified restore (engine pushes host state back via plugins)."""
+        """Unified restore (engine pushes host state back via plugins).
+
+        In lazy mode (``CheckpointOptions(restore_mode="lazy")``) this
+        returns as soon as the critical set — by default the parameters —
+        is placed; the optimizer slots keep streaming in the background
+        and are joined right before the first step executes
+        (resume-before-read)."""
         if self.params is None:
             # template for typed restore
             self.params = self.model.init(jax.random.key(self.tcfg.seed))
@@ -147,12 +164,48 @@ class Trainer:
         if self.mesh is not None:
             shardings = {"params": self.model.param_shardings(),
                          "opt": self._opt_shardings()}
+        if self.session.options.restore_mode == "lazy":
+            restored = self.session.restore(
+                step=step, mesh=mesh or self.mesh,
+                shardings={"train_state": shardings}
+                if shardings is not None else None,
+                wait="critical")
+            engine = self.session.engine
+            raw = restored.get("train_state", {})
+            try:
+                self.params = engine.retree(template["params"],
+                                            raw.get("params", {}))
+            except (KeyError, RuntimeError):
+                # a custom critical_states spec that does not cover the
+                # whole params subtree: the leaves are still streaming
+                # (or partially landed) — join and retree from the
+                # complete tree instead of crashing
+                raw = self.session.restore_barrier()["train_state"]
+                self.params = engine.retree(template["params"],
+                                            raw["params"])
+            if self.session.lazy_pending:
+                self._pending_opt_template = template["opt"]
+            else:                       # stream finished (or joined above)
+                self.opt_state = engine.retree(template["opt"], raw["opt"])
+            return self.step
         restored = self.session.restore_into(
             template, state="train_state", step=step,
             mesh=mesh or self.mesh, shardings=shardings)
         self.params = restored["params"]
         self.opt_state = restored["opt"]
         return self.step
+
+    def _finish_lazy_restore(self) -> None:
+        """Join the background stream and adopt the cold optimizer slots
+        — called on first touch (right before the first step, or before a
+        checkpoint-on-signal captures the live roots)."""
+        if self._pending_opt_template is None:
+            return
+        template, self._pending_opt_template = \
+            self._pending_opt_template, None
+        full = self.session.restore_barrier()
+        self.opt_state = self.session.engine.retree(
+            template, full["train_state"]["opt"])
 
     # ------------------------------------------------------------- loop
     def run_until(self, target_step: int,
@@ -183,6 +236,9 @@ class Trainer:
                     f"async snapshot write failed at step {self.step}: "
                     f"{self.session.write_error}")
             if preempt is not None and preempt():
+                # a dump captures the live roots: the cold optimizer
+                # slots must have landed before the freeze
+                self._finish_lazy_restore()
                 if (self.session.last_commit_step == self.step
                         and self.session.latest_step() == self.step):
                     # THIS incarnation committed an image of this exact
@@ -203,6 +259,9 @@ class Trainer:
                 raise SimulatedFailure(f"injected failure at {self.step}")
             batch_np = self.pipeline.next()
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            # first-touch join: batch prep (and everything since restore
+            # returned) overlapped the background optimizer-slot stream
+            self._finish_lazy_restore()
             t0 = time.perf_counter()
             if straggle_at is not None and self.step == straggle_at:
                 time.sleep(0.25)                       # injected straggler

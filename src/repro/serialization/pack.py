@@ -239,6 +239,10 @@ class PackReader:
     def entry(self, name: str) -> Dict[str, Any]:
         return self.index[name]
 
+    def entry_nbytes(self, name: str) -> int:
+        """Stored payload size (v1 has no raw/stored split in the index)."""
+        return int(self.index[name]["nbytes"])
+
     def read_bytes(self, name: str) -> bytes:
         e = self.index[name]
         self._f.seek(e["offset"])
@@ -573,6 +577,7 @@ class PackReaderV2:
         self.index: Dict[str, Dict[str, Any]] = footer["entries"]
         self.stripes: int = footer["stripes"]
         self.chunk_bytes: int = footer["chunk_bytes"]
+        self._priorities: Dict[str, int] = {}
 
     # ------------------------------------------------------------- layout
     def names(self):
@@ -580,6 +585,32 @@ class PackReaderV2:
 
     def entry(self, name: str) -> Dict[str, Any]:
         return self.index[name]
+
+    def entry_nbytes(self, name: str) -> int:
+        """Raw (decoded) payload size of one entry."""
+        return int(self.index[name]["raw_nbytes"])
+
+    # ---------------------------------------------------------- schedule
+    def set_priorities(self, order: List[str]) -> None:
+        """Install a restore-priority schedule: `order` is the manifest's
+        ``restore_order`` hint (entry names, most-critical first).  Names
+        absent from the hint sort last, in index order."""
+        self._priorities = {n: i for i, n in enumerate(order)}
+
+    def entry_priority(self, name: str) -> int:
+        return self._priorities.get(name, len(self._priorities)
+                                    + 10_000_000)
+
+    def schedule(self, names: Optional[List[str]] = None
+                 ) -> List[Tuple[str, int, int]]:
+        """(name, priority, raw_nbytes) for `names` (default: every
+        entry), sorted by priority — the order the lazy materializer
+        streams chunks in.  Stable for untagged names."""
+        names = list(self.index) if names is None else names
+        plan = [(n, self.entry_priority(n), self.entry_nbytes(n))
+                for n in names]
+        plan.sort(key=lambda t: t[1])
+        return plan
 
     def _chunk_file(self, c: Dict[str, Any]) -> str:
         ref = c.get("ref")

@@ -208,15 +208,13 @@ class DeltaReplicator:
             return data
 
     # -------------------------------------------------------------- pull
-    def pull_latest(self, run_dir: str) -> Optional[int]:
-        """Materialize the newest peer snapshot into `run_dir` (the
-        restore-side fallback the engine uses when the primary store has
-        no valid image) — same contract as DirReplicator."""
+    def pull(self, run_dir: str, step: int) -> Optional[int]:
+        """Re-materialize one snapshot (plus its delta-chain closure)
+        from the peer over the local copy — the heal path for a torn
+        chunk caught by a lazy background stream."""
         peer = SnapshotStore(self.peer_dir)
-        steps = peer.list_steps()
-        if not steps:
+        if step not in peer.list_steps():
             return None
-        step = steps[-1]
         for s in transfer_closure(peer, step):
             src = snapshot_dir(self.peer_dir, s)
             dst = snapshot_dir(run_dir, s)
@@ -225,3 +223,12 @@ class DeltaReplicator:
             os.makedirs(os.path.dirname(dst), exist_ok=True)
             shutil.copytree(src, dst)
         return step
+
+    def pull_latest(self, run_dir: str) -> Optional[int]:
+        """Materialize the newest peer snapshot into `run_dir` (the
+        restore-side fallback the engine uses when the primary store has
+        no valid image) — same contract as DirReplicator."""
+        steps = SnapshotStore(self.peer_dir).list_steps()
+        if not steps:
+            return None
+        return self.pull(run_dir, steps[-1])

@@ -262,6 +262,108 @@ def test_store_scan_tolerates_vanishing_root(run_dir):
     assert store.list_steps() == []
 
 
+# ------------------------------------------------- lazy restore (trainer)
+def _tiny_trainer(run_dir, mesh, restore_mode="eager", total=16):
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.runtime.trainer import TrainConfig, Trainer
+    from repro.sharding import get_policy
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    tcfg = TrainConfig(batch_size=2, seq_len=16, total_steps=total,
+                       warmup_steps=2, seed=0, compute_dtype=jnp.float32,
+                       remat=False, ckpt_every=4,
+                       ckpt=CheckpointOptions(restore_mode=restore_mode))
+    return Trainer(cfg, tcfg, mesh, get_policy("baseline"), run_dir)
+
+
+def _trainer_digest(tr):
+    import jax
+    flat = []
+    for leaf in jax.tree.leaves({"params": tr.params, "opt": tr.opt_state}):
+        flat.append(np.asarray(leaf))
+    return [a.tobytes() for a in flat]
+
+
+def test_lazy_restored_training_run_bit_exact(tmp_path, mesh1):
+    """A lazy-restored (resume-before-read) training run matches the
+    eager-restored run step for step: same losses, same params/opt."""
+    run_a = str(tmp_path / "eager")
+    run_b = str(tmp_path / "lazy")
+    tr = _tiny_trainer(run_a, mesh1)
+    tr.run_until(6)                          # periodic image at step 4
+    import shutil
+    shutil.copytree(os.path.join(run_a, "snapshots"),
+                    os.path.join(run_b, "snapshots"))
+
+    eager = _tiny_trainer(run_a, mesh1, "eager")
+    assert eager.restore() == 4
+    eager.run_until(8)
+
+    lazy = _tiny_trainer(run_b, mesh1, "lazy")
+    assert lazy.session.options.critical_states == ("train_state/params",)
+    assert lazy.restore() == 4
+    # resumed on the critical set: optimizer slots still streaming
+    assert lazy._pending_opt_template is not None or \
+        not lazy.session.lazy_pending
+    lazy.run_until(8)                        # first step joins the stream
+    assert lazy._pending_opt_template is None
+    assert not lazy.session.lazy_pending
+
+    assert eager.metrics_history["loss"] == lazy.metrics_history["loss"]
+    for a, b in zip(_trainer_digest(eager), _trainer_digest(lazy)):
+        assert a == b
+
+
+def test_lazy_restore_elastic_resharded_bit_exact(tmp_path, mesh1):
+    """Lazy restore through the elastic (resharded-mesh) path: restoring
+    onto a mesh with different axis names forces topology mode
+    'resharded', and the lazily-restored run still matches eager."""
+    import shutil
+    from repro.launch.mesh import make_mesh
+    run = str(tmp_path / "run")
+    run_b = str(tmp_path / "run_lazy")
+    tr = _tiny_trainer(run, mesh1)
+    tr.run_until(6)
+    shutil.copytree(os.path.join(run, "snapshots"),
+                    os.path.join(run_b, "snapshots"))
+
+    mesh_x = make_mesh((1,), ("elastic",))   # same devices, new topology
+    eager = _tiny_trainer(run, mesh_x, "eager")
+    assert eager.restore() == 4
+    assert eager.session.last_stats["topology_mode"] == "resharded"
+    eager.run_until(8)
+
+    lazy = _tiny_trainer(run_b, mesh_x, "lazy")
+    assert lazy.restore() == 4
+    assert lazy.session.last_stats["topology_mode"] == "resharded"
+    lazy.run_until(8)
+    assert not lazy.session.lazy_pending
+
+    assert eager.metrics_history["loss"] == lazy.metrics_history["loss"]
+    for a, b in zip(_trainer_digest(eager), _trainer_digest(lazy)):
+        assert a == b
+
+
+def test_lazy_trainer_preempt_before_first_step_joins_stream(tmp_path,
+                                                             mesh1):
+    """Checkpoint-on-signal immediately after a lazy restore must not
+    dump a half-restored job: the freeze path joins the stream first."""
+    run = str(tmp_path / "run")
+    tr = _tiny_trainer(run, mesh1)
+    tr.run_until(6)
+    lazy = _tiny_trainer(run, mesh1, "lazy")
+    lazy.restore()
+    out = lazy.run_until(12, preempt=lambda: True)   # signal before step 1
+    assert out["preempted"] and out["steps"] == 0
+    assert lazy._pending_opt_template is None        # stream joined
+    # the dumped image matches the step-4 state it restored from
+    r = CheckpointSession(str(run), CheckpointOptions(), backend="host")
+    r.attach(lambda: {"train_state": None})
+    restored = r.restore(step=4)
+    flat_eager = restored["train_state"]
+    assert "params" in flat_eager and "opt" in flat_eager
+
+
 # ------------------------------------------------------ options plumbing
 def test_dataplane_options_env_roundtrip():
     o = CheckpointOptions(pack_format=1, io_threads=3, chunk_mb=2, stripes=4)

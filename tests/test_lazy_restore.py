@@ -1,0 +1,352 @@
+"""Priority-ordered lazy restore ("resume-before-read"): schedule
+recording, critical-set split, background materialization, the corruption
+matrix (killed stream -> barrier raises -> retry falls back to eager;
+torn background chunk healed from a replica), pinning vs gc, and the CLI
+surfaces (`inspect` schedule breakdown, `restore --dry-run --lazy`)."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import CheckpointOptions, CheckpointSession
+from repro.core.lazy import LazyMaterializer, LazyRestoreError, \
+    match_critical
+from repro.core.snapshot_io import snapshot_dir
+from repro.serialization.pack import open_pack, stripe_path
+
+
+def _train_shape_state(n=4, kb=8, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def block():
+        return rng.integers(0, 9, size=kb * 256).astype(np.float32)
+
+    keys = [f"w{i}" for i in range(n)]
+    return {"params": {k: block() for k in keys},
+            "opt": {"m": {k: block() for k in keys},
+                    "v": {k: block() for k in keys}}}
+
+
+def _session(run_dir, holder, **opts):
+    s = CheckpointSession(run_dir, CheckpointOptions(**opts), backend="host")
+    s.attach(lambda: {"train_state": holder["state"]})
+    return s
+
+
+LAZY = dict(restore_mode="lazy",
+            critical_states=("train_state/params",))
+
+
+def _assert_exact(restored, state):
+    for k, v in state["params"].items():
+        np.testing.assert_array_equal(
+            np.asarray(restored["train_state"]["params"][k]), v)
+    for slot in ("m", "v"):
+        for k, v in state["opt"][slot].items():
+            np.testing.assert_array_equal(
+                np.asarray(restored["train_state"]["opt"][slot][k]), v)
+
+
+def _corrupt_background_chunk(run_dir, step,
+                              entry="train_state::opt/m/w0::np"):
+    """Flip bytes inside a cold (non-critical) entry's first chunk."""
+    base = os.path.join(snapshot_dir(run_dir, step), "host0000.pack")
+    with open_pack(base, verify=False) as r:
+        c = r.index[entry]["chunks"][0]
+    path = stripe_path(base, c["stripe"])
+    with open(path, "r+b") as f:
+        f.seek(c["offset"] + 8)
+        f.write(b"\xde\xad\xbe\xef")
+
+
+# ------------------------------------------------------------- mechanics
+def test_manifest_records_restore_order_and_entry_bytes(run_dir):
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.register_host_state("cursor", lambda: {"step": 1}, lambda st: None)
+    s.checkpoint(1)
+    m = s.store.manifest(1)
+    order = m["restore_order"]
+    assert order[-1] == "__host__"           # host blobs restore last
+    assert set(m["entry_bytes"]) == set(order)
+    assert all(m["entry_bytes"][n] > 0 for n in order)
+    # the pack reader exposes the same schedule, priority-sorted
+    reader = s.store.reader(1, verify=False)
+    try:
+        sched = reader.entry_schedule()
+        assert sched[0][0] == "train_state"
+        names = reader.restore_order()
+        assert names == order
+    finally:
+        reader.close()
+
+
+def test_match_critical_specs():
+    assert match_critical("train_state", "params/w0", ("train_state",))
+    assert match_critical("train_state", "params/w0",
+                          ("train_state/params",))
+    assert not match_critical("train_state", "opt/m/w0",
+                              ("train_state/params",))
+    # prefix match is path-component-wise, not string-wise
+    assert not match_critical("train_state", "params_ema/w0",
+                              ("train_state/params",))
+    assert not match_critical("other", "params/w0", ("train_state",))
+
+
+def test_lazy_restore_bit_exact_and_barrier(run_dir):
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.checkpoint(1)
+    r = _session(run_dir, {"state": None}, **LAZY)
+    restored = r.restore()
+    # resumed on the critical set: params placed, engine still streaming
+    assert "params" in restored["train_state"]
+    assert r.lazy_pending
+    st = r.last_stats
+    assert st["restore_mode"] == "lazy"
+    assert st["critical_entries"] == len(state["params"])
+    assert "restore_critical_s" in st
+    full = r.restore_barrier()
+    assert not r.lazy_pending
+    _assert_exact(full, state)
+    assert r.last_stats["background_entries"] == 2 * len(state["params"])
+    assert r.last_stats["restore_background_s"] >= 0.0
+    # second barrier is a no-op returning the same tree
+    assert r.restore_barrier() is full
+
+
+def test_lazy_wait_all_equals_eager(run_dir):
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.checkpoint(1)
+    r = _session(run_dir, {"state": None}, **LAZY)
+    full = r.restore(wait="all")             # lazy machinery, joined
+    assert not r.lazy_pending
+    _assert_exact(full, state)
+    with pytest.raises(ValueError, match="wait"):
+        r.restore(wait="sometimes")
+
+
+def test_restore_into_joins_lazy_stream(run_dir):
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.checkpoint(1)
+    r = _session(run_dir, {"state": None}, **LAZY)
+    template = {"params": {k: np.zeros_like(v)
+                           for k, v in state["params"].items()},
+                "opt": {slot: {k: np.zeros_like(v)
+                               for k, v in state["opt"][slot].items()}
+                        for slot in ("m", "v")}}
+    out = r.restore_into(template, state="train_state")
+    assert not r.lazy_pending                # template needed cold leaves
+    np.testing.assert_array_equal(out["opt"]["v"]["w0"],
+                                  state["opt"]["v"]["w0"])
+
+
+# ------------------------------------------------------ corruption matrix
+def test_torn_background_chunk_barrier_raises_retry_falls_back(run_dir):
+    """A cold entry's chunk is torn: the critical-set resume succeeds
+    (lazy pre-verify covers criticals only), the barrier raises, and the
+    retry quarantines the image and falls back to the previous committed
+    step — the same corruption guarantee as the eager path."""
+    state1 = _train_shape_state(seed=0)
+    holder = {"state": state1}
+    s = _session(run_dir, holder)
+    s.checkpoint(1)
+    state2 = {"params": {k: v + 1.0 for k, v in state1["params"].items()},
+              "opt": {slot: {k: v + 1.0
+                             for k, v in state1["opt"][slot].items()}
+                      for slot in ("m", "v")}}
+    holder["state"] = state2
+    s.checkpoint(2)
+    _corrupt_background_chunk(run_dir, 2)
+
+    r = _session(run_dir, {"state": None}, **LAZY)
+    restored = r.restore()                   # criticals verify clean
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["params"]["w0"]),
+        state2["params"]["w0"])
+    with pytest.raises(LazyRestoreError, match="opt/m/w0"):
+        r.restore_barrier()
+    # retry: step 2 is quarantined; falls back to the previous image
+    again = r.restore()
+    r.restore_barrier()
+    _assert_exact(again, state1)
+
+
+def test_killed_materializer_mid_stream_then_eager_retry(run_dir,
+                                                         monkeypatch):
+    state = _train_shape_state()
+    holder = {"state": state}
+    s = _session(run_dir, holder)
+    s.checkpoint(1)
+    holder["state"] = {"params": state["params"],
+                       "opt": {slot: {k: v * 2.0
+                                      for k, v in state["opt"][slot].items()}
+                               for slot in ("m", "v")}}
+    s.checkpoint(2)
+
+    killed = threading.Event()
+    orig = LazyMaterializer._load_one
+
+    def dying(self, state_name, path):
+        if killed.is_set():
+            raise IOError("materializer killed mid-stream")
+        return orig(self, state_name, path)
+
+    monkeypatch.setattr(LazyMaterializer, "_load_one", dying)
+    r = _session(run_dir, {"state": None}, **LAZY)
+    r.restore()
+    killed.set()                             # kill the stream mid-flight
+    with pytest.raises(LazyRestoreError, match="killed mid-stream"):
+        r.restore_barrier()
+    monkeypatch.setattr(LazyMaterializer, "_load_one", orig)
+    # retry falls back (step 2 quarantined) and completes eagerly
+    again = r.restore(wait="all")
+    _assert_exact(again, state)
+
+
+def test_torn_background_chunk_healed_from_replica(run_dir, tmp_path):
+    """With replicate_to set, a torn background chunk is CRC-caught and
+    healed from the replica: the stream completes and the restored run
+    is bit-exact."""
+    peer = str(tmp_path / "peer")
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state}, replicate_to=peer)
+    s.checkpoint(1)
+    _corrupt_background_chunk(run_dir, 1)
+
+    r = _session(run_dir, {"state": None}, replicate_to=peer, **LAZY)
+    restored = r.restore()
+    full = r.restore_barrier()               # heals instead of dying
+    assert full is restored
+    _assert_exact(full, state)
+    assert r.last_stats["healed_entries"] >= 1
+
+
+def test_freeze_joins_pending_stream_before_dump(run_dir):
+    """A dump while a lazy stream is outstanding must not capture a
+    half-restored job: freeze() barriers first (and surfaces a dead
+    stream as a dump failure)."""
+    state = _train_shape_state()
+    holder = {"state": state}
+    s = _session(run_dir, holder)
+    s.checkpoint(1)
+    _corrupt_background_chunk(run_dir, 1)
+    r = _session(run_dir, {"state": holder["state"]}, **LAZY)
+    r.restore()
+    with pytest.raises(LazyRestoreError):
+        r.checkpoint(2)
+
+
+# ------------------------------------------------------------ pin vs gc
+def test_gc_skips_pinned_steps(run_dir):
+    state = _train_shape_state(n=2, kb=1)
+    holder = {"state": state}
+    s = _session(run_dir, holder)
+    for step in (1, 2, 3):
+        s.checkpoint(step)
+    store = s.store
+    store.pin(1)
+    assert store.gc(keep=1) == [2]           # 1 pinned, 3 kept
+    assert store.list_steps() == [1, 3]
+    store.unpin(1)
+    assert store.gc(keep=1) == [1]
+    assert store.list_steps() == [3]
+
+
+def test_superseding_restore_abandons_stream(run_dir):
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.checkpoint(1)
+    r = _session(run_dir, {"state": None}, **LAZY)
+    r.restore()
+    # a new restore cancels the outstanding stream instead of raising
+    full = r.restore(wait="all")
+    _assert_exact(full, state)
+    assert not r.lazy_pending
+
+
+def test_wait_critical_opts_into_lazy_under_eager_options(run_dir):
+    """session.restore(wait=\"critical\") is a per-call opt-in to
+    resume-before-read even when options.restore_mode is eager."""
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.checkpoint(1)
+    r = _session(run_dir, {"state": None},
+                 critical_states=("train_state/params",))
+    restored = r.restore(wait="critical")
+    assert r.lazy_pending                     # stream outstanding
+    assert r.last_stats["restore_mode"] == "lazy"
+    full = r.restore_barrier()
+    assert full is restored
+    _assert_exact(full, state)
+
+
+def test_trainer_partial_critical_spec_does_not_crash(tmp_path, mesh1):
+    """A user critical_states spec that does not cover params falls back
+    to joining the stream instead of raising KeyError."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.runtime.trainer import TrainConfig, Trainer
+    from repro.sharding import get_policy
+    cfg = get_smoke_config("qwen1.5-0.5b")
+
+    def make(restore_mode="eager", critical=None):
+        tcfg = TrainConfig(batch_size=2, seq_len=16, total_steps=8,
+                           warmup_steps=2, seed=0,
+                           compute_dtype=jnp.float32, remat=False,
+                           ckpt_every=4,
+                           ckpt=CheckpointOptions(
+                               restore_mode=restore_mode,
+                               critical_states=critical))
+        return Trainer(cfg, tcfg, mesh1, get_policy("baseline"),
+                       str(tmp_path / "run"))
+
+    tr = make()
+    tr.run_until(5)                           # image at step 4
+    lazy = make("lazy", critical=("train_state/opt",))   # params NOT critical
+    assert lazy.restore() == 4
+    assert lazy._pending_opt_template is None            # stream joined
+    lazy.run_until(6)                         # still trains fine
+
+
+# ------------------------------------------------------------ options
+def test_lazy_options_validate_and_roundtrip():
+    from repro.api.options import OptionsError
+    o = CheckpointOptions(restore_mode="lazy",
+                          critical_states=("a", "b/c/d"))
+    assert CheckpointOptions.from_env(o.to_env()) == o
+    assert CheckpointOptions(critical_states=["x"]).critical_states == ("x",)
+    with pytest.raises(OptionsError):
+        CheckpointOptions(restore_mode="sometimes")
+    with pytest.raises(OptionsError):
+        CheckpointOptions(critical_states=("", "ok"))
+
+
+# ------------------------------------------------------------ CLI
+def test_cli_inspect_shows_restore_schedule(run_dir, capsys):
+    from repro.cli import main
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.register_host_state("cursor", lambda: {"step": 1}, lambda st: None)
+    s.checkpoint(1)
+    assert main(["inspect", run_dir, "--step", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "restore schedule" in out
+    assert "train_state/params" in out and "train_state/opt" in out
+    assert "(host blobs)" in out
+
+
+def test_cli_restore_dry_run_lazy(run_dir, capsys):
+    from repro.cli import main
+    state = _train_shape_state()
+    s = _session(run_dir, {"state": state})
+    s.register_host_state("cursor", lambda: {"step": 1}, lambda st: None)
+    s.checkpoint(1)
+    assert main(["restore", run_dir, "--dry-run", "--lazy",
+                 "--critical", "train_state/params"]) == 0
+    out = capsys.readouterr().out
+    assert "resumed on the critical set" in out
+    assert "resume-before-read" in out

@@ -370,3 +370,37 @@ def test_interval_observe_prefers_blocked_window():
     assert p._costs == [1.25]
     assert p.observe({}) is None
     assert p._costs == [1.25]
+
+
+# ------------------------------------------------- lazy restore incidents
+@pytest.mark.slow
+def test_preemption_with_lazy_restore_bit_exact_and_phase_split(tmp_path):
+    """The preemption scenario on a lazy (resume-before-read) engine:
+    recovery is still bit-exact vs an undisturbed run, and the incident's
+    restore-read splits into restore-critical (the resume point) vs
+    restore-background (the streamed cold tail, overlapping replay)."""
+    from repro.api import CheckpointOptions
+    total = 6
+    opts = CheckpointOptions(restore_mode="lazy")   # Trainer defaults the
+    summary = run_scenario("preemption", str(tmp_path / "orch"),
+                           options=opts, total_steps=total)
+    assert summary["all_done"]
+    lo = summary["jobs"]["lo"]
+    assert lo["step"] == total and lo["restarts"] >= 1
+    (inc,) = [i for i in lo["recovery"] if i["cause"] == "preemption"]
+    assert inc["total_s"] is not None
+    assert inc["restore_s"] is not None                # critical resume
+    assert inc["restore_critical_s"] == inc["restore_s"]
+    assert inc["meta"].get("restore_mode") == "lazy"
+    # the background stream was joined and accounted
+    assert inc["restore_background_s"] is not None
+    assert inc["restore_background_s"] >= 0.0
+    assert lo["recovery_totals"]["restore_background_s"] >= 0.0
+    # bit-exact vs an undisturbed run on an eager engine
+    ref = TrainWorkload(JobSpec("ref", total_steps=total),
+                        str(tmp_path / "ref"), mesh=None)
+    ref.start()
+    while not ref.done:
+        ref.run_slice(2)
+    ref.finish()
+    assert _digests(summary)["lo"] == ref.digest()

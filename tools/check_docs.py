@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Docs smoke-runner: the code fences in docs/*.md must actually execute.
+
+Three checks, in document order:
+
+  * ```python fences run in a subprocess with PYTHONPATH=src.
+  * ```console fences: every ``$ python -m repro ...`` /
+    ``$ python -m benchmarks...`` line runs and must exit 0.
+  * The CheckpointOptions table in docs/ARCHITECTURE.md (field / env var /
+    default) is diffed against the real dataclass, so it cannot drift.
+
+Fences share per-document placeholder directories (RUN_DIR, ORCH_RUN,
+PEER_STORE): a python fence that writes images into RUN_DIR feeds the
+console commands that inspect it — the walkthroughs are executed as
+written.  A fence preceded by ``<!-- check_docs: skip -->`` is skipped.
+
+Usage:  python tools/check_docs.py [--skip-slow] [docs/FILE.md ...]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import glob
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_MARK = "<!-- check_docs: skip -->"
+PLACEHOLDERS = ("RUN_DIR", "ORCH_RUN", "PEER_STORE")
+SLOW_TOKENS = ("orchestrate", "migrate")
+RUNNABLE_PREFIXES = ("python -m repro", "python -m benchmarks")
+
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+
+
+def parse_fences(text):
+    """(lang, body, skipped) for every fenced block, in order."""
+    out = []
+    for m in FENCE_RE.finditer(text):
+        before = text[:m.start()].rstrip().splitlines()
+        skipped = bool(before) and before[-1].strip() == SKIP_MARK
+        out.append((m.group(1), m.group(2), skipped))
+    return out
+
+
+def run(cmd, env, timeout=600, label=""):
+    r = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                       text=True, timeout=timeout)
+    if r.returncode != 0:
+        print(f"FAIL {label}\n  exit {r.returncode}\n"
+              f"  stdout: {r.stdout[-2000:]}\n"
+              f"  stderr: {r.stderr[-2000:]}")
+        return False
+    return True
+
+
+def substitute(body, dirs):
+    for name in PLACEHOLDERS:
+        body = body.replace(name, dirs[name])
+    return body
+
+
+def check_doc(path, skip_slow):
+    with open(path) as f:
+        text = f.read()
+    base = tempfile.mkdtemp(prefix="check_docs_")
+    dirs = {name: os.path.join(base, name.lower())
+            for name in PLACEHOLDERS}
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""),
+               JAX_PLATFORMS="cpu")
+    failures = 0
+    ran = 0
+    tainted: set = set()      # dirs whose producer command was skipped
+    for i, (lang, body, skipped) in enumerate(parse_fences(text)):
+        label = f"{os.path.basename(path)} fence #{i} [{lang}]"
+        if skipped or lang not in ("python", "console"):
+            continue
+        if lang == "python":
+            ran += 1
+            if not run([sys.executable, "-c", substitute(body, dirs)],
+                       env, label=label):
+                failures += 1
+            continue
+        for line in body.splitlines():
+            if not line.startswith("$ "):
+                continue
+            cmd = substitute(line[2:].strip(), dirs)
+            if not cmd.startswith(RUNNABLE_PREFIXES):
+                continue
+            if skip_slow and any(t in cmd for t in SLOW_TOKENS):
+                print(f"skip (slow): {cmd}")
+                tainted.update(d for d in dirs.values() if d in cmd)
+                continue
+            if any(d in cmd for d in tainted):
+                print(f"skip (depends on skipped output): {cmd}")
+                continue
+            ran += 1
+            if not run([sys.executable] + cmd.split()[1:], env,
+                       label=f"{label}: {cmd}"):
+                failures += 1
+    return ran, failures
+
+
+def check_options_table(path):
+    """The ARCHITECTURE.md options table must match CheckpointOptions."""
+    import dataclasses
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.api.options import CheckpointOptions, _ENV_PREFIX
+    with open(path) as f:
+        text = f.read()
+    rows = re.findall(
+        r"^\| `(\w+)` \| `(REPRO_CKPT_\w+)` \| `(.+?)` \|$",
+        text, re.M)
+    documented = {name: (env, default) for name, env, default in rows}
+    problems = []
+    fields = {f.name: f for f in dataclasses.fields(CheckpointOptions)}
+    for name, f in fields.items():
+        if name not in documented:
+            problems.append(f"field {name!r} missing from the table")
+            continue
+        env, default = documented[name]
+        if env != _ENV_PREFIX + name.upper():
+            problems.append(f"{name}: env var {env!r} != "
+                            f"{_ENV_PREFIX + name.upper()!r}")
+        try:
+            doc_default = ast.literal_eval(default)
+        except (ValueError, SyntaxError):
+            problems.append(f"{name}: unparseable default {default!r}")
+            continue
+        if doc_default != f.default:
+            problems.append(f"{name}: documented default {doc_default!r} "
+                            f"!= actual {f.default!r}")
+    for name in documented:
+        if name not in fields:
+            problems.append(f"table documents unknown field {name!r}")
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    default=sorted(glob.glob(os.path.join(REPO, "docs",
+                                                          "*.md"))))
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip orchestrate/migrate console walkthroughs")
+    args = ap.parse_args(argv)
+
+    total_ran = total_failed = 0
+    for path in args.files:
+        ran, failed = check_doc(path, args.skip_slow)
+        print(f"{path}: {ran} fence command(s) ran, {failed} failed")
+        total_ran += ran
+        total_failed += failed
+
+    arch = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    if os.path.exists(arch):
+        problems = check_options_table(arch)
+        for p in problems:
+            print(f"ARCHITECTURE.md options table: {p}")
+        total_failed += len(problems)
+        print(f"options table: {'OK' if not problems else 'DRIFTED'}")
+
+    if total_failed:
+        print(f"\ncheck_docs FAILED ({total_failed} problem(s))")
+        return 1
+    print(f"\ncheck_docs OK ({total_ran} command(s) executed)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
