@@ -16,6 +16,8 @@ README = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "README.md")
 LAZY_BEGIN = "<!-- lazy-restore-table:begin -->"
 LAZY_END = "<!-- lazy-restore-table:end -->"
+CHAOS_BEGIN = "<!-- chaos-table:begin -->"
+CHAOS_END = "<!-- chaos-table:end -->"
 
 ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "artifacts", "dryrun")
@@ -166,20 +168,59 @@ def lazy_table(recs):
     return "\n".join(out) if out else "(no BENCH_restore_lazy.json found)"
 
 
+def chaos_table(recs):
+    """Per-fault-class survivability table (from BENCH_chaos.json): a
+    seeded campaign's injected/survived/healed/quarantined counts and
+    mean time to recover, per fault class."""
+    out = []
+    for name, r in recs:
+        if "chaos.invariant.violation_ratio" not in r:
+            continue
+        classes = sorted({k.split(".")[1] for k in r
+                          if k.startswith("chaos.")
+                          and k.endswith(".injected")})
+        out.append("| fault class | injected | survived | healed | "
+                   "quarantined | MTTR (s) |")
+        out.append("|---|---|---|---|---|---|")
+        for cls in classes:
+            inj = r[f"chaos.{cls}.injected"]
+            surv = 1.0 - r[f"chaos.{cls}.unsurvived_ratio"]
+            mttr = r.get(f"chaos.{cls}.mttr_s")
+            out.append(
+                f"| {cls} | {inj} | {surv:.0%} | "
+                f"{r[f'chaos.{cls}.healed']} | "
+                f"{r[f'chaos.{cls}.quarantined_ratio']:.0%} | "
+                f"{'—' if mttr is None else fmt(mttr)} |")
+        held = r["chaos.invariant.violation_ratio"] == 0
+        out.append(
+            f"\n{r['chaos.workload.jobs']:.0f} jobs × "
+            f"{r['chaos.workload.hosts']:.0f} hosts, seed "
+            f"{r['chaos.workload.seed']:.0f}: "
+            + ("**invariant held** — every job recovered bit-exact or "
+               "landed in diagnosable quarantine" if held else
+               "**INVARIANT VIOLATED**")
+            + f" (`{name}`)")
+        break
+    return "\n".join(out) if out else "(no BENCH_chaos.json found)"
+
+
 def update_readme(recs, path=README):
-    """Render the lazy-restore table into README between the markers."""
-    table = lazy_table(recs)
+    """Render the lazy-restore and chaos tables into README between
+    their markers."""
     with open(path) as f:
         text = f.read()
-    if LAZY_BEGIN not in text or LAZY_END not in text:
-        raise SystemExit(f"{path}: missing {LAZY_BEGIN}/{LAZY_END} markers")
-    new = re.sub(
-        re.escape(LAZY_BEGIN) + r".*?" + re.escape(LAZY_END),
-        LAZY_BEGIN + "\n" + table + "\n" + LAZY_END,
-        text, flags=re.S)
+    for begin, end, table, label in (
+            (LAZY_BEGIN, LAZY_END, lazy_table(recs), "lazy-restore"),
+            (CHAOS_BEGIN, CHAOS_END, chaos_table(recs), "chaos")):
+        if begin not in text or end not in text:
+            raise SystemExit(f"{path}: missing {begin}/{end} markers")
+        text = re.sub(
+            re.escape(begin) + r".*?" + re.escape(end),
+            begin + "\n" + table + "\n" + end,
+            text, flags=re.S)
+        print(f"updated {path} ({label} table)")
     with open(path, "w") as f:
-        f.write(new)
-    print(f"updated {path} (lazy-restore table)")
+        f.write(text)
 
 
 def fmt_bytes(n):
@@ -246,6 +287,8 @@ def main(argv=None):
     print(transfer_table(bench))
     print("\n## lazy restore: time-to-first-step\n")
     print(lazy_table(bench))
+    print("\n## chaos campaign: per-fault-class survivability\n")
+    print(chaos_table(bench))
 
 
 if __name__ == "__main__":

@@ -15,6 +15,10 @@ get the same treatment:
   python -m repro orchestrate RUN_DIR        run a preemption scenario
   python -m repro migrate SRC DST            delta-transfer images to a peer
   python -m repro transfer-stats DST         CAS contents + transfer history
+                                             (--fsck --repair quarantines
+                                             corrupt objects)
+  python -m repro chaos-campaign RUN_DIR     seeded fault-injection campaign
+                                             over a simulated fleet
 
 Exit status is 0 on success, 1 on any problem — scriptable from cron,
 GitHub Actions, or a cluster scheduler's health hook.
@@ -353,11 +357,19 @@ def cmd_restore(args) -> int:
 def cmd_jobs(args) -> int:
     """Inspect a cluster's persisted job records without the owning
     process (the `repro inspect` of the orchestrator plane)."""
-    from repro.orchestrator.job import list_job_records
+    from repro.orchestrator.job import JobState, list_job_records
     recs = list_job_records(args.run_dir)
     if not recs:
         raise SystemExit(f"error: no job records under {args.run_dir!r} "
                          f"(expected {args.run_dir}/jobs/*.json)")
+    if args.state is not None:
+        try:
+            want = JobState(args.state)
+        except ValueError:
+            raise SystemExit(
+                f"error: unknown state {args.state!r} (choose from "
+                f"{', '.join(s.value for s in JobState)})")
+        recs = [r for r in recs if r.state == want]
     if args.job is not None:
         matching = [r for r in recs if r.spec.job_id == args.job]
         if not matching:
@@ -396,8 +408,10 @@ def cmd_jobs(args) -> int:
         print(json.dumps([{
             "job": rec.spec.job_id, "kind": rec.spec.kind,
             "priority": rec.spec.priority, "state": rec.state.value,
+            "host": rec.host,
             "step": rec.step, "total_steps": rec.spec.total_steps,
             "restarts": rec.restarts,
+            "exhausted": rec.exhausted,
             "incidents": rec.recovery.totals()["incidents"],
             "recovery_s": rec.recovery.totals()["total_s"],
         } for rec in recs], indent=2))
@@ -533,19 +547,36 @@ def cmd_transfer_stats(args) -> int:
     store = ChunkStore(cas_dir)
     st = store.stats()
     log = store.transfer_log()
+    if args.repair:
+        args.fsck = True
     if args.fsck:
-        bad = store.fsck()
+        bad = store.fsck(repair=args.repair)
         st["corrupt_objects"] = len(bad)
+        if args.repair:
+            st["quarantined_objects"] = len(bad)
+            st.update(store.stats())       # post-repair object count
+    # exit 1 only when corruption is left in place: a --repair run that
+    # quarantined everything leaves a clean store behind
+    bad_left = st.get("corrupt_objects", 0) if not args.repair else 0
     if args.json:
         print(json.dumps({"cas": st, "transfers": log}, indent=2,
                          default=str))
-        return 1 if st.get("corrupt_objects") else 0
+        return 1 if bad_left else 0
     print(f"{args.dest}: {st['objects']} CAS object(s), "
           f"{_fmt_bytes(st['bytes'])}")
+    if st.get("quarantined_objects"):
+        print(f"  quarantine:  {st['quarantined_objects']} object(s) "
+              f"moved aside this run")
     if args.fsck:
-        print("  fsck:        "
-              + (f"{st['corrupt_objects']} corrupt object(s)!"
-                 if st["corrupt_objects"] else "all objects CRC-clean"))
+        if not st["corrupt_objects"]:
+            print("  fsck:        all objects CRC-clean")
+        elif args.repair:
+            print(f"  fsck:        {st['corrupt_objects']} corrupt "
+                  f"object(s) moved to quarantine/ — the next transfer "
+                  f"heals them from source")
+        else:
+            print(f"  fsck:        {st['corrupt_objects']} corrupt "
+                  f"object(s)! (re-run with --repair to quarantine)")
     if log:
         rows = []
         for r in log[-12:]:
@@ -561,7 +592,37 @@ def cmd_transfer_stats(args) -> int:
                             "steps", "wall"]))
     else:
         print("  (no transfers logged)")
-    return 1 if st.get("corrupt_objects") else 0
+    return 1 if bad_left else 0
+
+
+# --------------------------------------------------------- chaos-campaign
+def cmd_chaos_campaign(args) -> int:
+    """Run a seeded fault-injection campaign over a simulated fleet and
+    hold it to the survivability invariant: every job recovers bit-exact
+    or lands in diagnosable quarantine."""
+    from repro.chaos import run_campaign
+    from repro.chaos.campaign import write_bench_json
+    report = run_campaign(
+        args.run_dir, jobs=args.jobs, hosts=args.hosts, seed=args.seed,
+        faults=args.faults, max_ticks=args.max_ticks,
+        log=lambda m: print(f"  {m}"))
+    print()
+    print(report.table_markdown())
+    print(f"\nfingerprint: {report.fingerprint()}")
+    if args.json:
+        write_bench_json(report, args.json)
+        print(f"bench metrics -> {args.json}")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report.to_dict(), f, indent=2, default=str)
+        print(f"full report   -> {args.report}")
+    for v in report.violations:
+        print(f"VIOLATION [{v['reason']}] {v['job']}: {v['detail']}",
+              file=sys.stderr)
+    if not report.ok:
+        print(f"error: campaign invariant violated "
+              f"({len(report.violations)} violation(s))", file=sys.stderr)
+    return 0 if report.ok else 1
 
 
 def _iter_leaves(node, prefix=""):
@@ -621,6 +682,9 @@ def build_parser() -> argparse.ArgumentParser:
                        "(offline, no owning process)")
     p.add_argument("run_dir")
     p.add_argument("--job", default=None, help="show one job in full")
+    p.add_argument("--state", default=None, metavar="STATE",
+                   help="only jobs in this lifecycle state "
+                        "(e.g. failed, done, running)")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_jobs)
 
@@ -664,8 +728,31 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("dest", help="peer store directory (holds .cas/)")
     p.add_argument("--fsck", action="store_true",
                    help="CRC-check every CAS object")
+    p.add_argument("--repair", action="store_true",
+                   help="with --fsck: move corrupt objects to "
+                        "quarantine/ so the next transfer re-fetches "
+                        "them from source (implies --fsck)")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_transfer_stats)
+
+    p = sub.add_parser("chaos-campaign", help="seeded fault-injection "
+                       "campaign: N sim jobs × H hosts must recover "
+                       "bit-exact or quarantine diagnosably")
+    p.add_argument("run_dir")
+    p.add_argument("--jobs", type=int, default=100)
+    p.add_argument("--hosts", type=int, default=20)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--faults", default="all=1", metavar="SPEC",
+                   help="fault mix, e.g. 'all=1' or "
+                        "'host_kill=3,torn_write=2'")
+    p.add_argument("--max-ticks", type=int, default=4000)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write flat BENCH metrics here "
+                        "(gated by compare_bench)")
+    p.add_argument("--report", default=None, metavar="PATH",
+                   help="write the full report (rows, outcomes, "
+                        "violations, fingerprint) here")
+    p.set_defaults(fn=cmd_chaos_campaign)
     return ap
 
 

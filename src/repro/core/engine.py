@@ -39,6 +39,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
+from repro.chaos import hooks as chaos_hooks
 from repro.core.lock import LockTimeout
 from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
                                 PluginRegistry)
@@ -318,6 +319,12 @@ class SnapshotEngine:
             for k, v in getattr(self.replicator, "last_stats", {}).items():
                 if isinstance(v, (int, float)):
                     ctx.stats[f"replica_{k}"] = v
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: lost-writeback site — the image is committed (and
+            # replicated), so an injected local corruption here models a
+            # dropped fsync that only the next restore can observe
+            chaos_hooks.fire("engine.dump_done", run_dir=self.run_dir,
+                             step=ctx.step, path=path)
         if self.keep:
             self.store.gc(self.keep)
         return path
@@ -469,9 +476,11 @@ class SnapshotEngine:
                         got = self.replicator.pull_latest(self.run_dir)
                         if got is not None:
                             self._quarantined.discard(got)
-                            return self.restore(step=got, mesh=mesh,
-                                                shardings=shardings,
-                                                verify=verify, wait=wait)
+                            out = self.restore(step=got, mesh=mesh,
+                                               shardings=shardings,
+                                               verify=verify, wait=wait)
+                            self.last_stats["restored_from_replica"] = True
+                            return out
                     raise FileNotFoundError(
                         f"no restorable snapshot under {self.run_dir}")
             else:
@@ -600,16 +609,15 @@ class SnapshotEngine:
         resume-before-read overlap should use :meth:`restore` with
         ``wait="critical"`` and :meth:`retree` the cold subtrees after
         the barrier (see ``runtime.Trainer.restore``)."""
-        from repro.core.device_plugin import flatten_with_paths
         restored = self.restore(step=step, mesh=mesh,
                                 shardings={state: shardings}
                                 if shardings is not None else None,
                                 wait=wait)
         if self._lazy is not None:
-            flat = flatten_with_paths(template)
-            raw = flatten_with_paths(restored.get(state, {}))
-            if set(flat) - set(raw):
-                restored = self.restore_barrier()
+            # always join the stream: even if every template leaf already
+            # landed, leaving the materializer outstanding would hand the
+            # caller a "complete" tree with lazy_pending still True
+            restored = self.restore_barrier()
         return self.retree(template, restored[state])
 
     def latest_step(self) -> Optional[int]:

@@ -30,6 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import msgpack
 import numpy as np
 
+from repro.chaos import hooks as chaos_hooks
 from repro.serialization.integrity import atomic_write_json, read_json
 from repro.serialization.pack import (DEFAULT_CHUNK_BYTES, PackWriter,
                                       PackWriterV2, open_pack)
@@ -297,6 +298,12 @@ class SnapshotWriter:
             manifest["stripes"] = self.stripes
         if extra:
             manifest.update(extra)
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: commit-kill site — the phase-2 payload is renamed
+            # into place but the manifest does not exist yet; a raise
+            # here must leave an image that restore scans skip entirely
+            chaos_hooks.fire("snapshot.pre_manifest", step=self.step,
+                             path=self.dir)
         atomic_write_json(os.path.join(self.dir, MANIFEST), manifest)
         return self.dir
 

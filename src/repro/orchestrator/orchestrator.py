@@ -24,6 +24,7 @@ import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.chaos import hooks as chaos_hooks
 from repro.orchestrator.job import JobRecord, JobSpec, JobState
 from repro.orchestrator.scheduler import Scheduler
 from repro.orchestrator.signals import Signal, SignalChannel
@@ -129,6 +130,10 @@ class Orchestrator:
 
     # --------------------------------------------------------------- tick
     def _tick(self, tick: int) -> None:
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: the campaign driver — delivers deferred signals and
+            # fires progress-anchored events (kills, eviction walls)
+            chaos_hooks.fire("orch.tick", orch=self, tick=tick)
         # every live workload beats at tick start: a crashed "process"
         # (its workload object is gone) cannot, so only real deaths age
         # past the deadline — another job's long slice or a checkpoint
@@ -148,7 +153,7 @@ class Orchestrator:
         now = self.clock()
         for job_id in self.detector.dead_workers():
             rec = self.records.get(job_id)
-            self.detector.last_beat.pop(job_id, None)
+            self.detector.unregister(job_id)
             if rec is None or rec.state != JobState.RUNNING:
                 continue
             rec.recovery.open(
@@ -162,7 +167,7 @@ class Orchestrator:
     def _evict(self, job_id: str) -> None:
         self.scheduler.release(job_id)
         self.channel.unregister(job_id)
-        self.detector.last_beat.pop(job_id, None)
+        self.detector.unregister(job_id)
         self.workloads.pop(job_id, None)
 
     # --------------------------------------------------------- scheduling
@@ -221,7 +226,8 @@ class Orchestrator:
                          ("read_s", "decompress_s", "place_s",
                           "topology_mode", "restore_mode",
                           "restore_critical_s", "critical_bytes",
-                          "critical_entries") if k in stats})
+                          "critical_entries", "restored_from_replica")
+                         if k in stats})
         # under a lazy restore wl.restore() returned on the critical set:
         # t_restored is the RESUME point, and the background stream is
         # closed out by _update_materialized once the workload joins it

@@ -20,6 +20,8 @@ from __future__ import annotations
 import enum
 from typing import Callable, Dict, List, Optional
 
+from repro.chaos import hooks as chaos_hooks
+
 
 class Signal(str, enum.Enum):
     PREEMPT = "SIGPREEMPT"          # checkpoint then yield the devices
@@ -41,6 +43,13 @@ class SignalChannel:
         self._pending.pop(job_id, None)
 
     def send(self, job_id: str, sig: Signal = Signal.PREEMPT) -> None:
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: flaky-delivery site — a handler may duplicate this
+            # signal (it appends the extra copy itself) or defer it
+            # (returns "defer"; the injector redelivers it later)
+            if chaos_hooks.fire("signal.send", channel=self,
+                                job_id=job_id, sig=sig) == "defer":
+                return
         self._pending.setdefault(job_id, []).append(sig)
         self.sent.append((job_id, sig))
         handler = self._handlers.get(job_id)

@@ -19,25 +19,49 @@ from typing import Callable, Dict, List, Optional
 
 
 class FailureDetector:
+    """Each death is reported exactly once: :meth:`dead_workers` returns a
+    worker the first time it ages past the deadline, then suppresses it
+    until a fresh heartbeat (or re-registration) proves it alive again —
+    an evicted-but-not-unregistered worker cannot re-trigger a detection
+    storm every tick.  Callers that evict a worker for good should
+    :meth:`unregister` it."""
+
     def __init__(self, deadline_s: float = 5.0,
                  clock: Callable[[], float] = time.monotonic):
         self.deadline_s = deadline_s
         self.clock = clock
         self.last_beat: Dict[str, float] = {}
+        self._reported: set = set()
 
     def register(self, worker: str) -> None:
         self.last_beat[worker] = self.clock()
+        self._reported.discard(worker)
 
     def heartbeat(self, worker: str) -> None:
         self.last_beat[worker] = self.clock()
+        self._reported.discard(worker)
 
-    def dead_workers(self) -> List[str]:
+    def unregister(self, worker: str) -> None:
+        """Forget the worker entirely (evicted / quarantined): it is
+        neither tracked nor ever re-reported until re-registered."""
+        self.last_beat.pop(worker, None)
+        self._reported.discard(worker)
+
+    def _past_deadline(self) -> List[str]:
         now = self.clock()
         return [w for w, t in self.last_beat.items()
                 if now - t > self.deadline_s]
 
+    def dead_workers(self) -> List[str]:
+        fresh = [w for w in self._past_deadline()
+                 if w not in self._reported]
+        self._reported.update(fresh)
+        return fresh
+
     def healthy(self) -> bool:
-        return not self.dead_workers()
+        """Liveness view (non-mutating): no tracked worker is currently
+        past its deadline, reported or not."""
+        return not self._past_deadline()
 
 
 class StragglerMonitor:

@@ -44,6 +44,8 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 import msgpack
 import numpy as np
 
+from repro.chaos import hooks as chaos_hooks
+
 try:
     import zstandard as zstd
     _ZSTD = True
@@ -378,6 +380,14 @@ class PackWriterV2:
                 t0 = time.perf_counter()
                 off = f.tell()
                 f.write(data)
+                if chaos_hooks.INJECTOR is not None:
+                    # chaos: torn-write site — a handler may corrupt the
+                    # bytes just written (it must restore the file
+                    # position); the stored CRC already in flight then no
+                    # longer matches what is on disk
+                    chaos_hooks.fire("pack.chunk", file=f, offset=off,
+                                     data=data, dtype=rec["dtype"],
+                                     stripe=k, base=self.base)
                 with self._stats_lock:
                     self.io_s += time.perf_counter() - t0
                     self.stripe_bytes[k] += len(data)

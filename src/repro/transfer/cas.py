@@ -28,9 +28,11 @@ import threading
 import time
 from typing import Any, Dict, Iterable, List, Set
 
+from repro.chaos import hooks as chaos_hooks
 from repro.serialization.integrity import crc32
 
 TRANSFER_LOG = "transfers.json"
+QUARANTINE_DIR = "quarantine"
 
 
 class CASCorruption(IOError):
@@ -79,6 +81,10 @@ class ChunkStore:
         same-key racers (stripe lanes ship duplicate-content chunks):
         each writer uses its own tmp file and the atomic `os.replace`
         makes the last one win — both wrote identical bytes."""
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: network-partition site — a handler may raise here to
+            # model the host losing its route to the CAS mid-push
+            chaos_hooks.fire("cas.put", key=key, nbytes=len(data))
         if crc32(data) != _stored_crc_of(key):
             raise CASCorruption(
                 f"cas put {key}: payload CRC does not match the key "
@@ -93,6 +99,10 @@ class ChunkStore:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, dst)
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: bit-rot site — a handler may corrupt the object that
+            # just landed; the verifying get/materialize must catch it
+            chaos_hooks.fire("cas.landed", key=key, path=dst)
         return True
 
     def get(self, key: str) -> bytes:
@@ -140,16 +150,28 @@ class ChunkStore:
                 nbytes += os.path.getsize(os.path.join(dirpath, name))
         return {"objects": n, "bytes": nbytes, "root": self.root}
 
-    def fsck(self) -> List[str]:
-        """CRC-check every object; returns the corrupt keys."""
+    def fsck(self, repair: bool = False) -> List[str]:
+        """CRC-check every object; returns the corrupt keys.
+
+        With ``repair=True`` each corrupt object is moved aside into
+        ``<root>/quarantine/`` (outside the object tree, so ``stats`` and
+        ``have`` no longer see it): the next ``get`` raises ``KeyError``
+        instead of ``CASCorruption`` and the replicator's materializer
+        heals the chunk from source — bad bytes can never be re-served.
+        """
         bad = []
         for dirpath, _dirs, files in os.walk(self.objects):
             for name in files:
                 if name.endswith(".tmp") or ".tmp." in name:
                     continue
-                with open(os.path.join(dirpath, name), "rb") as f:
+                path = os.path.join(dirpath, name)
+                with open(path, "rb") as f:
                     if crc32(f.read()) != _stored_crc_of(name):
                         bad.append(name)
+                        if repair:
+                            qdir = os.path.join(self.root, QUARANTINE_DIR)
+                            os.makedirs(qdir, exist_ok=True)
+                            os.replace(path, os.path.join(qdir, name))
         return sorted(bad)
 
     # ------------------------------------------------------ transfer log

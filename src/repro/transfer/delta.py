@@ -199,7 +199,9 @@ class DeltaReplicator:
         key = chunk_key(c)
         try:
             return self.store.get(key)
-        except CASCorruption:
+        except (CASCorruption, KeyError):
+            # corrupt on disk (CRC mismatch) or missing outright (e.g.
+            # quarantined by fsck --repair): both heal from the source
             self.store.drop(key)
             data = reader.read_stored_chunk(c)
             self.store.put(key, data)

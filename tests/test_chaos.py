@@ -1,0 +1,293 @@
+"""repro.chaos — seeded fault injection + survivability campaigns.
+
+Covers the subsystem's acceptance criteria:
+
+  * zero steady-state overhead: with no ChaosConfig installed the hook
+    plane is inert (INJECTOR is None) and a sim job runs bit-exact;
+  * seeded plans are deterministic and respect the injectability rules
+    (exhaust exclusivity, kill caps, eviction needs >= 2 hosts);
+  * a small campaign holds the invariant: every job recovers bit-exact
+    or lands in diagnosable quarantine, every planned fault fires;
+  * the same seed reproduces the identical survivability fingerprint;
+  * satellites: ``ChunkStore.fsck(repair=True)`` quarantines corrupt
+    objects (healed by the next transfer), ``FailureDetector`` reports
+    each death exactly once, ``repro jobs --state`` filters, and the
+    ``chaos-campaign`` CLI emits gated BENCH metrics.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.chaos import hooks
+from repro.chaos.campaign import run_campaign
+from repro.chaos.plan import (FAULT_CLASSES, generate_plan,
+                              parse_fault_spec)
+from repro.chaos.sim import SimWorkload, reference_digest
+from repro.orchestrator.job import JobSpec
+from repro.runtime.fault import FailureDetector
+from repro.transfer import ChunkStore, DeltaReplicator
+
+
+# ----------------------------------------------------------- hook plane
+def test_hooks_inert_without_injector(tmp_path):
+    """Zero steady-state overhead: no ChaosConfig -> INJECTOR is None,
+    fire() is never consulted, and a sim job runs to its bit-exact
+    reference digest through the production dump/restore stack."""
+    assert hooks.INJECTOR is None
+    assert hooks.fire("pack.chunk", anything=1) is None
+    spec = JobSpec("solo", kind="sim", total_steps=6, ckpt_every=2)
+    wl = SimWorkload(spec, str(tmp_path / "job"))
+    wl.start()
+    while not wl.done:
+        wl.run_slice(2)
+    wl.checkpoint(wl.step)
+    wl.finish()
+    assert wl.digest() == reference_digest(spec)
+    # dump stats carry no chaos bookkeeping of any kind
+    assert not any("chaos" in k for k in wl.session.last_stats)
+    # restore path, same property
+    r = SimWorkload(spec, str(tmp_path / "job"))
+    assert r.restore() == 6
+    assert not any("chaos" in k for k in r.session.last_stats)
+
+
+def test_install_is_exclusive():
+    class _Stub:
+        def on(self, site, **ctx):
+            return None
+
+    hooks.install(_Stub())
+    try:
+        with pytest.raises(RuntimeError, match="already installed"):
+            hooks.install(_Stub())
+    finally:
+        hooks.uninstall()
+    assert hooks.INJECTOR is None
+
+
+# ------------------------------------------------------------ fault plan
+def test_parse_fault_spec():
+    assert parse_fault_spec("all=2") == {c: 2 for c in FAULT_CLASSES}
+    assert parse_fault_spec("host_kill=3,torn_write=1") == {
+        "host_kill": 3, "torn_write": 1}
+    # all=N seeds, later entries refine
+    got = parse_fault_spec("all=1,exhaust=0")
+    assert "exhaust" not in got and got["host_kill"] == 1
+    with pytest.raises(ValueError, match="unknown fault class"):
+        parse_fault_spec("rowhammer=1")
+
+
+def _specs(n, max_restarts=6):
+    return [JobSpec(f"j{i:03d}", kind="sim", total_steps=12, ckpt_every=3,
+                    max_restarts=max_restarts) for i in range(n)]
+
+
+def test_generate_plan_deterministic():
+    a = generate_plan(11, _specs(20), 4, parse_fault_spec("all=1"))
+    b = generate_plan(11, _specs(20), 4, parse_fault_spec("all=1"))
+    assert [(e.kind, e.job_id, e.at_step, e.seq) for e in a.events] == \
+           [(e.kind, e.job_id, e.at_step, e.seq) for e in b.events]
+    c = generate_plan(12, _specs(20), 4, parse_fault_spec("all=1"))
+    assert [(e.kind, e.job_id) for e in a.events] != \
+           [(e.kind, e.job_id) for e in c.events]
+
+
+def test_generate_plan_constraints():
+    plan = generate_plan(3, _specs(30), 4, parse_fault_spec("all=2"))
+    # exhaust targets are exclusive: nothing else may hit them
+    exhaust = set(plan.targets("exhaust"))
+    for ev in plan.events:
+        if ev.kind != "exhaust":
+            assert ev.job_id not in exhaust
+    # every planned class got its events
+    for cls in FAULT_CLASSES:
+        assert len(plan.events_for(cls)) == 2, cls
+    # eviction walls are dropped on a single-host fleet
+    single = generate_plan(3, _specs(10), 1,
+                           parse_fault_spec("eviction_wall=2,host_kill=1"))
+    assert single.events_for("eviction_wall") == []
+    assert len(single.events_for("host_kill")) == 1
+
+
+def test_kill_load_capped_below_restart_budget():
+    # 2 jobs, budget 2 each: at most 1 killing event lands per job, so
+    # of 6 requested host_kills only 2 are schedulable
+    plan = generate_plan(5, _specs(2, max_restarts=2), 2,
+                         parse_fault_spec("host_kill=6"))
+    per_job = {}
+    for ev in plan.events_for("host_kill"):
+        per_job[ev.job_id] = per_job.get(ev.job_id, 0) + 1
+    assert all(n <= 1 for n in per_job.values())
+    assert len(plan.events_for("host_kill")) == 2
+
+
+# -------------------------------------------------------------- campaign
+@pytest.mark.slow
+def test_small_campaign_invariant_holds(tmp_path):
+    report = run_campaign(str(tmp_path / "fleet"), jobs=8, hosts=3,
+                          seed=7, faults="all=1")
+    assert report.ok, report.violations
+    # every planned fault fired
+    for cls, row in report.rows.items():
+        assert row["injected"] == row["planned"], cls
+    # exhaust targets quarantine, everything else recovers bit-exact
+    assert report.rows["exhaust"]["quarantined"] == 1
+    assert report.rows["exhaust"]["recovered"] == 0
+    for cls, row in report.rows.items():
+        if cls != "exhaust":
+            assert row["recovered"] == row["targets"], cls
+    # replica-side corruption healed without a restart
+    assert report.rows["cas_corrupt"]["healed"] >= 1
+    done = [j for j, o in report.outcomes.items() if o == "recovered"]
+    assert len(done) == 8 - 1                     # all but the exhaust job
+
+
+@pytest.mark.slow
+def test_same_seed_reproduces_identical_fingerprint(tmp_path):
+    kw = dict(jobs=5, hosts=2, seed=21,
+              faults="commit_kill=1,signal_dup=1,host_kill=1")
+    a = run_campaign(str(tmp_path / "a"), **kw)
+    b = run_campaign(str(tmp_path / "b"), **kw)
+    assert a.ok and b.ok
+    assert a.fingerprint() == b.fingerprint()
+    assert a.outcomes == b.outcomes and a.digests == b.digests
+    # a different seed yields a different schedule identity
+    c = run_campaign(str(tmp_path / "c"), **dict(kw, seed=22))
+    assert c.fingerprint() != a.fingerprint()
+
+
+@pytest.mark.slow
+def test_campaign_cli_emits_gated_bench_metrics(tmp_path, capsys):
+    from repro.cli import main
+    bench = str(tmp_path / "BENCH_chaos.json")
+    rc = main(["chaos-campaign", str(tmp_path / "fleet"),
+               "--jobs", "4", "--hosts", "2", "--seed", "5",
+               "--faults", "torn_write=1,exhaust=1",
+               "--json", bench])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "invariant held" in out and "fingerprint:" in out
+    m = json.load(open(bench))
+    assert m["chaos.invariant.violation_ratio"] == 0.0
+    assert m["chaos.torn_write.missed_injection_ratio"] == 0.0
+    assert m["chaos.torn_write.unsurvived_ratio"] == 0.0
+    assert m["chaos.exhaust.quarantined_ratio"] == 1.0
+
+
+@pytest.mark.slow
+def test_jobs_state_filter_cli(tmp_path, capsys):
+    """Satellite: `repro jobs --state failed --json` surfaces exactly the
+    quarantined fleet, with host and exhausted fields for scripting."""
+    from repro.cli import main
+    fleet = str(tmp_path / "fleet")
+    report = run_campaign(fleet, jobs=4, hosts=2, seed=5,
+                          faults="torn_write=1,exhaust=1")
+    assert report.ok
+    assert main(["jobs", fleet, "--state", "failed", "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    quarantined = {j for j, o in report.outcomes.items()
+                   if o == "quarantined"}
+    assert {r["job"] for r in rows} == quarantined
+    assert all(r["exhausted"] for r in rows)
+    assert all("host" in r for r in rows)
+    # done-filter is the complement
+    assert main(["jobs", fleet, "--state", "done", "--json"]) == 0
+    done = {r["job"] for r in json.loads(capsys.readouterr().out)}
+    assert done == {j for j, o in report.outcomes.items()
+                    if o == "recovered"}
+    with pytest.raises(SystemExit, match="unknown state"):
+        main(["jobs", fleet, "--state", "zombie"])
+
+
+# ------------------------------------------------------ fsck --repair
+def _land_chain_in_cas(tmp_path):
+    """A real pushed chain: returns (cas, peer_dir, src_dir, state)."""
+    from repro.api import CheckpointOptions, CheckpointSession
+    rng = np.random.default_rng(0)
+    state = {f"t{i}": rng.integers(0, 8, 2048).astype(np.float32)
+             for i in range(4)}
+    src = str(tmp_path / "src")
+    s = CheckpointSession(src, CheckpointOptions(mode="sync"),
+                          backend="host")
+    s.attach(lambda: {"train_state": state})
+    s.checkpoint(1)
+    peer = str(tmp_path / "peer")
+    rep = DeltaReplicator(peer, workers=1)
+    rep.push(src, 1)
+    return ChunkStore(os.path.join(peer, ".cas")), peer, src, state
+
+
+def test_fsck_repair_quarantines_corrupt_objects(tmp_path):
+    cas, peer, src, _state = _land_chain_in_cas(tmp_path)
+    objs = []
+    for dirpath, _d, files in os.walk(cas.objects):
+        objs += [os.path.join(dirpath, f) for f in files]
+    victim = sorted(objs)[0]
+    key = os.path.basename(victim)
+    open(victim, "ab").write(b"x")
+    before = cas.stats()["objects"]
+    assert cas.fsck() == [key]                    # detect, leave in place
+    assert cas.fsck(repair=True) == [key]         # quarantine
+    assert cas.fsck() == []                       # store is clean now
+    assert cas.stats()["objects"] == before - 1
+    assert not cas.has(key)
+    assert os.path.exists(os.path.join(cas.root, "quarantine", key))
+    with pytest.raises(KeyError):                 # not CASCorruption
+        cas.get(key)
+    # quarantined objects count as missing: the next transfer re-lands
+    # the chunk from source and the store is whole again
+    DeltaReplicator(str(tmp_path / "peer_b"),
+                    cas_dir=cas.root, workers=1).push(src, 1)
+    assert cas.has(key) and cas.fsck() == []
+
+
+def test_transfer_stats_repair_cli(tmp_path, capsys):
+    from repro.cli import main
+    cas, peer, _src, _state = _land_chain_in_cas(tmp_path)
+    objs = []
+    for dirpath, _d, files in os.walk(cas.objects):
+        objs += [os.path.join(dirpath, f) for f in files]
+    open(sorted(objs)[0], "ab").write(b"x")
+    # detection alone exits 1 (corruption left in place)
+    assert main(["transfer-stats", peer, "--fsck"]) == 1
+    capsys.readouterr()
+    # --repair quarantines and exits 0 (store is clean afterwards)
+    assert main(["transfer-stats", peer, "--repair", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["cas"]["corrupt_objects"] == 1
+    assert payload["cas"]["quarantined_objects"] == 1
+    assert main(["transfer-stats", peer, "--fsck"]) == 0
+
+
+# ------------------------------------------------------ failure detector
+def test_failure_detector_reports_each_death_once():
+    t = {"now": 0.0}
+    det = FailureDetector(deadline_s=1.0, clock=lambda: t["now"])
+    det.register("w1")
+    det.register("w2")
+    t["now"] = 2.0
+    det.heartbeat("w2")
+    assert det.dead_workers() == ["w1"]           # first report
+    assert det.dead_workers() == []               # suppressed, not spammed
+    assert not det.healthy()                      # liveness still false
+    det.heartbeat("w1")                           # proof of life re-arms
+    assert det.healthy()
+    t["now"] = 4.0
+    assert det.dead_workers() == ["w1", "w2"]
+    assert det.dead_workers() == []
+
+
+def test_failure_detector_unregister_forgets_worker():
+    t = {"now": 0.0}
+    det = FailureDetector(deadline_s=1.0, clock=lambda: t["now"])
+    det.register("w1")
+    t["now"] = 5.0
+    assert det.dead_workers() == ["w1"]
+    det.unregister("w1")
+    assert det.dead_workers() == []
+    assert det.healthy()                          # not tracked at all
+    det.register("w1")                            # re-registration re-arms
+    t["now"] = 10.0
+    assert det.dead_workers() == ["w1"]

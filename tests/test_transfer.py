@@ -406,3 +406,63 @@ def test_transfer_stats_detects_corruption(tmp_path, capsys):
     open(sorted(objs)[0], "ab").write(b"x")
     assert main(["transfer-stats", peer, "--fsck"]) == 1
     assert "corrupt" in capsys.readouterr().out
+
+
+# ----------------------------------------------------------- double fault
+def _corrupt_entry_chunk(root, step, entry):
+    """Flip bytes inside `entry`'s first chunk of `root`'s step image."""
+    from repro.serialization.pack import open_pack, stripe_path
+    base = os.path.join(snapshot_dir(root, step), "host0000.pack")
+    with open_pack(base, verify=False) as r:
+        c = r.index[entry]["chunks"][0]
+    with open(stripe_path(base, c["stripe"]), "r+b") as f:
+        f.seek(c["offset"] + 8)
+        f.write(b"\xde\xad\xbe\xef")
+
+
+def test_double_fault_quarantines_with_diagnosable_error(tmp_path):
+    """Local chunk torn AND the replica's copy of the same entry torn:
+    the heal pulls equally-bad bytes, the retried entry fails again, and
+    the lazy materializer quarantines the step with a diagnosable error
+    naming the entry — it never crashes the loop and never serves bad
+    bytes.  The retried restore falls back to the previous commit."""
+    from repro.core.lazy import LazyRestoreError
+    run, peer = str(tmp_path / "run"), str(tmp_path / "peer")
+    rng = np.random.default_rng(0)
+    state1 = {"hot": rng.standard_normal(512).astype(np.float32),
+              "cold": {f"c{i}": rng.standard_normal(8 * 256)
+                       .astype(np.float32) for i in range(3)}}
+    holder = {"state": state1}
+    s = CheckpointSession(run,
+                          CheckpointOptions(mode="sync", replicate_to=peer),
+                          backend="host")
+    s.attach(lambda: {"train_state": holder["state"]})
+    s.checkpoint(1)
+    state2 = {"hot": state1["hot"] + 1.0,
+              "cold": {k: v + 1.0 for k, v in state1["cold"].items()}}
+    holder["state"] = state2
+    s.checkpoint(2)
+
+    entry = "train_state::cold/c0::np"
+    _corrupt_entry_chunk(run, 2, entry)      # fault 1: local image
+    _corrupt_entry_chunk(peer, 2, entry)     # fault 2: replica, same entry
+
+    r = CheckpointSession(
+        run, CheckpointOptions(replicate_to=peer, restore_mode="lazy",
+                               critical_states=("train_state/hot",)),
+        backend="host")
+    r.attach(lambda: {"train_state": None})
+    restored = r.restore()                   # criticals verify clean
+    np.testing.assert_array_equal(
+        np.asarray(restored["train_state"]["hot"]), state2["hot"])
+    # the heal pulls the replica's equally-corrupt bytes, the retried
+    # entry fails again, and the barrier names the entry it gave up on
+    with pytest.raises(LazyRestoreError, match="cold/c0"):
+        r.restore_barrier()
+    # step 2 is quarantined: the retry falls back to step 1, bit-exact
+    again = r.restore(wait="all")
+    np.testing.assert_array_equal(
+        np.asarray(again["train_state"]["hot"]), state1["hot"])
+    for k, v in state1["cold"].items():
+        np.testing.assert_array_equal(
+            np.asarray(again["train_state"]["cold"][k]), v)

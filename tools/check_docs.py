@@ -29,8 +29,8 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SKIP_MARK = "<!-- check_docs: skip -->"
-PLACEHOLDERS = ("RUN_DIR", "ORCH_RUN", "PEER_STORE")
-SLOW_TOKENS = ("orchestrate", "migrate")
+PLACEHOLDERS = ("RUN_DIR", "ORCH_RUN", "PEER_STORE", "CHAOS_RUN")
+SLOW_TOKENS = ("orchestrate", "migrate", "chaos")
 RUNNABLE_PREFIXES = ("python -m repro", "python -m benchmarks")
 
 FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
@@ -147,7 +147,8 @@ def main(argv=None):
                     default=sorted(glob.glob(os.path.join(REPO, "docs",
                                                           "*.md"))))
     ap.add_argument("--skip-slow", action="store_true",
-                    help="skip orchestrate/migrate console walkthroughs")
+                    help="skip orchestrate/migrate/chaos console "
+                         "walkthroughs")
     args = ap.parse_args(argv)
 
     total_ran = total_failed = 0
