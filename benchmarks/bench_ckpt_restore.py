@@ -260,6 +260,84 @@ def run_lazy(n_entries: int = 16, entry_kb: int = 384,
         shutil.rmtree(run_dir, ignore_errors=True)
 
 
+def run_concurrent(n_entries: int = 64, entry_kb: int = 384,
+                   repeats: int = 3) -> dict:
+    """Soft-freeze (concurrent) capture vs the sync dump it must match.
+
+    Dumps the same synthetic image twice: once with the classic
+    stop-the-world capture, once with ``capture="concurrent"`` (pin →
+    speculate in background → validate → commit).  Asserts the two
+    committed images are bit-identical — same per-entry CRCs, same
+    restored bytes — before emitting anything, then reports the frozen
+    windows.  ``concurrent.frozen_vs_sync`` is the gated headline: the
+    soft-freeze pause must stay within 10% of the sync frozen window
+    (compare_bench treats it as an absolute ceiling of 0.10).
+    """
+    from repro.api import CheckpointOptions, CheckpointSession
+    from repro.runtime.interval import frozen_window_s
+
+    state = _synthetic_state(n_entries, entry_kb, seed=3)
+    total_mb = sum(v.nbytes for v in state.values()) / 2**20
+    _emit("concurrent.workload.entries", n_entries, "count")
+    _emit("concurrent.workload.bytes", total_mb, "MiB")
+
+    base = dict(compress=True, pack_format=2, incremental=True)
+    sync_frozen, conc_frozen = [], []
+    pin, validate, speculate = [], [], []
+    recaptured = 0
+    for rep in range(repeats):
+        sync_dir = tempfile.mkdtemp(prefix="bench_conc_sync_")
+        conc_dir = tempfile.mkdtemp(prefix="bench_conc_soft_")
+        try:
+            s = CheckpointSession(
+                sync_dir, CheckpointOptions(**base), backend="host")
+            s.attach(lambda: {"train_state": state})
+            s.checkpoint(1)
+            sync_frozen.append(frozen_window_s(s.last_stats))
+
+            c = CheckpointSession(
+                conc_dir, CheckpointOptions(capture="concurrent", **base),
+                backend="host")
+            c.attach(lambda: {"train_state": state})
+            handle = c.checkpoint_begin(1)
+            handle.wait_speculated()      # the job would be stepping here
+            c.checkpoint_finalize()
+            st = c.last_stats
+            conc_frozen.append(frozen_window_s(st))
+            pin.append(st["pin_pause_s"])
+            validate.append(st["validate_pause_s"])
+            speculate.append(st["speculate_s"])
+            recaptured += int(st.get("recaptured_entries", 0))
+
+            # bit-exactness: identical per-entry CRCs, identical bytes
+            ms = s.store.manifest(1)
+            mc = c.store.manifest(1)
+            if ms["entry_crcs"] != mc["entry_crcs"]:
+                raise AssertionError(
+                    "concurrent image entry CRCs diverge from sync dump")
+            r = CheckpointSession(conc_dir, CheckpointOptions(**base),
+                                  backend="host")
+            r.attach(lambda: {"train_state": None})
+            restored = r.restore()["train_state"]
+            for k, v in state.items():
+                np.testing.assert_array_equal(np.asarray(restored[k]), v)
+        finally:
+            shutil.rmtree(sync_dir, ignore_errors=True)
+            shutil.rmtree(conc_dir, ignore_errors=True)
+
+    out = {"sync_frozen_s": min(sync_frozen),
+           "frozen_s": min(conc_frozen),
+           "pin_pause_s": min(pin),
+           "validate_pause_s": min(validate),
+           "speculate_s": min(speculate)}
+    for k, v in out.items():
+        _emit(f"concurrent.{k[:-2]}_ms", v * 1e3, "ms")
+    ratio = out["frozen_s"] / out["sync_frozen_s"]
+    _emit("concurrent.frozen_vs_sync", ratio, "x")
+    _emit("concurrent.recaptured_entries", recaptured, "count")
+    return {**out, "frozen_vs_sync": ratio}
+
+
 def run_sweep(n_entries: int = 64, entry_kb: int = 128,
               stripes=(1, 2, 4), threads=(1, 2, 4),
               repeats: int = 3) -> list:
@@ -298,6 +376,9 @@ def main(argv=None) -> int:
     ap.add_argument("--lazy", action="store_true",
                     help="time-to-first-step: lazy (resume-before-read) "
                          "vs eager full materialization")
+    ap.add_argument("--concurrent", action="store_true",
+                    help="soft-freeze capture: frozen window vs sync "
+                         "dump (images asserted bit-identical)")
     ap.add_argument("--entries", type=int, default=64)
     ap.add_argument("--entry-kb", type=int, default=384)
     ap.add_argument("--repeats", type=int, default=4)
@@ -313,6 +394,8 @@ def main(argv=None) -> int:
         run_sweep(repeats=args.repeats)
     if args.lazy:
         run_lazy(repeats=args.repeats)
+    if args.concurrent:
+        run_concurrent(args.entries, args.entry_kb, args.repeats)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(RECORDS, f, indent=1, sort_keys=True)

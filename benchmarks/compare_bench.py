@@ -42,6 +42,8 @@ def classify(name: str) -> str:
     low = name.lower()
     if "ttfs_vs_eager" in low:
         return "ttfs"     # lazy-restore acceptance bound: absolute gate
+    if "frozen_vs_sync" in low:
+        return "frozen"   # soft-freeze acceptance bound: absolute gate
     if "speedup" in low:
         return "speedup"
     if "dedup" in low:
@@ -60,6 +62,11 @@ SPEEDUP_TOLERANCE = 2.0       # a speedup may halve-and-some before failing
 # contract — a run that degrades from 0.30 to 0.45 still honors it, one
 # that hits 0.55 does not, regardless of what the baseline recorded.
 TTFS_RATIO_CEILING = 0.5
+# concurrent (soft-freeze) capture's acceptance criterion: the pause the
+# job actually observes (pin + validate) must stay at or below this
+# fraction of the stop-the-world sync frozen window.  Absolute for the
+# same reason as the ttfs ceiling: the ratio *is* the contract.
+FROZEN_RATIO_CEILING = 0.10
 
 
 def check_metric(name: str, base: float, fresh: float,
@@ -79,6 +86,9 @@ def check_metric(name: str, base: float, fresh: float,
     if kind == "ttfs":                        # absolute acceptance bound
         reg = fresh / base - 1
         return fresh <= TTFS_RATIO_CEILING, reg
+    if kind == "frozen":                      # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= FROZEN_RATIO_CEILING, reg
     if kind == "speedup":                     # higher is better
         if fresh <= 0:
             return False, float("inf")
@@ -117,6 +127,12 @@ def compare_file(fresh_path: str, base_path: str, tol_bytes: float,
                     f"{name}: fresh {fv:.3f} exceeds the lazy-restore "
                     f"acceptance ceiling {TTFS_RATIO_CEILING} "
                     f"(time-to-first-step vs eager wall)")
+                continue
+            if kind == "frozen":
+                problems.append(
+                    f"{name}: fresh {fv:.3f} exceeds the soft-freeze "
+                    f"acceptance ceiling {FROZEN_RATIO_CEILING} "
+                    f"(concurrent frozen window vs sync dump)")
                 continue
             tol = (tol_bytes if kind == "bytes" else
                    SPEEDUP_TOLERANCE if kind == "speedup" else tol_time)

@@ -18,3 +18,5 @@ from repro.api.capabilities import (CheckReport, capabilities,  # noqa: F401
                                     check)
 from repro.api.session import (CheckpointSession,  # noqa: F401
                                FrozenCheckpoint, SnapshotWriteFailed)
+from repro.core.engine import (ConcurrentCapture,  # noqa: F401
+                               PendingWriteStalled)

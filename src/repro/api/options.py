@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 _MODES = ("sync", "async")
 _TRANSFERS = ("copy", "delta")
 _RESTORE_MODES = ("eager", "lazy")
+_CAPTURES = ("sync", "concurrent")
 
 # env-var names, one per field (the `criu_set_*` <-> CRIU_* convention)
 _ENV_PREFIX = "REPRO_CKPT_"
@@ -80,6 +81,18 @@ class CheckpointOptions:
                      the incremental content hash).
     stripes          pack files per host; each stripe gets its own
                      appender thread, so writes overlap compression.
+    capture          "sync" (default: the job stays frozen for the whole
+                     device capture) or "concurrent" (soft-freeze:
+                     a brief pin pause, then shards are speculated to
+                     disk while the step loop keeps running; a short
+                     final validate pause re-hashes dirtied entries
+                     against pack v2's per-chunk content hashes and
+                     re-captures only the invalidated ones —
+                     PhoenixOS-style validated speculation).  Requires
+                     pack_format=2, incremental=True, and a backend
+                     with the "dirty_tracking" feature; incompatible
+                     with mode="async" (the validate pause already
+                     overlaps the write).
     """
 
     mode: str = "sync"
@@ -98,6 +111,7 @@ class CheckpointOptions:
     io_threads: int = 0
     chunk_mb: int = 4
     stripes: int = 2
+    capture: str = "sync"
 
     def __post_init__(self):
         if isinstance(self.critical_states, (list, set)):
@@ -152,6 +166,29 @@ class CheckpointOptions:
         if not isinstance(self.stripes, int) or not 1 <= self.stripes <= 64:
             raise OptionsError("stripes must be an int in [1, 64], "
                                f"got {self.stripes!r}")
+        if self.capture not in _CAPTURES:
+            raise OptionsError(f"capture must be one of {_CAPTURES}, "
+                               f"got {self.capture!r}")
+        # reject conflicting combinations up front, not mid-dump
+        if self.capture == "concurrent":
+            if self.pack_format != 2:
+                raise OptionsError(
+                    "capture='concurrent' requires pack_format=2: "
+                    "speculation is validated against pack v2's "
+                    "per-chunk raw_crc32 content hashes, which v1 "
+                    "packs do not record")
+            if not self.incremental:
+                raise OptionsError(
+                    "capture='concurrent' requires incremental=True: "
+                    "re-capturing invalidated shards reuses the "
+                    "incremental chunk-dedup path to patch the open "
+                    "stripe set")
+            if self.mode == "async":
+                raise OptionsError(
+                    "capture='concurrent' is incompatible with "
+                    "mode='async': the speculative capture already "
+                    "overlaps the step loop, and the final validate "
+                    "pause must observe the committed bytes")
 
     def replace(self, **changes) -> "CheckpointOptions":
         return dataclasses.replace(self, **changes)
@@ -199,6 +236,7 @@ class CheckpointOptions:
             io_threads=get("IO_THREADS", int, cls.io_threads),
             chunk_mb=get("CHUNK_MB", int, cls.chunk_mb),
             stripes=get("STRIPES", int, cls.stripes),
+            capture=get("CAPTURE", str, cls.capture),
         )
 
     def to_env(self) -> Dict[str, str]:
@@ -219,6 +257,7 @@ class CheckpointOptions:
             _ENV_PREFIX + "IO_THREADS": str(self.io_threads),
             _ENV_PREFIX + "CHUNK_MB": str(self.chunk_mb),
             _ENV_PREFIX + "STRIPES": str(self.stripes),
+            _ENV_PREFIX + "CAPTURE": self.capture,
         }
         if self.replicate_to is not None:
             out[_ENV_PREFIX + "REPLICATE_TO"] = self.replicate_to

@@ -155,6 +155,29 @@ class CheckpointSession:
         self._feed_planner()
         return path
 
+    def checkpoint_begin(self, step: int):
+        """Start a soft-freeze capture (requires
+        ``CheckpointOptions(capture="concurrent")``) and return its
+        :class:`repro.core.engine.ConcurrentCapture` handle.  The job
+        keeps stepping while speculation runs; poll
+        ``handle.speculation_done`` and call :meth:`checkpoint_finalize`
+        (or ``handle.finalize()``) for the short validate pause."""
+        return self.engine.begin_concurrent(step)
+
+    def checkpoint_finalize(self) -> Optional[str]:
+        """Finalize the in-flight soft-freeze capture, if any.  Returns
+        the snapshot path, or None when nothing was in flight."""
+        handle = self.engine.concurrent_capture
+        if handle is None:
+            return None
+        path = handle.finalize()
+        self._feed_planner()
+        return path
+
+    @property
+    def concurrent_capture(self):
+        return self.engine.concurrent_capture
+
     @contextlib.contextmanager
     def frozen(self, step: int):
         """Freeze, yield the in-memory capture, commit (or abort) on exit.
@@ -253,8 +276,12 @@ class CheckpointSession:
     def latest_step(self) -> Optional[int]:
         return self.engine.latest_step()
 
-    def wait_pending(self) -> None:
-        self.engine.wait_pending()
+    def wait_pending(self, timeout_s: Optional[float] = None) -> None:
+        """Drain the async background writer.  With ``timeout_s`` a
+        wedged writer raises
+        :class:`repro.core.engine.PendingWriteStalled` instead of
+        hanging forever."""
+        self.engine.wait_pending(timeout_s)
 
     # session is a context manager: exiting drains async writers
     def __enter__(self) -> "CheckpointSession":

@@ -66,6 +66,7 @@ class CampaignReport:
     outcomes: Dict[str, str]                 # job -> recovered|quarantined|…
     digests: Dict[str, Optional[str]]        # job -> final digest (DONE only)
     violations: List[Dict[str, Any]]
+    capture: str = "sync"                    # dump capture mode swept
 
     @property
     def ok(self) -> bool:
@@ -84,7 +85,8 @@ class CampaignReport:
             for cls, row in sorted(self.rows.items())}
         blob = json.dumps(
             {"seed": self.seed, "jobs": self.jobs, "hosts": self.hosts,
-             "fault_spec": self.fault_spec, "rows": stable_rows,
+             "fault_spec": self.fault_spec, "capture": self.capture,
+             "rows": stable_rows,
              "outcomes": self.outcomes, "digests": self.digests,
              "violation_reasons": sorted(
                  v["reason"] for v in self.violations)},
@@ -104,7 +106,7 @@ class CampaignReport:
                 f"{mttr} |")
         out.append(
             f"\n{self.jobs} jobs × {self.hosts} hosts, seed {self.seed}, "
-            f"faults `{self.fault_spec}`: "
+            f"faults `{self.fault_spec}`, capture `{self.capture}`: "
             + ("**invariant held** (every job bit-exact or diagnosably "
                "quarantined)" if self.ok else
                f"**{len(self.violations)} invariant violation(s)**"))
@@ -139,7 +141,8 @@ class CampaignReport:
     def to_dict(self) -> Dict[str, Any]:
         return {"format": 1,
                 "seed": self.seed, "jobs": self.jobs, "hosts": self.hosts,
-                "fault_spec": self.fault_spec, "ok": self.ok,
+                "fault_spec": self.fault_spec, "capture": self.capture,
+                "ok": self.ok,
                 "wall_s": self.wall_s, "ticks": self.ticks,
                 "fingerprint": self.fingerprint(),
                 "rows": self.rows, "outcomes": self.outcomes,
@@ -151,13 +154,24 @@ def run_campaign(run_dir: str, jobs: int = 100, hosts: int = 20,
                  total_steps: int = DEFAULT_TOTAL_STEPS,
                  ckpt_every: int = DEFAULT_CKPT_EVERY,
                  max_ticks: int = 4000,
+                 capture: str = "sync",
                  log: Optional[Callable[[str], None]] = None
                  ) -> CampaignReport:
-    """Run one seeded survivability campaign under ``run_dir``."""
+    """Run one seeded survivability campaign under ``run_dir``.
+
+    ``capture="concurrent"`` sweeps the fleet's dumps through the
+    soft-freeze path and enables the ``dirty_burst`` fault class; under
+    sync capture that class is dropped from the plan (it can only fire
+    inside a speculation window).  ``dirty_burst`` sits last in
+    ``FAULT_CLASSES``, so dropping it leaves the seeded schedule of every
+    other class bit-identical to a pre-concurrent campaign.
+    """
     say = log or (lambda _msg: None)
     specs = make_specs(jobs, total_steps=total_steps,
                        ckpt_every=ckpt_every)
     counts = parse_fault_spec(faults)
+    if capture != "concurrent":
+        counts.pop("dirty_burst", None)
     plan = generate_plan(seed, specs, hosts, counts)
 
     # exhaust targets get a restart budget of exactly 1: two kills land
@@ -173,8 +187,9 @@ def run_campaign(run_dir: str, jobs: int = 100, hosts: int = 20,
         plan.targets("fsync_drop"))
 
     say(f"chaos plan: seed={seed} events={len(plan.events)} "
-        f"classes={sorted(plan.counts)}")
-    factory = make_sim_factory(run_dir, non_incremental=non_inc)
+        f"classes={sorted(plan.counts)} capture={capture}")
+    factory = make_sim_factory(run_dir, non_incremental=non_inc,
+                               capture=capture)
     cfg = OrchestratorConfig(
         capacity=max(2, min(jobs, 2 * hosts)), slice_steps=2,
         heartbeat_deadline_s=0.05, hosts=hosts, transfer="delta",
@@ -190,7 +205,7 @@ def run_campaign(run_dir: str, jobs: int = 100, hosts: int = 20,
     report = _evaluate(run_dir, plan, injector, orch, summary,
                        {s.job_id: s for s in specs},
                        jobs=jobs, hosts=hosts, seed=seed,
-                       fault_spec=faults)
+                       fault_spec=faults, capture=capture)
     return report
 
 
@@ -198,7 +213,8 @@ def run_campaign(run_dir: str, jobs: int = 100, hosts: int = 20,
 def _evaluate(run_dir: str, plan: ChaosConfig, injector: FaultInjector,
               orch: Orchestrator, summary: Dict[str, Any],
               by_id: Dict[str, JobSpec], jobs: int, hosts: int,
-              seed: int, fault_spec: str) -> CampaignReport:
+              seed: int, fault_spec: str,
+              capture: str = "sync") -> CampaignReport:
     outcomes: Dict[str, str] = {}
     digests: Dict[str, Optional[str]] = {}
     violations: List[Dict[str, Any]] = []
@@ -243,6 +259,7 @@ def _evaluate(run_dir: str, plan: ChaosConfig, injector: FaultInjector,
             for cls in sorted(plan.counts)}
     return CampaignReport(
         seed=seed, jobs=jobs, hosts=hosts, fault_spec=fault_spec,
+        capture=capture,
         wall_s=summary["wall_s"], ticks=summary["ticks"],
         planned={cls: len(plan.events_for(cls)) for cls in plan.counts},
         rows=rows, outcomes=outcomes, digests=digests,

@@ -175,6 +175,48 @@ class FaultInjector:
                 "step": step, "path": target})
         return None
 
+    # -- concurrent (soft-freeze) capture --------------------------------
+    def _on_engine_speculate(self, key, leaf, note, step=None, **_):
+        """dirty_burst: mutate a live leaf mid-speculation.
+
+        Models the step loop racing the snapshot: the leaf's bytes change
+        after the pin, and — exactly like a retiring stream op — the
+        mutation is signalled through the dirty protocol via ``note``.
+        The validate pause must re-hash the entry, spot the stale
+        speculated copy, and re-capture it; the mutation is reverted at
+        the validate site so the job's own trajectory stays bit-exact.
+        """
+        import numpy as np
+        if not isinstance(leaf, np.ndarray) or leaf.size == 0:
+            return None
+        with self.lock:
+            ev = self._match_commit("dirty_burst")
+            if ev is None:
+                return None
+            try:
+                leaf.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            except (ValueError, AttributeError):
+                return None          # non-contiguous / read-only leaf
+            note(key)
+            ev.state = "armed"       # reverted+recorded at engine.validate
+            ev.detail["mutated"] = {"key": key, "leaf": leaf}
+        return None
+
+    def _on_engine_validate(self, step=None, **_):
+        """Revert armed dirty_burst mutations at the commit point."""
+        import numpy as np
+        with self.lock:
+            for ev in self.config.events:
+                if (ev.kind != "dirty_burst" or ev.state != "armed"
+                        or ev.job_id != self.current_job):
+                    continue
+                mut = ev.detail.pop("mutated", None)
+                if mut is not None:
+                    mut["leaf"].view(np.uint8).reshape(-1)[0] ^= 0xFF
+                self._record(ev, step=step,
+                             key=mut["key"] if mut else None)
+        return None
+
     # -- transfer path --------------------------------------------------
     def _on_cas_put(self, key, nbytes=0, **_):
         """cas_partition: cut the host off from the CAS mid-push."""

@@ -29,6 +29,11 @@ survive):
 ``signal_delay``   the PREEMPT signal for one job is delayed two ticks
 ``exhaust``        repeated kills against a job with ``max_restarts=1``
                    until it lands in diagnosable quarantine
+``dirty_burst``    mutate a live state leaf *during* a concurrent
+                   (soft-freeze) capture's speculation window — the dirty
+                   protocol must invalidate the stale shard and the commit
+                   must stay bit-exact (only fires when the campaign runs
+                   with ``capture="concurrent"``)
 =================  ============================================================
 """
 from __future__ import annotations
@@ -50,13 +55,17 @@ FAULT_CLASSES = (
     "signal_dup",
     "signal_delay",
     "exhaust",
+    # keep dirty_burst last: sync campaigns zero its count, and a
+    # trailing zero-count class leaves the PRNG draw order (and so every
+    # pre-existing seeded plan) unchanged
+    "dirty_burst",
 )
 
 # Classes that anchor on a checkpoint commit: the event fires inside the
 # first commit whose step is >= at_step (commit hooks), so at_step must
 # leave at least one earlier committed image to fall back to.
 COMMIT_ANCHORED = ("torn_write", "commit_kill", "fsync_drop",
-                   "cas_corrupt", "cas_partition")
+                   "cas_corrupt", "cas_partition", "dirty_burst")
 
 # Classes that cost the target job a restart when they fire.
 KILLING = ("torn_write", "commit_kill", "fsync_drop", "cas_partition",
@@ -147,6 +156,9 @@ def generate_plan(seed: int, specs: Sequence, hosts: int,
       has at least one earlier committed image to fall back to.
     * ``eviction_wall`` events are dropped (with a note in ``counts``)
       when the fleet has fewer than two hosts.
+    * ``dirty_burst`` events avoid ``torn_write``/``fsync_drop`` targets:
+      those jobs write self-contained (non-incremental) images, which
+      forces ``capture="sync"`` where a burst could never fire.
     """
     rng = np.random.default_rng(seed)
     counts = dict(counts)
@@ -179,12 +191,19 @@ def generate_plan(seed: int, specs: Sequence, hosts: int,
     for kind in FAULT_CLASSES:
         if kind == "exhaust":
             continue
+        avoid: set = set()
+        if kind == "dirty_burst":
+            # torn_write/fsync_drop targets run non-incremental
+            # (self-contained images), which forces capture="sync" on
+            # them — a burst planned there could never fire
+            avoid = {e.job_id for e in events
+                     if e.kind in ("torn_write", "fsync_drop")}
         for _ in range(counts.get(kind, 0)):
             job = None
             for _probe in range(len(order)):
                 cand = order[cursor % len(order)]
                 cursor += 1
-                if cand in exhaust_jobs:
+                if cand in exhaust_jobs or cand in avoid:
                     continue
                 if kind in KILLING and \
                         kill_load[cand] + 1 >= by_id[cand].max_restarts:

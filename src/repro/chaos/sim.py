@@ -148,7 +148,8 @@ class SimWorkload:
 
 def make_sim_factory(base_run_dir: str,
                      non_incremental: Any = (),
-                     replicate: bool = True) -> Callable[..., SimWorkload]:
+                     replicate: bool = True,
+                     capture: str = "sync") -> Callable[..., SimWorkload]:
     """Workload factory for campaigns.
 
     Every job gets sync pack-v2 commits and (by default) delta
@@ -157,16 +158,23 @@ def make_sim_factory(base_run_dir: str,
     image must not poison later incremental children (their re-push would
     keep re-reading the torn chunk), which is exactly the configuration a
     fleet operator would pick for hosts with suspect storage.
+
+    ``capture="concurrent"`` runs every *incremental* job's dumps through
+    the soft-freeze path (pin → speculate → validate → commit);
+    non-incremental jobs stay on sync capture, which concurrent mode
+    requires anyway.
     """
     non_incremental = set(non_incremental)
 
     def factory(spec: JobSpec, attempt: int,
                 host: Optional[str] = None) -> SimWorkload:
         job_dir = job_dir_for(base_run_dir, spec.job_id, host)
+        incremental = spec.job_id not in non_incremental
         opts = CheckpointOptions(
             mode="sync", pack_format=2, stripes=2, chunk_mb=1,
             io_threads=1,
-            incremental=spec.job_id not in non_incremental,
+            incremental=incremental,
+            capture=capture if incremental else "sync",
             replicate_to=(job_dir + "_replica") if replicate else None,
             transfer="delta", transfer_workers=1,
             verify_restore=True)

@@ -186,6 +186,19 @@ def cmd_inspect(args) -> int:
                  if m.get("format", 1) >= 2 else ""))
         print(f"  mode:        {m.get('mode', '-')}   "
               f"incremental: {m.get('incremental', False)}")
+        print(f"  capture:     {m.get('capture', 'sync')}")
+        cs = m.get("capture_stats") or {}
+        if cs:
+            print(f"    frozen window: {cs.get('frozen_s', 0.0) * 1e3:.1f} ms"
+                  f"  (pin {cs.get('pin_pause_s', 0.0) * 1e3:.1f} ms + "
+                  f"validate {cs.get('validate_pause_s', 0.0) * 1e3:.1f} ms); "
+                  f"speculated {cs.get('speculate_s', 0.0) * 1e3:.1f} ms "
+                  f"unfrozen")
+            print(f"    speculated:  {cs.get('speculated_entries', 0)} "
+                  f"entries   dirty: {cs.get('dirty_entries', 0)}   "
+                  f"re-captured: {cs.get('recaptured_entries', 0)} "
+                  f"({_fmt_bytes(cs.get('recaptured_bytes', 0))}, "
+                  f"{_fmt_bytes(cs.get('superseded_bytes', 0))} superseded)")
         print(f"  states:      {', '.join(m.get('states', []))}")
         print(f"  written:     {_fmt_bytes(m.get('written_bytes', 0))}   "
               f"reused: {_fmt_bytes(m.get('reused_bytes', 0))}")
@@ -600,29 +613,68 @@ def cmd_chaos_campaign(args) -> int:
     """Run a seeded fault-injection campaign over a simulated fleet and
     hold it to the survivability invariant: every job recovers bit-exact
     or lands in diagnosable quarantine."""
+    import hashlib
     from repro.chaos import run_campaign
     from repro.chaos.campaign import write_bench_json
-    report = run_campaign(
-        args.run_dir, jobs=args.jobs, hosts=args.hosts, seed=args.seed,
-        faults=args.faults, max_ticks=args.max_ticks,
-        log=lambda m: print(f"  {m}"))
-    print()
-    print(report.table_markdown())
-    print(f"\nfingerprint: {report.fingerprint()}")
+    modes = (["sync", "concurrent"] if args.capture == "sweep"
+             else [args.capture])
+    sweep = len(modes) > 1
+    reports = {}
+    for mode in modes:
+        run_dir = os.path.join(args.run_dir, mode) if sweep \
+            else args.run_dir
+        reports[mode] = run_campaign(
+            run_dir, jobs=args.jobs, hosts=args.hosts, seed=args.seed,
+            faults=args.faults, max_ticks=args.max_ticks, capture=mode,
+            log=lambda m, _mode=mode: print(f"  [{_mode}] {m}"))
+    for mode in modes:
+        print()
+        print(reports[mode].table_markdown())
+    if sweep:
+        # one identity string for the whole sweep: same seed -> both
+        # campaigns reproduce -> same combined fingerprint
+        combined = hashlib.sha256("\n".join(
+            reports[m].fingerprint() for m in modes).encode()).hexdigest()
+        print(f"\nfingerprint: {combined}")
+    else:
+        print(f"\nfingerprint: {reports[modes[0]].fingerprint()}")
     if args.json:
-        write_bench_json(report, args.json)
+        if sweep:
+            # sync metrics keep the historical unprefixed names (so the
+            # committed baseline keeps gating them); the concurrent
+            # campaign lands under chaos.concurrent.*
+            merged = dict(reports["sync"].metrics())
+            for k, v in reports["concurrent"].metrics().items():
+                merged["chaos.concurrent." + k[len("chaos."):]] = v
+            tmp = args.json + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(merged, f, indent=2, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, args.json)
+        else:
+            write_bench_json(reports[modes[0]], args.json)
         print(f"bench metrics -> {args.json}")
     if args.report:
+        if sweep:
+            payload = {"format": 1, "capture": "sweep",
+                       "fingerprint": combined,
+                       "sync": reports["sync"].to_dict(),
+                       "concurrent": reports["concurrent"].to_dict()}
+        else:
+            payload = reports[modes[0]].to_dict()
         with open(args.report, "w") as f:
-            json.dump(report.to_dict(), f, indent=2, default=str)
+            json.dump(payload, f, indent=2, default=str)
         print(f"full report   -> {args.report}")
-    for v in report.violations:
-        print(f"VIOLATION [{v['reason']}] {v['job']}: {v['detail']}",
-              file=sys.stderr)
-    if not report.ok:
+    violations = 0
+    for mode in modes:
+        for v in reports[mode].violations:
+            violations += 1
+            print(f"VIOLATION [{mode}] [{v['reason']}] {v['job']}: "
+                  f"{v['detail']}", file=sys.stderr)
+    if violations:
         print(f"error: campaign invariant violated "
-              f"({len(report.violations)} violation(s))", file=sys.stderr)
-    return 0 if report.ok else 1
+              f"({violations} violation(s))", file=sys.stderr)
+    return 0 if not violations else 1
 
 
 def _iter_leaves(node, prefix=""):
@@ -746,6 +798,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fault mix, e.g. 'all=1' or "
                         "'host_kill=3,torn_write=2'")
     p.add_argument("--max-ticks", type=int, default=4000)
+    p.add_argument("--capture", choices=("sync", "concurrent", "sweep"),
+                   default="sync",
+                   help="dump capture mode for the fleet; 'sweep' runs "
+                        "both campaigns (sync + concurrent, the latter "
+                        "with the dirty_burst class enabled) and merges "
+                        "their metrics")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write flat BENCH metrics here "
                         "(gated by compare_bench)")

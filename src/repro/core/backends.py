@@ -44,7 +44,71 @@ class BackendError(RuntimeError):
 #: this so the registration below and the plugin stamp cannot drift.
 JAX_BACKEND_FEATURES = frozenset({
     "device_arrays", "sharded_restore", "parallel_restore",
-    "elastic_restore", "replica_dedup", "chunked_packs", "pipelined_io"})
+    "elastic_restore", "replica_dedup", "chunked_packs", "pipelined_io",
+    "dirty_tracking"})
+
+
+class DirtyTrackingMixin:
+    """Concurrent-capture (soft-freeze) protocol shared by backends that
+    advertise the "dirty_tracking" feature.
+
+    Four pieces: a flat keyed view of the live roots (``flatten_keys``),
+    single-leaf capture (``capture_entry``), wiring a
+    :class:`repro.core.dirty.DirtyTracker` to stream retirements
+    (``begin_tracking``/``end_tracking``), and the explicit CRAC-style
+    capture boundary (``attach_streams``/``drain_streams`` — every
+    capture pause drains the injectable fake streams and fails fast with
+    :class:`repro.core.streams.UnsafeOpInFlight` if an op cannot be
+    quiesced, instead of snapshotting torn state).
+    """
+
+    streams = None            # Optional[repro.core.streams.StreamSet]
+    _tracker = None
+
+    def attach_streams(self, streams) -> None:
+        """Install the injectable fake-stream plane (tests, sims, the
+        host backend's async-dispatch model)."""
+        self.streams = streams
+
+    def drain_streams(self) -> None:
+        """Quiesce the capture boundary; raises UnsafeOpInFlight on a
+        stuck op.  Called under the device lock at every pause."""
+        if self.streams is None:
+            return
+        from repro.core.streams import UnsafeOpInFlight
+        stuck = self.streams.drain()
+        if stuck:
+            raise UnsafeOpInFlight(stuck)
+
+    def flatten_keys(self, roots: Dict[str, Any]) -> Dict[str, Any]:
+        """roots -> {"state::path": leaf} in capture order."""
+        from repro.core.device_plugin import flatten_with_paths
+        out: Dict[str, Any] = {}
+        for name, tree in roots.items():
+            for key, leaf in flatten_with_paths(tree).items():
+                out[f"{name}::{key}"] = leaf
+        return out
+
+    def capture_entry(self, leaf: Any) -> Dict[str, Any]:
+        """Capture one leaf into a snapshot entry dict.  Overridden by
+        the jax backend to capture device arrays shard-by-shard."""
+        import numpy as np
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return {"kind": "np", "data": np.asarray(leaf)}
+        return {"kind": "host", "value": leaf}
+
+    def begin_tracking(self, tracker) -> None:
+        """Route stream retirements into the dirty set for the duration
+        of a concurrent capture."""
+        self._tracker = tracker
+        if self.streams is not None:
+            self.streams.on_retire = (
+                lambda op: tracker.note_many(op.targets))
+
+    def end_tracking(self) -> None:
+        self._tracker = None
+        if self.streams is not None:
+            self.streams.on_retire = None
 
 
 @runtime_checkable
@@ -128,7 +192,7 @@ def available_backends() -> Dict[str, Dict[str, Any]]:
 
 
 # ---------------------------------------------------------------- host
-class HostNumpyBackend(Plugin):
+class HostNumpyBackend(DirtyTrackingMixin, Plugin):
     """Device backend that never touches an accelerator.
 
     Capture converts every array leaf to host numpy (one logical shard);
@@ -140,7 +204,8 @@ class HostNumpyBackend(Plugin):
     name = "host"
     api_version = PLUGIN_API_VERSION
     features = frozenset({"host_arrays", "dry_run_restore",
-                          "chunked_packs", "pipelined_io"})
+                          "chunked_packs", "pipelined_io",
+                          "dirty_tracking"})
 
     def __init__(self, lock_timeout_s: float = 10.0,
                  restore_threads: int = 0):
@@ -149,10 +214,12 @@ class HostNumpyBackend(Plugin):
         from repro.core.lock import DeviceLock
         self.lock = DeviceLock(lock_timeout_s)
         self.restore_threads = restore_threads
+        self.streams = None
 
     # --- dump ---
     def pause_devices(self, ctx: HookContext) -> None:
         ctx.stats["lock_s"] = self.lock.lock([])
+        self.drain_streams()       # CRAC boundary: may raise UnsafeOp
 
     def checkpoint_devices(self, ctx: HookContext) -> None:
         import numpy as np

@@ -22,7 +22,7 @@ from typing import Any, Dict, Tuple
 import jax
 import numpy as np
 
-from repro.core.backends import JAX_BACKEND_FEATURES
+from repro.core.backends import DirtyTrackingMixin, JAX_BACKEND_FEATURES
 from repro.core.lock import DeviceLock
 from repro.core.plugins import HookContext, Plugin
 from repro.core.topology import (resolve_sharding, sharding_descriptor)
@@ -172,7 +172,7 @@ def restore_array(entry: Dict[str, Any], target_mesh=None,
 
 
 # ---------------------------------------------------------------- plugin
-class DevicePlugin(Plugin):
+class DevicePlugin(DirtyTrackingMixin, Plugin):
     """The "jax" device backend (see ``repro.core.backends``)."""
 
     name = "device"
@@ -183,6 +183,17 @@ class DevicePlugin(Plugin):
                  restore_threads: int = 0):
         self.lock = DeviceLock(lock_timeout_s)
         self.restore_threads = restore_threads
+        self.streams = None
+
+    def capture_entry(self, leaf) -> Dict[str, Any]:
+        """Single-leaf capture for the concurrent speculation loop.
+        Raises if the leaf was donated away (deleted) — the engine notes
+        it dirty and re-captures the live value at the validate pause."""
+        if isinstance(leaf, jax.Array):
+            return capture_array(leaf)
+        if isinstance(leaf, np.ndarray):
+            return {"kind": "np", "data": leaf}
+        return {"kind": "host", "value": leaf}
 
     # --- dump ---
     def pause_devices(self, ctx: HookContext) -> None:
@@ -191,6 +202,7 @@ class DevicePlugin(Plugin):
                   if isinstance(l, jax.Array)]
         t = self.lock.lock(arrays)
         ctx.stats["lock_s"] = t
+        self.drain_streams()       # CRAC boundary: may raise UnsafeOp
         # leftover-reference detection (NVML analogue, paper §4.4)
         root_ids = {id(a) for a in arrays}
         leftover = 0

@@ -1,0 +1,89 @@
+"""Dirty-set protocol for concurrent (soft-freeze) capture.
+
+The pin pause records, per entry key ("state::path"), a strong reference
+to the live leaf plus its identity.  While the engine speculates shards
+to disk the step loop keeps mutating state; at the validate pause the
+tracker answers one question: *which entries might differ from what was
+speculated?*  Three signals feed the answer:
+
+  * identity drift — the leaf object at a pinned path changed identity
+    (functional updates, donation: jax rebinds arrays rather than
+    mutating them);
+  * explicit notes — stream retirements and chaos faults call
+    :meth:`note` for entries they mutated in place (np.ndarrays mutate
+    without identity change);
+  * structural drift — a pinned path disappeared from the live tree
+    (deleted/renamed entries can never validate).
+
+The dirty set is deliberately an over-approximation: a dirty entry is
+merely *re-hashed* against the speculated chunk CRCs, and only actual
+mismatches are re-captured.  Missing a mutation, by contrast, would
+commit torn state — so every "maybe" lands in the set.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Set
+
+
+class DirtyTracker:
+    """Tracks which pinned entries may have been mutated mid-capture."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pinned: Dict[str, object] = {}      # key -> leaf (strong ref)
+        self._identities: Dict[str, int] = {}     # key -> id(leaf) at pin
+        self._noted: Set[str] = set()
+        self._active = False
+
+    # -------------------------------------------------------------- pin
+    def pin(self, leaves: Dict[str, object]) -> None:
+        """Record the capture-time tree: key -> live leaf.  Strong refs
+        keep donated-away buffers alive until speculation reads them."""
+        with self._lock:
+            self._pinned = dict(leaves)
+            self._identities = {k: id(v) for k, v in leaves.items()}
+            self._noted = set()
+            self._active = True
+
+    @property
+    def active(self) -> bool:
+        return self._active
+
+    def pinned(self) -> Dict[str, object]:
+        with self._lock:
+            return dict(self._pinned)
+
+    # ------------------------------------------------------------- notes
+    def note(self, key: str) -> None:
+        """An entry was mutated in place (stream retirement, chaos)."""
+        with self._lock:
+            if self._active:
+                self._noted.add(key)
+
+    def note_many(self, keys) -> None:
+        with self._lock:
+            if self._active:
+                self._noted.update(keys)
+
+    # ---------------------------------------------------------- validate
+    def dirty_keys(self, live_leaves: Dict[str, object]) -> Set[str]:
+        """Pinned entries that may differ from the speculated bytes:
+        noted in-place mutations, identity drift, and deletions."""
+        with self._lock:
+            dirty = set(self._noted)
+            for key, ident in self._identities.items():
+                live = live_leaves.get(key, _MISSING)
+                if live is _MISSING or id(live) != ident:
+                    dirty.add(key)
+            return dirty
+
+    def reset(self) -> None:
+        with self._lock:
+            self._pinned = {}
+            self._identities = {}
+            self._noted = set()
+            self._active = False
+
+
+_MISSING = object()

@@ -40,11 +40,13 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 
 from repro.chaos import hooks as chaos_hooks
+from repro.core.dirty import DirtyTracker
 from repro.core.lock import LockTimeout
 from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
                                 PluginRegistry)
 from repro.core.snapshot_io import (SnapshotStore, SnapshotWriter,
                                     pack_host_blob)
+from repro.core.streams import UnsafeOpInFlight
 from repro.core.topology import mesh_fingerprint
 
 PyTree = Any
@@ -55,6 +57,22 @@ _UNSET = object()          # sentinel: legacy kwarg not explicitly passed
 
 class CheckpointAborted(RuntimeError):
     pass
+
+
+class PendingWriteStalled(TimeoutError):
+    """wait_pending(timeout_s=...) found the background writer still
+    running past the deadline.  The thread is left joinable: call
+    wait_pending() again (with or without a timeout) once the I/O
+    recovers, or inspect ``engine.write_error`` after it dies."""
+
+    def __init__(self, step, waited_s: float):
+        self.step = step
+        self.waited_s = waited_s
+        super().__init__(
+            f"async snapshot write for step {step} still running after "
+            f"{waited_s:.1f}s — the writer thread may be wedged on "
+            f"degraded I/O; it remains joinable (retry wait_pending() "
+            f"or check write_error)")
 
 
 class SnapshotEngine:
@@ -120,6 +138,16 @@ class SnapshotEngine:
                 from repro.core.replication import DirReplicator
                 self.replicator = DirReplicator(self.options.replicate_to)
         self.mesh = mesh
+        if self.options.capture == "concurrent":
+            from repro.api.options import OptionsError
+            feats = getattr(self.device_plugin, "features", frozenset())
+            if "dirty_tracking" not in feats:
+                raise OptionsError(
+                    f"capture='concurrent' needs a backend with the "
+                    f"'dirty_tracking' feature; backend "
+                    f"{getattr(self.device_plugin, 'backend_name', self.device_plugin.name)!r} "
+                    f"offers {sorted(feats)} (sync-only capture)")
+        self._concurrent: Optional["ConcurrentCapture"] = None
         self._provider: Optional[StateProvider] = None
         self._pending: Optional[threading.Thread] = None
         self._pending_ctx: Optional[HookContext] = None
@@ -164,7 +192,17 @@ class SnapshotEngine:
 
     # ------------------------------------------------------------ dump
     def checkpoint(self, step: int) -> str:
-        """Create a unified snapshot.  Returns the snapshot directory."""
+        """Create a unified snapshot.  Returns the snapshot directory.
+
+        With ``options.capture == "concurrent"`` this still blocks until
+        the image commits, but runs the soft-freeze protocol (pin →
+        speculate → validate → patch → commit); callers that want the
+        overlap use :meth:`begin_concurrent` and step between ``begin``
+        and ``finalize``."""
+        if self.options.capture == "concurrent":
+            handle = self.begin_concurrent(step)
+            handle.wait_speculated()
+            return handle.finalize()
         return self.commit_dump(self.freeze(step))
 
     def freeze(self, step: int) -> HookContext:
@@ -177,6 +215,10 @@ class SnapshotEngine:
         """
         if self._provider is None:
             raise RuntimeError("no state provider attached")
+        if self._concurrent is not None:
+            # settle any in-flight soft-freeze capture first: a second
+            # dump must never interleave with an open stripe set
+            self._concurrent.finalize()
         self.wait_pending()
         if self._lazy is not None:
             # a dump must never freeze a half-restored job: join the
@@ -196,6 +238,12 @@ class SnapshotEngine:
             ctx.stats["frozen_s"] = time.perf_counter() - t_frozen
         except LockTimeout as e:
             # abort-to-running: nothing was mutated; plugins may roll back
+            self.registry.exit_all("dump", False)
+            raise CheckpointAborted(str(e)) from e
+        except UnsafeOpInFlight as e:
+            # abort-to-running: async work could not be quiesced at the
+            # capture boundary — resume rather than snapshot torn state
+            self.device_plugin.lock.unlock()
             self.registry.exit_all("dump", False)
             raise CheckpointAborted(str(e)) from e
         except Exception:
@@ -258,8 +306,80 @@ class SnapshotEngine:
         from repro.core.snapshot_io import snapshot_dir
         return snapshot_dir(self.run_dir, step)
 
-    def _write(self, ctx: HookContext) -> str:
-        t0 = time.perf_counter()
+    # ----------------------------------------------- concurrent capture
+    def begin_concurrent(self, step: int) -> "ConcurrentCapture":
+        """Start a soft-freeze capture (PhoenixOS-style validated
+        speculation).
+
+        Pin pause: quiesce the capture boundary (device lock + stream
+        drain), pin the state tree (strong refs + identities) and start
+        dirty tracking, then *resume the job*.  A background thread
+        speculatively captures the pinned shards into an open stripe set
+        while the step loop keeps running.  ``handle.finalize()`` takes
+        the short validate pause: drain again, re-hash dirtied entries
+        against the speculated per-chunk content hashes, re-capture only
+        the invalidated ones, and commit — the committed image is the
+        state at the *validate* pause, bit-exact vs a sync dump taken
+        there.  Raises :class:`CheckpointAborted` (job keeps running, no
+        image) on lock timeout or an unsafe op in flight.
+        """
+        if self._provider is None:
+            raise RuntimeError("no state provider attached")
+        if self.options.capture != "concurrent":
+            from repro.api.options import OptionsError
+            raise OptionsError(
+                "begin_concurrent() requires "
+                "CheckpointOptions(capture='concurrent'); "
+                f"these options say capture={self.options.capture!r}")
+        if self._concurrent is not None:
+            self._concurrent.finalize()          # settle the previous one
+        self.wait_pending()
+        if self._lazy is not None:
+            self.restore_barrier()
+
+        ctx = HookContext("dump", step)
+        ctx.roots = self._provider()
+        self.registry.init_all("dump")
+        ctx.stats["t_begin"] = time.perf_counter()
+        try:
+            self.registry.run(Hook.PAUSE_DEVICES, ctx)     # pin pause
+        except LockTimeout as e:
+            self.registry.exit_all("dump", False)
+            raise CheckpointAborted(str(e)) from e
+        except UnsafeOpInFlight as e:
+            self.device_plugin.lock.unlock()
+            self.registry.exit_all("dump", False)
+            raise CheckpointAborted(str(e)) from e
+        except Exception:
+            self.device_plugin.lock.unlock()
+            self.registry.exit_all("dump", False)
+            raise
+        try:
+            tracker = DirtyTracker()
+            pinned = self.device_plugin.flatten_keys(ctx.roots)
+            tracker.pin(pinned)
+            self.device_plugin.begin_tracking(tracker)
+            writer = self._make_writer(step)
+        except Exception:
+            self.device_plugin.end_tracking()
+            self.device_plugin.lock.unlock()
+            self.registry.exit_all("dump", False)
+            raise
+        handle = ConcurrentCapture(self, ctx, writer, pinned, tracker)
+        self.device_plugin.lock.unlock()                   # job resumes
+        ctx.stats["pin_pause_s"] = (time.perf_counter()
+                                    - ctx.stats["t_begin"])
+        ctx.stats["pin_lock_s"] = ctx.stats.pop("lock_s", 0.0)
+        self._concurrent = handle
+        handle._start()
+        return handle
+
+    @property
+    def concurrent_capture(self) -> Optional["ConcurrentCapture"]:
+        """The in-flight soft-freeze capture handle, if any."""
+        return self._concurrent
+
+    def _make_writer(self, step: int) -> SnapshotWriter:
         opts = self.options
         prev_manifest = None
         if self.incremental:
@@ -269,17 +389,33 @@ class SnapshotEngine:
             # image it is about to overwrite as its own parent — the
             # locations would point at a pack the commit just replaced
             prev_steps = [s for s in self.store.list_steps()
-                          if s < ctx.step]
+                          if s < step]
             if prev_steps:
                 prev_manifest = self.store.manifest(prev_steps[-1])
-        writer = SnapshotWriter(self.run_dir, ctx.step,
-                                host_id=jax.process_index(),
-                                compress=self.compress,
-                                prev_manifest=prev_manifest,
-                                pack_format=opts.pack_format,
-                                chunk_bytes=opts.chunk_mb << 20,
-                                stripes=opts.stripes,
-                                io_threads=opts.effective_io_threads())
+        return SnapshotWriter(self.run_dir, step,
+                              host_id=jax.process_index(),
+                              compress=self.compress,
+                              prev_manifest=prev_manifest,
+                              pack_format=opts.pack_format,
+                              chunk_bytes=opts.chunk_mb << 20,
+                              stripes=opts.stripes,
+                              io_threads=opts.effective_io_threads())
+
+    def _writer_stats(self, ctx: HookContext, writer: SnapshotWriter) -> None:
+        ctx.stats["written_bytes"] = float(writer.written_bytes)
+        ctx.stats["reused_bytes"] = float(writer.reused_bytes)
+        # pipeline stage timings (thread-time, so compress_s + io_s
+        # can legitimately exceed write_s when stages overlap)
+        ctx.stats["compress_s"] = writer.compress_s
+        ctx.stats["io_s"] = writer.io_s
+        stripe_bytes = writer.stripe_bytes
+        if stripe_bytes and max(stripe_bytes) > 0:
+            ctx.stats["stripe_utilization"] = (
+                min(stripe_bytes) / max(stripe_bytes))
+
+    def _write(self, ctx: HookContext) -> str:
+        t0 = time.perf_counter()
+        writer = self._make_writer(ctx.step)
         try:
             writer.write_states(ctx.device_snapshot)
             writer.write_host_state(ctx.host_state)
@@ -290,25 +426,21 @@ class SnapshotEngine:
                                  stats=ctx.stats,
                                  extra={"warnings": ctx.warnings,
                                         "mode": self.mode,
+                                        "capture": "sync",
                                         "incremental": self.incremental})
             # commit() drains the pipeline and fsyncs; only now are the
             # stage timings and reuse accounting final (so these live in
             # last_stats, not in the manifest's embedded stats)
             ctx.stats["write_s"] = time.perf_counter() - t0
             ctx.stats["serialize_s"] = t_serialize
-            ctx.stats["written_bytes"] = float(writer.written_bytes)
-            ctx.stats["reused_bytes"] = float(writer.reused_bytes)
-            # pipeline stage timings (thread-time, so compress_s + io_s
-            # can legitimately exceed write_s when stages overlap)
-            ctx.stats["compress_s"] = writer.compress_s
-            ctx.stats["io_s"] = writer.io_s
-            stripe_bytes = writer.stripe_bytes
-            if stripe_bytes and max(stripe_bytes) > 0:
-                ctx.stats["stripe_utilization"] = (
-                    min(stripe_bytes) / max(stripe_bytes))
+            self._writer_stats(ctx, writer)
         except Exception:
             writer.abort()
             raise
+        self._after_commit(ctx, path)
+        return path
+
+    def _after_commit(self, ctx: HookContext, path: str) -> str:
         if self.replicator is not None:
             t_rep = time.perf_counter()
             self.replicator.push(self.run_dir, ctx.step)
@@ -329,9 +461,21 @@ class SnapshotEngine:
             self.store.gc(self.keep)
         return path
 
-    def wait_pending(self) -> None:
+    def wait_pending(self, timeout_s: Optional[float] = None) -> None:
+        """Join the async background writer.
+
+        ``timeout_s=None`` blocks until it finishes (historical
+        behaviour).  With a timeout, a writer still running past the
+        deadline raises :class:`PendingWriteStalled` instead of hanging
+        forever (chaos ``degraded_io`` can wedge a writer indefinitely);
+        the thread stays joinable so a later call can still reap it."""
         if self._pending is not None:
-            self._pending.join()
+            t0 = time.perf_counter()
+            self._pending.join(timeout_s)
+            if self._pending.is_alive():
+                step = (self._pending_ctx.step
+                        if self._pending_ctx is not None else None)
+                raise PendingWriteStalled(step, time.perf_counter() - t0)
             self._pending = None
             ctx, self._pending_ctx = self._pending_ctx, None
             if ctx is not None and not self._pending_err:
@@ -622,3 +766,228 @@ class SnapshotEngine:
 
     def latest_step(self) -> Optional[int]:
         return self.store.latest_step()
+
+
+class ConcurrentCapture:
+    """Handle for one in-flight soft-freeze capture.
+
+    Lifecycle: ``engine.begin_concurrent(step)`` returns this with the
+    speculation thread running and the job resumed; the caller steps
+    freely (polling :attr:`speculation_done`), then calls
+    :meth:`finalize` for the validate/patch pause and the atomic commit,
+    or :meth:`abort` to discard everything.  The committed image is
+    bit-exact with the live state at the validate pause — speculation
+    that survived validation was, by the content hashes, already
+    identical to it.
+    """
+
+    def __init__(self, engine: SnapshotEngine, ctx: HookContext,
+                 writer: SnapshotWriter, pinned: Dict[str, Any],
+                 tracker: DirtyTracker):
+        self._engine = engine
+        self.ctx = ctx
+        self._writer = writer
+        self._pinned = pinned
+        self._tracker = tracker
+        self._stop = threading.Event()
+        self._spec_done = threading.Event()
+        self._spec_err: Optional[BaseException] = None
+        self._speculated: set = set()
+        self._done = False
+        self._thread = threading.Thread(target=self._speculate,
+                                        daemon=True)
+
+    def _start(self) -> None:
+        self._thread.start()
+
+    # ------------------------------------------------------------- state
+    @property
+    def step(self) -> int:
+        return self.ctx.step
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.ctx.stats
+
+    @property
+    def speculation_done(self) -> bool:
+        """True once the background pass over the pinned tree finished
+        (finalize() after this point pays the smallest pause)."""
+        return self._spec_done.is_set()
+
+    def wait_speculated(self, timeout: Optional[float] = None) -> bool:
+        return self._spec_done.wait(timeout)
+
+    # -------------------------------------------------------- speculation
+    def _speculate(self) -> None:
+        backend = self._engine.device_plugin
+        t0 = time.perf_counter()
+        try:
+            for key, leaf in self._pinned.items():
+                if self._stop.is_set():
+                    break
+                if chaos_hooks.INJECTOR is not None:
+                    # chaos: mutation-storm site — a handler may mutate
+                    # the live leaf mid-speculation (it must call note())
+                    chaos_hooks.fire("engine.speculate", key=key,
+                                     leaf=leaf, note=self._tracker.note,
+                                     step=self.ctx.step,
+                                     run_dir=self._engine.run_dir)
+                state, path = key.split("::", 1)
+                try:
+                    entry = backend.capture_entry(leaf)
+                except Exception:
+                    # donated away / deleted under us: the live value is
+                    # captured at the validate pause instead
+                    self._tracker.note(key)
+                    continue
+                self._writer.put_state_entry(state, path, entry)
+                self._speculated.add(key)
+            if not self._stop.is_set():
+                # drain the pack pipeline while the job still runs: once
+                # speculation_done is set, finalize()'s own flush is a
+                # no-op and the validate pause shrinks to hash + commit
+                self._writer.flush()
+        except BaseException as e:
+            self._spec_err = e
+        finally:
+            self.ctx.stats["speculate_s"] = time.perf_counter() - t0
+            self.ctx.stats["speculated_entries"] = len(self._speculated)
+            self._spec_done.set()
+
+    # ----------------------------------------------------------- finalize
+    def finalize(self) -> str:
+        """Validate pause: quiesce, re-hash dirtied entries against the
+        speculated chunk hashes, re-capture only actual mismatches, dump
+        host state, commit atomically, resume.  Returns the snapshot
+        directory.  Raises CheckpointAborted (no image, job running) on
+        lock timeout / unsafe op in flight."""
+        if self._done:
+            raise RuntimeError("concurrent capture already finalized")
+        eng = self._engine
+        ctx = self.ctx
+        backend = eng.device_plugin
+        t_val = time.perf_counter()
+        try:
+            ctx.roots = eng._provider()
+            eng.registry.run(Hook.PAUSE_DEVICES, ctx)   # validate pause
+        except LockTimeout as e:
+            self._cleanup(unlock=False)
+            raise CheckpointAborted(str(e)) from e
+        except UnsafeOpInFlight as e:
+            self._cleanup(unlock=True)
+            raise CheckpointAborted(str(e)) from e
+        except Exception:
+            self._cleanup(unlock=True)
+            raise
+        try:
+            self._stop.set()
+            self._thread.join()
+            if self._spec_err is not None:
+                raise self._spec_err
+            self._writer.flush()        # speculated chunk records final
+            # the post-lock tree is the commit point
+            ctx.roots = eng._provider()
+            live = backend.flatten_keys(ctx.roots)
+            if chaos_hooks.INJECTOR is not None:
+                # chaos: validate site — burst handlers restore their
+                # mutations here so the job's own trajectory is intact
+                chaos_hooks.fire("engine.validate", step=ctx.step,
+                                 run_dir=eng.run_dir)
+            dirty = self._tracker.dirty_keys(live)
+            recaptured = recaptured_bytes = 0
+            for key, leaf in live.items():
+                state, path = key.split("::", 1)
+                is_array = (hasattr(leaf, "shape")
+                            and hasattr(leaf, "dtype"))
+                if (key in dirty or key not in self._speculated
+                        or not is_array):
+                    nb = self._writer.reput_state_entry(
+                        state, path, backend.capture_entry(leaf))
+                    if nb:
+                        recaptured += 1
+                        recaptured_bytes += nb
+            for key in self._pinned:
+                if key not in live:      # structural drift: entry gone
+                    state, path = key.split("::", 1)
+                    self._writer.drop_state_entry(state, path)
+            eng.registry.run(Hook.DUMP_EXT_STATE, ctx)
+            self._writer.write_host_state(ctx.host_state)
+            ctx.stats["host_bytes"] = float(
+                len(pack_host_blob(ctx.host_state)))
+            ctx.stats["dirty_entries"] = len(dirty)
+            ctx.stats["recaptured_entries"] = recaptured
+            ctx.stats["recaptured_bytes"] = float(recaptured_bytes)
+            ctx.stats["superseded_bytes"] = float(
+                self._writer.superseded_bytes)
+            ctx.stats["validate_pause_s"] = time.perf_counter() - t_val
+            ctx.stats["frozen_s"] = (ctx.stats["pin_pause_s"]
+                                     + ctx.stats["validate_pause_s"])
+            path = self._writer.commit(
+                topology=mesh_fingerprint(eng.mesh), stats=ctx.stats,
+                extra={"warnings": ctx.warnings,
+                       "mode": eng.mode,
+                       "incremental": eng.incremental,
+                       "capture": "concurrent",
+                       "capture_stats": {
+                           k: ctx.stats[k] for k in (
+                               "pin_pause_s", "validate_pause_s",
+                               "frozen_s", "speculate_s",
+                               "speculated_entries", "dirty_entries",
+                               "recaptured_entries", "recaptured_bytes",
+                               "superseded_bytes")
+                           if k in ctx.stats}})
+            self._writer_post_commit_stats(ctx)
+        except Exception:
+            self._cleanup(unlock=True)
+            raise
+        # the fsync/rename is part of the pause the caller observed
+        ctx.stats["validate_pause_s"] = time.perf_counter() - t_val
+        ctx.stats["frozen_s"] = (ctx.stats["pin_pause_s"]
+                                 + ctx.stats["validate_pause_s"])
+        ctx.stats["locked_total_s"] = ctx.stats["frozen_s"]
+        eng.device_plugin.lock.unlock()                    # resume
+        backend.end_tracking()
+        self._tracker.reset()
+        eng.registry.exit_all("dump", True)
+        t_begin = ctx.stats.pop("t_begin", t_val)
+        ctx.stats["total_s"] = time.perf_counter() - t_begin
+        eng._concurrent = None
+        self._done = True
+        eng._after_commit(ctx, path)
+        eng.last_stats = dict(ctx.stats)
+        eng._write_error = None
+        eng.last_commit_step = ctx.step
+        return path
+
+    def _writer_post_commit_stats(self, ctx: HookContext) -> None:
+        eng = self._engine
+        ctx.stats["write_s"] = ctx.stats.get("speculate_s", 0.0)
+        eng._writer_stats(ctx, self._writer)
+
+    # -------------------------------------------------------------- abort
+    def abort(self) -> None:
+        """Discard the capture: stop speculation, delete the open stripe
+        set, resume tracking-free.  The job never observes it."""
+        if self._done:
+            return
+        self._cleanup(unlock=False)
+
+    def _cleanup(self, unlock: bool) -> None:
+        eng = self._engine
+        self._stop.set()
+        self._thread.join(timeout=30.0)
+        try:
+            self._writer.abort()
+        except Exception:
+            pass
+        eng.device_plugin.end_tracking()
+        self._tracker.reset()
+        if unlock:
+            try:
+                eng.device_plugin.lock.unlock()
+            except Exception:
+                pass
+        eng.registry.exit_all("dump", False)
+        eng._concurrent = None
+        self._done = True

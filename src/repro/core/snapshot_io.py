@@ -83,6 +83,9 @@ def _loc_step(loc: str) -> int:
 
 
 # ---------------------------------------------------------------- writer
+_NEVER_SPECULATED = object()
+
+
 class SnapshotWriter:
     def __init__(self, run_dir: str, step: int, host_id: int = 0,
                  compress: bool = False,
@@ -132,6 +135,10 @@ class SnapshotWriter:
         # auditable offline (`repro inspect`)
         self.restore_order: List[str] = []
         self.entry_bytes: Dict[str, int] = {}
+        # per-entry chunk CRCs as speculated/written — the concurrent
+        # validate pass compares live bytes against these (None marks a
+        # v1-parent reuse where only the whole-entry CRC is known)
+        self.spec_crcs: Dict[str, Optional[List[int]]] = {}
 
     # --------------------------------------------------- chunk-level dedup
     def _parent_entry(self, name: str):
@@ -194,6 +201,7 @@ class SnapshotWriter:
                 self.entry_crcs[name] = parent[0]["crc32"]
                 self.locations[name] = prev["loc"]      # delta: entry reuse
                 self.reused_bytes += raw.nbytes
+                self.spec_crcs[name] = crcs
                 return
             self._writer.add(name, raw, parent=parent, raw_bytes=rawb,
                              chunk_crcs=crcs)
@@ -205,11 +213,13 @@ class SnapshotWriter:
                 self.entry_crcs[name] = c
                 self.locations[name] = prev["loc"]
                 self.reused_bytes += raw.nbytes
+                self.spec_crcs[name] = None
                 return
             self._writer.add(name, raw, raw_bytes=rawb)
         else:
             self._writer.add(name, raw, raw_bytes=rawb)
         self._record_written(name, raw)
+        self.spec_crcs[name] = self._writer.raw_crcs(name)
 
     def _record_written(self, name: str, raw: np.ndarray,
                         crc: Optional[int] = None) -> None:
@@ -221,25 +231,131 @@ class SnapshotWriter:
             f"step_{self.step:08d}", self.pack_name)
         self.written_bytes += raw.nbytes
 
+    def put_state_entry(self, state: str, path: str,
+                        e: Dict[str, Any]) -> None:
+        """Write one captured leaf.  The concurrent speculation loop
+        streams entries one at a time as it captures them; write_states
+        is the batch form."""
+        meta = self.meta.setdefault(state, {})
+        if e["kind"] == "device_array":
+            meta[path] = {
+                "kind": "device_array", "shape": e["shape"],
+                "dtype": e["dtype"], "sharding": e["sharding"],
+                "shards": [s["index"] for s in e["shards"]],
+            }
+            for i, s in enumerate(e["shards"]):
+                self._put(f"{state}::{path}::s{i}", s["data"])
+        elif e["kind"] == "np":
+            meta[path] = {"kind": "np"}
+            self._put(f"{state}::{path}::np", e["data"])
+        else:
+            meta[path] = {"kind": "host", "value": e["value"]}
+
     def write_states(self, device_snapshot: Dict[str, Dict[str, Any]]) -> None:
         """device_snapshot: state_name -> {leafpath -> captured entry}."""
         for state, entries in device_snapshot.items():
-            meta: Dict[str, Any] = {}
+            self.meta.setdefault(state, {})
             for path, e in entries.items():
-                if e["kind"] == "device_array":
-                    meta[path] = {
-                        "kind": "device_array", "shape": e["shape"],
-                        "dtype": e["dtype"], "sharding": e["sharding"],
-                        "shards": [s["index"] for s in e["shards"]],
-                    }
-                    for i, s in enumerate(e["shards"]):
-                        self._put(f"{state}::{path}::s{i}", s["data"])
-                elif e["kind"] == "np":
-                    meta[path] = {"kind": "np"}
-                    self._put(f"{state}::{path}::np", e["data"])
-                else:
-                    meta[path] = {"kind": "host", "value": e["value"]}
-            self.meta[state] = meta
+                self.put_state_entry(state, path, e)
+
+    def flush(self) -> None:
+        """Drain the pack pipeline without closing it: every speculated
+        chunk record is populated, the stripe set stays open for
+        re-capture (concurrent capture's validate/patch boundary)."""
+        fl = getattr(self._writer, "flush", None)
+        if fl is not None:
+            fl()
+
+    def _entry_names(self, state: str, path: str,
+                     e: Dict[str, Any]) -> List[str]:
+        if e["kind"] == "device_array":
+            return [f"{state}::{path}::s{i}"
+                    for i in range(len(e["shards"]))]
+        if e["kind"] == "np":
+            return [f"{state}::{path}::np"]
+        return []
+
+    def reput_state_entry(self, state: str, path: str,
+                          e: Dict[str, Any]) -> int:
+        """Validate one dirtied leaf against the speculated image and
+        patch only the pieces whose content hash actually changed (the
+        patch phase of concurrent capture).  Returns the number of raw
+        bytes re-captured (0 = the speculation validated bit-exact).
+
+        Call flush() first so speculated chunk records are populated.
+        """
+        from repro.serialization.integrity import crc32
+        if e["kind"] == "host":
+            # host leaves are tiny python values: always refresh
+            self.meta.setdefault(state, {})[path] = {
+                "kind": "host", "value": e["value"]}
+            return 0
+        assert self.format == 2, "reput requires a v2 pack"
+        recaptured = 0
+        own_loc = os.path.join(f"step_{self.step:08d}", self.pack_name)
+        datas = ([s["data"] for s in e["shards"]]
+                 if e["kind"] == "device_array" else [e["data"]])
+        names = self._entry_names(state, path, e)
+        for name, data in zip(names, datas):
+            raw = np.asarray(data, order="C")
+            rawb = raw.tobytes()
+            C = self.chunk_bytes
+            mv = memoryview(rawb)
+            crcs = [crc32(mv[o:o + C]) for o in range(0, len(rawb), C)]
+            spec = self.spec_crcs.get(name, _NEVER_SPECULATED)
+            if (spec is not _NEVER_SPECULATED and spec is not None
+                    and crcs == spec
+                    and self.entry_bytes.get(name) == raw.nbytes):
+                continue                     # speculation validated
+            if spec is None and crc32(rawb) == self.entry_crcs.get(name):
+                continue                     # v1-parent reuse still valid
+            if spec is _NEVER_SPECULATED:
+                # structural drift: a leaf that did not exist at pin
+                self._put(name, raw)
+                recaptured += raw.nbytes
+            elif not self.locations.get(name, "").startswith(
+                    f"step_{self.step:08d}"):
+                # was reused from the parent image: pull it into this
+                # pack now (the parent copy no longer matches)
+                self.reused_bytes -= self.entry_bytes.get(name, raw.nbytes)
+                parent = self._parent_entry(name)
+                self._writer.add(name, raw, parent=parent, raw_bytes=rawb,
+                                 chunk_crcs=crcs)
+                self._record_written(name, raw)
+                self.spec_crcs[name] = crcs
+                recaptured += raw.nbytes
+            else:
+                # was speculated into this pack: append-only patch, with
+                # the old record as dedup parent so untouched chunks
+                # stay as self-references
+                self._writer.replace(name, raw, own_loc=own_loc,
+                                     raw_bytes=rawb, chunk_crcs=crcs)
+                self.entry_crcs[name] = self._writer.entry_crc(name)
+                self.spec_crcs[name] = crcs
+                recaptured += raw.nbytes
+            self.entry_bytes[name] = int(raw.nbytes)
+        # refresh shape/sharding metadata alongside the patched bytes
+        meta = self.meta.setdefault(state, {})
+        if e["kind"] == "device_array":
+            meta[path] = {
+                "kind": "device_array", "shape": e["shape"],
+                "dtype": e["dtype"], "sharding": e["sharding"],
+                "shards": [s["index"] for s in e["shards"]],
+            }
+        else:
+            meta[path] = {"kind": "np"}
+        return recaptured
+
+    def drop_state_entry(self, state: str, path: str) -> None:
+        """Remove a leaf from the image metadata (concurrent capture:
+        the entry vanished from the live tree between pin and validate).
+        Any speculated bytes stay in the pack as dead data; restore
+        only follows the metadata."""
+        self.meta.get(state, {}).pop(path, None)
+
+    @property
+    def superseded_bytes(self) -> int:
+        return getattr(self._writer, "superseded_bytes", 0)
 
     def write_host_state(self, host_state: Dict[str, Any]) -> None:
         blob = pack_host_blob(host_state)

@@ -235,10 +235,19 @@ class Trainer:
                 raise SnapshotWriteFailed(
                     f"async snapshot write failed at step {self.step}: "
                     f"{self.session.write_error}")
+            handle = self.session.concurrent_capture
+            if handle is not None and handle.speculation_done:
+                # soft-freeze capture finished speculating in the
+                # background: take the short validate pause now, between
+                # steps, instead of letting it collide with a later dump
+                self.session.checkpoint_finalize()
             if preempt is not None and preempt():
                 # a dump captures the live roots: the cold optimizer
                 # slots must have landed before the freeze
                 self._finish_lazy_restore()
+                # an in-flight soft-freeze capture must settle before the
+                # signal dump (its validate pause re-reads the live roots)
+                self.session.checkpoint_finalize()
                 if (self.session.last_commit_step == self.step
                         and self.session.latest_step() == self.step):
                     # THIS incarnation committed an image of this exact
@@ -277,7 +286,16 @@ class Trainer:
                 self.jit_ckpt.on_signal(self.step)     # just-in-time ckpt
             if (self.tcfg.ckpt_every
                     and self.step % self.tcfg.ckpt_every == 0):
-                self.session.checkpoint(self.step)
+                if self.session.options.capture == "concurrent":
+                    # soft-freeze: brief pin pause, then the loop keeps
+                    # stepping while shards are speculated in background;
+                    # the handle is finalized by the poll above (or the
+                    # settle below if the run ends first)
+                    self.session.checkpoint_begin(self.step)
+                else:
+                    self.session.checkpoint(self.step)
+        # never leave a capture half-done across run_until boundaries
+        self.session.checkpoint_finalize()
         return {"steps": executed, "step": self.step,
                 "preempted": preempted, "ckpt_path": ckpt_path,
                 "loss": (self.metrics_history["loss"][-1]

@@ -312,6 +312,13 @@ class PackWriterV2:
         self.io_s = 0.0
         self.stripe_bytes = [0] * stripes
         self._stats_lock = threading.Lock()
+        # per-entry raw chunk CRCs, kept out of the records (the footer
+        # serializes _entries verbatim); the concurrent-capture validate
+        # pass re-hashes live bytes against these
+        self._raw_crcs: Dict[str, List[int]] = {}
+        self.superseded_bytes = 0        # dead bytes left by replace()
+        self._outstanding = 0            # chunks still in the pipeline
+        self._flush_cv = threading.Condition()
 
         workers = max(1, workers)
         self._comp_q: "queue.Queue" = queue.Queue(maxsize=workers * 4)
@@ -352,6 +359,7 @@ class PackWriterV2:
                     return
                 rec, j, part, stripe, rcrc = item
                 if self._errors:
+                    self._chunk_done()
                     continue                           # drain without work
                 data, codec = part, "raw"
                 if self._compress:
@@ -376,6 +384,7 @@ class PackWriterV2:
                     return
                 rec, j, data, raw_n, scrc, rcrc, codec = item
                 if self._errors:
+                    self._chunk_done()
                     continue
                 t0 = time.perf_counter()
                 off = f.tell()
@@ -397,8 +406,30 @@ class PackWriterV2:
                     "raw_nbytes": raw_n, "crc32": scrc, "raw_crc32": rcrc,
                     "codec": codec,
                 }
+                self._chunk_done()
         except BaseException as e:                     # pragma: no cover
             self._errors.append(e)
+
+    def _chunk_done(self) -> None:
+        with self._flush_cv:
+            self._outstanding -= 1
+            self._flush_cv.notify_all()
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Block until every enqueued chunk has landed in its stripe file
+        (records fully populated) without closing the pack — the
+        concurrent-capture validate pass needs the speculated chunk
+        metadata while the stripe set stays open for re-capture."""
+        deadline = (time.perf_counter() + timeout) if timeout else None
+        with self._flush_cv:
+            while self._outstanding > 0 and not self._errors:
+                if deadline is not None and time.perf_counter() > deadline:
+                    raise TimeoutError(
+                        f"{self.base}: flush timed out with "
+                        f"{self._outstanding} chunk(s) still in flight")
+                self._flush_cv.wait(timeout=0.1)
+        if self._errors:
+            raise self._errors[0]
 
     # ---------------------------------------------------------------- add
     def _add_blob(self, name: str, raw, dtype: Optional[str],
@@ -422,9 +453,11 @@ class PackWriterV2:
         # only offered when the parent is v2 with the same chunk size.
         prev_chunks = parent[0]["chunks"] if parent else []
         running = 0
+        raw_crcs: List[int] = []
         for j in range(nchunks):
             part = mv[j * C:(j + 1) * C]
             rcrc = chunk_crcs[j] if chunk_crcs else crc32(part)
+            raw_crcs.append(rcrc)
             running = crc32(part, running)
             p = prev_chunks[j] if j < len(prev_chunks) else None
             if (p is not None and p.get("raw_crc32") == rcrc
@@ -437,8 +470,11 @@ class PackWriterV2:
             else:
                 stripe = self._rr
                 self._rr = (self._rr + 1) % self.stripes
+                with self._flush_cv:
+                    self._outstanding += 1
                 self._put(self._comp_q, (rec, j, part, stripe, rcrc))
         rec["crc32"] = running            # == crc32 of the full raw bytes
+        self._raw_crcs[name] = raw_crcs
 
     def add(self, name: str, array: np.ndarray,
             meta: Optional[Dict[str, Any]] = None,
@@ -459,6 +495,58 @@ class PackWriterV2:
 
     def entry_crc(self, name: str) -> int:
         return self._entries[name]["crc32"]
+
+    def raw_crcs(self, name: str) -> List[int]:
+        """Per-chunk raw-byte CRCs of an entry as speculated — the
+        content hashes the validate pass compares live bytes against."""
+        return list(self._raw_crcs[name])
+
+    def replace(self, name: str, array: np.ndarray,
+                meta: Optional[Dict[str, Any]] = None,
+                own_loc: Optional[str] = None,
+                raw_bytes: Optional[bytes] = None,
+                chunk_crcs: Optional[List[int]] = None) -> None:
+        """Re-capture an entry into the open stripe set (concurrent
+        capture's patch phase).  The old record becomes the dedup parent
+        of the new one, so chunks the mutation did not touch stay as
+        references to the bytes already on disk — only invalidated
+        chunks are appended.  ``own_loc`` is this pack's own location
+        string ("step_XXXXXXXX/hostYYYY.pack"): self-references resolve
+        through the reader's normal ref path.  Call ``flush()`` first so
+        the old record's chunk slots are fully populated.
+
+        The superseded chunks stay in the stripe files as dead bytes
+        (tracked in ``superseded_bytes``); an append-only patch beats
+        rewriting stripes during the final pause.
+        """
+        assert not self._closed
+        old = self._entries.get(name)
+        if old is None:
+            raise KeyError(f"replace of unknown entry {name!r}")
+        if any(c is None for c in old["chunks"]):
+            raise RuntimeError(
+                f"replace({name!r}) before flush(): speculated chunks "
+                f"still in flight")
+        arr = np.asarray(array, order="C")
+        rawb = raw_bytes if raw_bytes is not None else arr.tobytes()
+        if chunk_crcs is None:
+            mv = memoryview(rawb)
+            C = self.chunk_bytes
+            chunk_crcs = [crc32(mv[o:o + C])
+                          for o in range(0, len(rawb), C)]
+        # dead bytes = chunks written into this pack whose content no
+        # longer matches (self-referenced unchanged chunks stay live)
+        with self._stats_lock:
+            self.superseded_bytes += sum(
+                c["nbytes"] for j, c in enumerate(old["chunks"])
+                if "ref" not in c
+                and (j >= len(chunk_crcs)
+                     or chunk_crcs[j] != c.get("raw_crc32")
+                     or c["raw_nbytes"] != min(
+                         self.chunk_bytes, len(rawb) - j * self.chunk_bytes)))
+        parent = (old, own_loc) if own_loc else None
+        self._add_blob(name, rawb, dtype_to_str(arr.dtype),
+                       list(arr.shape), meta, parent, chunk_crcs)
 
     # -------------------------------------------------------------- close
     def _post_done(self, q: "queue.Queue") -> None:

@@ -1,0 +1,358 @@
+"""Concurrent (soft-freeze) capture: copy-on-write speculation with
+validated commit.
+
+The contract under test: with ``CheckpointOptions(capture="concurrent")``
+a dump is pinned in a brief pause, speculated in the background while the
+job keeps mutating state, then validated in a second short pause — and
+the committed image is *always* bit-exact with the live state at the
+validate pause, no matter which interleaving of async prefetch, donation
+rebinds, in-place mutations, and cross-host collectives happened in
+between.  When an op cannot be quiesced at a capture boundary the dump
+fails fast with "unsafe op in flight" and no manifest — never torn state.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointOptions, CheckpointSession,
+                       OptionsError, PendingWriteStalled)
+from repro.core.engine import CheckpointAborted
+from repro.core.streams import StreamOp, StreamSet
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _state(n=6, kb=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.standard_normal(kb * 128).astype(np.float32)
+            for i in range(n)}
+
+
+def _opts(**kw):
+    base = dict(pack_format=2, incremental=True, capture="concurrent")
+    base.update(kw)
+    return CheckpointOptions(**base)
+
+
+def _session(run_dir, state, **kw):
+    sess = CheckpointSession(run_dir, _opts(**kw), backend="host")
+    sess.attach(lambda: {"state": state})
+    return sess
+
+
+def _restore(run_dir, step=None):
+    r = CheckpointSession(run_dir, CheckpointOptions(pack_format=2),
+                          backend="host")
+    r.attach(lambda: {"state": None})
+    return r.restore(step=step)["state"]
+
+
+# ---------------------------------------------------------------- options
+def test_capture_option_validated_up_front():
+    with pytest.raises(OptionsError, match="capture"):
+        CheckpointOptions(capture="turbo")
+    with pytest.raises(OptionsError, match="pack_format=2"):
+        CheckpointOptions(capture="concurrent", pack_format=1,
+                          incremental=True)
+    with pytest.raises(OptionsError, match="incremental"):
+        CheckpointOptions(capture="concurrent", pack_format=2,
+                          incremental=False)
+    with pytest.raises(OptionsError, match="async"):
+        CheckpointOptions(capture="concurrent", pack_format=2,
+                          incremental=True, mode="async")
+
+
+def test_capture_option_env_roundtrip(monkeypatch):
+    for k, v in _opts().to_env().items():
+        monkeypatch.setenv(k, v)
+    assert CheckpointOptions.from_env().capture == "concurrent"
+
+
+def test_concurrent_requires_dirty_tracking_backend(run_dir, monkeypatch):
+    from repro.core.backends import HostNumpyBackend
+    monkeypatch.setattr(HostNumpyBackend, "features",
+                        frozenset({"device_state"}), raising=False)
+    with pytest.raises(OptionsError, match="dirty_tracking"):
+        CheckpointSession(run_dir, _opts(), backend="host")
+
+
+# ------------------------------------------------------------- bit-exact
+def test_concurrent_image_bit_exact_vs_sync_dump(tmp_path):
+    state = _state()
+    sync_dir, conc_dir = str(tmp_path / "sync"), str(tmp_path / "conc")
+
+    s = CheckpointSession(sync_dir, CheckpointOptions(
+        pack_format=2, incremental=True), backend="host")
+    s.attach(lambda: {"state": state})
+    s.checkpoint(1)
+
+    c = _session(conc_dir, state)
+    path = c.checkpoint(1)              # begin + speculate + finalize
+    assert path
+
+    ms, mc = s.store.manifest(1), c.store.manifest(1)
+    assert ms["entry_crcs"] == mc["entry_crcs"]
+    assert ms.get("capture") == "sync"
+    assert mc.get("capture") == "concurrent"
+    cs = mc["capture_stats"]
+    assert cs["speculated_entries"] == len(state)
+    assert cs["recaptured_entries"] == 0
+    assert cs["frozen_s"] == pytest.approx(
+        cs["pin_pause_s"] + cs["validate_pause_s"])
+    restored = _restore(conc_dir)
+    for k, v in state.items():
+        np.testing.assert_array_equal(np.asarray(restored[k]), v)
+
+
+def test_frozen_window_is_locked_pause_not_speculation(tmp_path):
+    """frozen_window_s must report pin+validate, not the whole dump."""
+    from repro.runtime.interval import frozen_window_s
+    state = _state(n=8, kb=256)
+    c = _session(str(tmp_path / "c"), state)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    c.checkpoint_finalize()
+    st = c.last_stats
+    assert frozen_window_s(st) == st["locked_total_s"]
+    assert st["locked_total_s"] <= st["total_s"]
+    assert st["speculate_s"] > 0
+
+
+# -------------------------------------------------- interleaving matrix
+def test_prefetch_retired_at_pin_lands_in_image(tmp_path):
+    """A quiescable prefetch in flight when the dump begins is applied
+    (like block_until_ready) before the pin — its write is captured."""
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    streams = StreamSet()
+    c.engine.device_plugin.attach_streams(streams)
+
+    def land_prefetch():
+        state["w0"][:8] = 123.0
+
+    streams.enqueue("h2d", StreamOp("prefetch", targets=("state::w0",),
+                                    apply=land_prefetch))
+    c.checkpoint(1)
+    restored = _restore(str(tmp_path / "c"))
+    assert np.all(np.asarray(restored["w0"])[:8] == 123.0)
+
+
+def test_mutation_during_speculation_is_recaptured(tmp_path):
+    """An op that retires between pin and validate mutates a pinned
+    buffer; the dirty protocol must invalidate the stale speculated
+    shard and the commit must carry the post-mutation bytes."""
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    streams = StreamSet()
+    c.engine.device_plugin.attach_streams(streams)
+
+    handle = c.checkpoint_begin(1)
+    assert c.concurrent_capture is handle
+    handle.wait_speculated()
+    # the step loop races the snapshot: an async dispatch completes and
+    # overwrites w1 after it was (probably) already speculated
+    def dispatch_lands():
+        state["w1"][:] = -7.0
+
+    streams.enqueue("compute", StreamOp("dispatch",
+                                        targets=("state::w1",),
+                                        apply=dispatch_lands))
+    c.checkpoint_finalize()
+    st = c.last_stats
+    assert st["dirty_entries"] >= 1
+    assert st["recaptured_entries"] >= 1
+    restored = _restore(str(tmp_path / "c"))
+    np.testing.assert_array_equal(np.asarray(restored["w1"]),
+                                  np.full_like(state["w1"], -7.0))
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(restored[k]), state[k])
+
+
+def test_donation_rebind_detected_by_identity_drift(tmp_path):
+    """Donated-buffer semantics: the step fn returns a *new* array for
+    the same key (the old one is gone).  No note() fires — identity
+    drift alone must flag the entry."""
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    state["w2"] = np.full_like(state["w2"], 42.0)     # rebind, no note
+    c.checkpoint_finalize()
+    assert c.last_stats["dirty_entries"] >= 1
+    restored = _restore(str(tmp_path / "c"))
+    np.testing.assert_array_equal(np.asarray(restored["w2"]), state["w2"])
+
+
+def test_structural_drift_add_and_drop_entries(tmp_path):
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    state["fresh"] = np.ones(16, np.float32)          # appears mid-capture
+    dropped = state.pop("w3")                         # vanishes mid-capture
+    c.checkpoint_finalize()
+    restored = _restore(str(tmp_path / "c"))
+    assert "w3" not in restored
+    np.testing.assert_array_equal(np.asarray(restored["fresh"]),
+                                  state["fresh"])
+    assert dropped is not None
+
+
+def test_unsafe_collective_at_finalize_aborts_cleanly(tmp_path):
+    """A non-quiescable collective in flight at the validate boundary:
+    fail fast, commit nothing, recover on the next dump."""
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    streams = StreamSet()
+    c.engine.device_plugin.attach_streams(streams)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    streams.enqueue("collective", StreamOp("allreduce",
+                                           quiescable=False))
+    with pytest.raises(CheckpointAborted, match="unsafe op in flight"):
+        c.checkpoint_finalize()
+    assert c.engine.concurrent_capture is None
+    assert c.store.latest_step() is None              # no torn manifest
+    assert streams.clear_stuck() == 1
+    path = c.checkpoint(2)                            # job fully recovered
+    assert path and c.store.latest_step() == 2
+    restored = _restore(str(tmp_path / "c"))
+    for k, v in state.items():
+        np.testing.assert_array_equal(np.asarray(restored[k]), v)
+
+
+def test_unsafe_op_at_pin_aborts_before_any_speculation(tmp_path):
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    streams = StreamSet()
+    c.engine.device_plugin.attach_streams(streams)
+    streams.enqueue("collective", StreamOp("allreduce",
+                                           quiescable=False))
+    with pytest.raises(CheckpointAborted, match="unsafe op in flight"):
+        c.checkpoint_begin(1)
+    assert c.engine.concurrent_capture is None
+    assert c.store.latest_step() is None
+    streams.clear_stuck()
+    assert c.checkpoint(1)
+
+
+def test_mutation_storm_commit_never_torn(tmp_path):
+    """Every entry mutated (in place + rebinds) while the capture is
+    open; the image must equal the live tree at finalize, entry for
+    entry — a mix of stale and fresh shards would be torn state."""
+    state = _state(n=10)
+    c = _session(str(tmp_path / "c"), state)
+    streams = StreamSet()
+    c.engine.device_plugin.attach_streams(streams)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    for i, k in enumerate(list(state)):
+        if i % 2:
+            state[k] = state[k] * np.float32(-1.0)    # donation rebind
+        else:
+            arr = state[k]
+            streams.enqueue("compute", StreamOp(
+                "dispatch", targets=(f"state::{k}",),
+                apply=lambda a=arr, s=i: a.__setitem__(
+                    slice(None), np.float32(s))))
+    c.checkpoint_finalize()
+    assert c.last_stats["recaptured_entries"] == len(state)
+    restored = _restore(str(tmp_path / "c"))
+    for k, v in state.items():
+        np.testing.assert_array_equal(np.asarray(restored[k]), v)
+
+
+def test_second_dump_settles_open_capture_first(tmp_path):
+    state = _state()
+    c = _session(str(tmp_path / "c"), state)
+    c.checkpoint_begin(1)
+    # a second dump while a soft-freeze is open must settle it first,
+    # not interleave two writers over the same store
+    path = c.checkpoint(2)
+    assert c.store.latest_step() == 2
+    assert c.store.manifest(1).get("capture") == "concurrent"
+    assert path
+
+
+# ----------------------------------------------------------- wait_pending
+def test_wait_pending_timeout_raises_diagnosable(tmp_path):
+    state = _state(n=2, kb=4)
+    c = CheckpointSession(str(tmp_path / "c"),
+                          CheckpointOptions(mode="async"), backend="host")
+    c.attach(lambda: {"state": state})
+    c.checkpoint(1)
+    c.wait_pending()                                  # drains normally
+    # wedge: a writer thread that outlives the deadline
+    release = threading.Event()
+    wedged = threading.Thread(target=release.wait, daemon=True)
+    wedged.start()
+    c.engine._pending = wedged
+    c.engine._pending_ctx = None
+    with pytest.raises(PendingWriteStalled, match="still running"):
+        c.wait_pending(timeout_s=0.05)
+    release.set()                                     # I/O recovers
+    wedged.join()
+    c.wait_pending(timeout_s=5.0)                     # reaps cleanly
+    assert c.engine._pending is None
+
+
+# ------------------------------------------------------------------ CLI
+def test_inspect_reports_capture_mode_and_stats(tmp_path, capsys):
+    from repro.cli import main
+    state = _state()
+    run = str(tmp_path / "c")
+    c = _session(run, state)
+    handle = c.checkpoint_begin(1)
+    handle.wait_speculated()
+    state["w0"][:] = 5.0
+    handle._tracker.note("state::w0")
+    c.checkpoint_finalize()
+    assert main(["inspect", run, "--step", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "capture:     concurrent" in out
+    assert "frozen window:" in out
+    assert "re-captured:" in out
+
+
+# ------------------------------------------------------------- chaos plan
+def test_dirty_burst_planned_only_on_compatible_jobs():
+    from repro.chaos.plan import generate_plan, parse_fault_spec
+    from repro.orchestrator.job import JobSpec
+    specs = [JobSpec(f"j{i:03d}", kind="sim", total_steps=12,
+                     ckpt_every=3, max_restarts=6) for i in range(20)]
+    counts = parse_fault_spec("all=2")
+    assert counts["dirty_burst"] == 2
+    plan = generate_plan(9, specs, 4, counts)
+    non_inc = set(plan.targets("torn_write")) | set(
+        plan.targets("fsync_drop"))
+    assert len(plan.events_for("dirty_burst")) == 2
+    for ev in plan.events_for("dirty_burst"):
+        assert ev.job_id not in non_inc
+
+
+# ---------------------------------------------------------------- trainer
+@pytest.mark.slow
+def test_trainer_loop_with_concurrent_capture(tmp_path, mesh1):
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.runtime.trainer import TrainConfig, Trainer
+    from repro.sharding import get_policy
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    tcfg = TrainConfig(batch_size=2, seq_len=16, total_steps=8,
+                       warmup_steps=2, ckpt_every=2,
+                       compute_dtype=jnp.float32, remat=False,
+                       ckpt=_opts(mode="sync"))
+    policy = get_policy("baseline")
+    tr = Trainer(cfg, tcfg, mesh1, policy, str(tmp_path / "r"))
+    out = tr.run(6)
+    assert out["steps"] == 6
+    assert tr.session.concurrent_capture is None      # all settled
+    steps = tr.session.store.list_steps()
+    assert steps, "periodic concurrent dumps must have committed"
+    m = tr.session.store.manifest(steps[-1])
+    assert m.get("capture") == "concurrent"
+    # restore-into-fresh-trainer round-trips (bit-exact unified restore)
+    tr2 = Trainer(cfg, tcfg, mesh1, policy, str(tmp_path / "r"))
+    assert tr2.restore() == steps[-1]
