@@ -44,6 +44,11 @@ def classify(name: str) -> str:
         return "ttfs"     # lazy-restore acceptance bound: absolute gate
     if "frozen_vs_sync" in low:
         return "frozen"   # soft-freeze acceptance bound: absolute gate
+    # must precede the generic "ratio" -> bytes branch below
+    if "overhead_ratio_disabled" in low:
+        return "obs_disabled"   # obs acceptance bound: absolute gate
+    if "overhead_ratio" in low:
+        return "obs_enabled"    # obs acceptance bound: absolute gate
     if "speedup" in low:
         return "speedup"
     if "dedup" in low:
@@ -67,6 +72,12 @@ TTFS_RATIO_CEILING = 0.5
 # fraction of the stop-the-world sync frozen window.  Absolute for the
 # same reason as the ttfs ceiling: the ratio *is* the contract.
 FROZEN_RATIO_CEILING = 0.10
+# observability acceptance criteria (ISSUE 8): a dump with tracing ON
+# must cost at most 3% over tracing-off (1.03 as a wall ratio), and the
+# *disabled* plane — spans compiled to no-ops — at most 0.5%.  Absolute
+# ceilings: the ratios are the contract, not the baseline values.
+OBS_ENABLED_RATIO_CEILING = 1.03
+OBS_DISABLED_RATIO_CEILING = 1.005
 
 
 def check_metric(name: str, base: float, fresh: float,
@@ -89,6 +100,12 @@ def check_metric(name: str, base: float, fresh: float,
     if kind == "frozen":                      # absolute acceptance bound
         reg = fresh / base - 1
         return fresh <= FROZEN_RATIO_CEILING, reg
+    if kind == "obs_enabled":                 # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= OBS_ENABLED_RATIO_CEILING, reg
+    if kind == "obs_disabled":                # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= OBS_DISABLED_RATIO_CEILING, reg
     if kind == "speedup":                     # higher is better
         if fresh <= 0:
             return False, float("inf")
@@ -133,6 +150,16 @@ def compare_file(fresh_path: str, base_path: str, tol_bytes: float,
                     f"{name}: fresh {fv:.3f} exceeds the soft-freeze "
                     f"acceptance ceiling {FROZEN_RATIO_CEILING} "
                     f"(concurrent frozen window vs sync dump)")
+                continue
+            if kind in ("obs_enabled", "obs_disabled"):
+                ceil = (OBS_ENABLED_RATIO_CEILING
+                        if kind == "obs_enabled"
+                        else OBS_DISABLED_RATIO_CEILING)
+                problems.append(
+                    f"{name}: fresh {fv:.4f} exceeds the observability "
+                    f"overhead ceiling {ceil} (dump wall with the plane "
+                    f"{'on' if kind == 'obs_enabled' else 'disabled'} "
+                    f"vs the uninstrumented path)")
                 continue
             tol = (tol_bytes if kind == "bytes" else
                    SPEEDUP_TOLERANCE if kind == "speedup" else tol_time)

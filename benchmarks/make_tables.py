@@ -18,6 +18,8 @@ LAZY_BEGIN = "<!-- lazy-restore-table:begin -->"
 LAZY_END = "<!-- lazy-restore-table:end -->"
 CHAOS_BEGIN = "<!-- chaos-table:begin -->"
 CHAOS_END = "<!-- chaos-table:end -->"
+OBS_BEGIN = "<!-- obs-table:begin -->"
+OBS_END = "<!-- obs-table:end -->"
 
 ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "artifacts", "dryrun")
@@ -176,9 +178,12 @@ def chaos_table(recs):
     for name, r in recs:
         if "chaos.invariant.violation_ratio" not in r:
             continue
+        # sync-mode classes only: chaos.<cls>.injected (the capture
+        # sweep's chaos.concurrent.<cls>.* keys are a mode, not a class)
         classes = sorted({k.split(".")[1] for k in r
                           if k.startswith("chaos.")
-                          and k.endswith(".injected")})
+                          and k.endswith(".injected")
+                          and k.count(".") == 2})
         out.append("| fault class | injected | survived | healed | "
                    "quarantined | MTTR (s) |")
         out.append("|---|---|---|---|---|---|")
@@ -204,6 +209,36 @@ def chaos_table(recs):
     return "\n".join(out) if out else "(no BENCH_chaos.json found)"
 
 
+def obs_table(recs):
+    """Observability overhead table (from BENCH_obs.json): dump wall
+    with the plane off / on / on-with-detail, plus the two gated ratios
+    and the disabled-path cost model inputs."""
+    out = []
+    for name, r in recs:
+        if "obs.trace_overhead_ratio" not in r:
+            continue
+        out.append("| plane | dump wall (ms) |")
+        out.append("|---|---|")
+        out.append(f"| off (no plane installed) | "
+                   f"{fmt(r['obs.dump_off_wall_ms'])} |")
+        out.append(f"| tracing on | {fmt(r['obs.dump_on_wall_ms'])} |")
+        out.append(f"| tracing on + per-chunk detail | "
+                   f"{fmt(r['obs.dump_detail_wall_ms'])} |")
+        out.append(
+            f"\ntracing-on overhead "
+            f"**{max(0.0, r['obs.trace_overhead_ratio'] - 1):.1%}** "
+            f"(ceiling 3%); disabled-plane overhead "
+            f"**{r['obs.trace_overhead_ratio_disabled'] - 1:.3%}** "
+            f"(ceiling 0.5%), modeled from "
+            f"{fmt(r['obs.model.disabled_span_ns'], 3)} ns/disabled span "
+            f"× {r['obs.model.span_sites']:.0f} sites + "
+            f"{fmt(r['obs.model.disabled_guard_ns'], 3)} ns/guard "
+            f"× {r['obs.model.guard_sites']:.0f} per-chunk sites on a "
+            f"{fmt(r['obs.workload.bytes'])} MiB dump (`{name}`)")
+        break
+    return "\n".join(out) if out else "(no BENCH_obs.json found)"
+
+
 def update_readme(recs, path=README):
     """Render the lazy-restore and chaos tables into README between
     their markers."""
@@ -211,7 +246,8 @@ def update_readme(recs, path=README):
         text = f.read()
     for begin, end, table, label in (
             (LAZY_BEGIN, LAZY_END, lazy_table(recs), "lazy-restore"),
-            (CHAOS_BEGIN, CHAOS_END, chaos_table(recs), "chaos")):
+            (CHAOS_BEGIN, CHAOS_END, chaos_table(recs), "chaos"),
+            (OBS_BEGIN, OBS_END, obs_table(recs), "obs")):
         if begin not in text or end not in text:
             raise SystemExit(f"{path}: missing {begin}/{end} markers")
         text = re.sub(
@@ -289,6 +325,8 @@ def main(argv=None):
     print(lazy_table(bench))
     print("\n## chaos campaign: per-fault-class survivability\n")
     print(chaos_table(bench))
+    print("\n## observability plane: tracing overhead\n")
+    print(obs_table(bench))
 
 
 if __name__ == "__main__":

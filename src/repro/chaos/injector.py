@@ -25,6 +25,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.obs import journal as obs_journal
+from repro.obs import metrics as obs_metrics
 from repro.orchestrator.job import JobState
 from repro.orchestrator.signals import Signal
 
@@ -78,11 +80,22 @@ class FaultInjector:
         return out
 
     # -- bookkeeping ----------------------------------------------------
+    def _audit(self, rec: Dict[str, Any]) -> None:
+        """Every injection lands in the audit trail *and* the run journal
+        (cls="fault"), so ``repro events --class fault`` lines injected
+        faults up against the incident spans they caused.  The journal is
+        a side channel: campaign fingerprints hash the audit trail only,
+        so observability never perturbs a seeded campaign."""
+        self.injections.append(rec)
+        obs_metrics.counter_add("chaos.injections")
+        obs_journal.emit("fault", rec["kind"],
+                         **{k: v for k, v in rec.items() if k != "kind"})
+
     def _record(self, ev: FaultEvent, **extra: Any) -> None:
         ev.state = "injected"
         ev.t_injected = self.clock()
         ev.injected_step = extra.get("step")
-        self.injections.append({
+        self._audit({
             "kind": ev.kind, "job": ev.job_id, "seq": ev.seq,
             "at_step": ev.at_step, "t": ev.t_injected, **extra})
 
@@ -169,7 +182,7 @@ class FaultInjector:
             ev.state = "armed"       # follow-up kill from _on_orch_tick
             ev.t_injected = self.clock()
             ev.injected_step = step
-            self.injections.append({
+            self._audit({
                 "kind": ev.kind, "job": ev.job_id, "seq": ev.seq,
                 "at_step": ev.at_step, "t": ev.t_injected,
                 "step": step, "path": target})
@@ -327,7 +340,7 @@ class FaultInjector:
             ev.detail["kills_left"] = 1
             ev.t_injected = self.clock()
             ev.injected_step = rec.step
-            self.injections.append({
+            self._audit({
                 "kind": ev.kind, "job": ev.job_id, "seq": ev.seq,
                 "at_step": ev.at_step, "t": ev.t_injected,
                 "step": rec.step})

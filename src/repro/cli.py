@@ -19,6 +19,11 @@ get the same treatment:
                                              corrupt objects)
   python -m repro chaos-campaign RUN_DIR     seeded fault-injection campaign
                                              over a simulated fleet
+  python -m repro trace RUN_DIR --chrome     run journal -> Chrome trace
+                                             JSON (Perfetto-loadable)
+  python -m repro events RUN_DIR [--job J]   filtered run-journal timeline
+                                             [--class dump|restore|...]
+  python -m repro metrics RUN_DIR --json     final metrics snapshot, flat
 
 Exit status is 0 on success, 1 on any problem — scriptable from cron,
 GitHub Actions, or a cluster scheduler's health hook.
@@ -448,14 +453,25 @@ def cmd_jobs(args) -> int:
 # ------------------------------------------------------------ orchestrate
 def cmd_orchestrate(args) -> int:
     """Run a deterministic multi-tenant scenario and assert recovery."""
+    import contextlib
+
     from repro.api import CheckpointOptions
+    from repro.obs.plane import observed
     from repro.orchestrator import run_scenario
+    scenario = {"preempt": "preemption"}.get(args.scenario, args.scenario)
     opts = CheckpointOptions(mode=args.mode, pack_format=args.pack_format,
                              io_threads=args.io_threads,
                              incremental=args.incremental)
-    summary = run_scenario(args.scenario, args.run_dir, options=opts,
-                           total_steps=args.steps, kind=args.kind,
-                           capacity=args.capacity, hosts=args.hosts)
+    plane = (contextlib.nullcontext() if args.no_trace
+             else observed(args.run_dir, detail=args.trace_detail))
+    with plane:
+        summary = run_scenario(scenario, args.run_dir, options=opts,
+                               total_steps=args.steps, kind=args.kind,
+                               capacity=args.capacity, hosts=args.hosts)
+    if not args.no_trace:
+        jpath = os.path.join(args.run_dir, "obs", "journal.jsonl")
+        print(f"run journal -> {jpath} "
+              f"(python -m repro trace {args.run_dir} --chrome)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2, default=str)
@@ -613,9 +629,12 @@ def cmd_chaos_campaign(args) -> int:
     """Run a seeded fault-injection campaign over a simulated fleet and
     hold it to the survivability invariant: every job recovers bit-exact
     or lands in diagnosable quarantine."""
+    import contextlib
     import hashlib
+
     from repro.chaos import run_campaign
     from repro.chaos.campaign import write_bench_json
+    from repro.obs.plane import observed
     modes = (["sync", "concurrent"] if args.capture == "sweep"
              else [args.capture])
     sweep = len(modes) > 1
@@ -623,10 +642,16 @@ def cmd_chaos_campaign(args) -> int:
     for mode in modes:
         run_dir = os.path.join(args.run_dir, mode) if sweep \
             else args.run_dir
-        reports[mode] = run_campaign(
-            run_dir, jobs=args.jobs, hosts=args.hosts, seed=args.seed,
-            faults=args.faults, max_ticks=args.max_ticks, capture=mode,
-            log=lambda m, _mode=mode: print(f"  [{_mode}] {m}"))
+        # one journal per campaign dir: injected faults land as
+        # cls="fault" events, so `repro events RUN --class fault` lines
+        # them up against the incident spans they caused
+        plane = (contextlib.nullcontext() if args.no_trace
+                 else observed(run_dir))
+        with plane:
+            reports[mode] = run_campaign(
+                run_dir, jobs=args.jobs, hosts=args.hosts, seed=args.seed,
+                faults=args.faults, max_ticks=args.max_ticks, capture=mode,
+                log=lambda m, _mode=mode: print(f"  [{_mode}] {m}"))
     for mode in modes:
         print()
         print(reports[mode].table_markdown())
@@ -675,6 +700,101 @@ def cmd_chaos_campaign(args) -> int:
         print(f"error: campaign invariant violated "
               f"({violations} violation(s))", file=sys.stderr)
     return 0 if not violations else 1
+
+
+# ---------------------------------------------------------- observability
+def _load_journal_or_die(run_dir: str):
+    from repro.obs import export
+    from repro.obs.journal import journal_path
+    events = export.load_journal(run_dir)
+    if not events:
+        raise SystemExit(
+            f"error: no run journal under {run_dir!r} (expected "
+            f"{journal_path(run_dir)}; produced by orchestrate / "
+            f"chaos-campaign unless --no-trace)")
+    return events
+
+
+def cmd_trace(args) -> int:
+    """Export the run journal as Chrome trace-event JSON (Perfetto)."""
+    from repro.obs import export
+    events = _load_journal_or_die(args.run_dir)
+    problems = export.validate_journal(events)
+    if problems:
+        for p in problems[:10]:
+            print(f"warning: {p}", file=sys.stderr)
+    trace = export.to_chrome_trace(
+        events, process_name=os.path.basename(args.run_dir.rstrip("/"))
+        or "repro")
+    out = args.out or os.path.join(args.run_dir, "obs", "trace.json")
+    with open(out, "w") as f:
+        json.dump(trace, f)
+    n_spans = sum(1 for e in events if e.get("kind") == "span")
+    print(f"{out}: {len(trace['traceEvents'])} trace event(s), "
+          f"{n_spans} span(s) — open in ui.perfetto.dev or "
+          f"chrome://tracing")
+    return 0
+
+
+def _event_row(ev) -> List[str]:
+    skip = {"v", "cls", "kind", "t", "wall", "name", "ts", "dur",
+            "thread", "span_id", "parent_id", "job"}
+    if ev.get("kind") == "span":
+        t, dur = ev.get("ts", 0.0), ev.get("dur", 0.0)
+        what = ev.get("name", "?")
+        src = dict(ev.get("attrs") or {})
+        job = (ev.get("attrs") or {}).get("job")
+    else:
+        t, dur = ev.get("t", 0.0), None
+        what = f"{ev.get('cls')}/{ev.get('kind')}"
+        src = {k: v for k, v in ev.items()}
+        job = ev.get("job")
+    detail = " ".join(f"{k}={v}" for k, v in sorted(src.items())
+                      if k not in skip and v is not None)
+    return [f"{t * 1e3:.1f}",
+            f"{dur * 1e3:.1f}" if dur is not None else "-",
+            ev.get("cls", "?"), what, job or "-", detail[:60]]
+
+
+def cmd_events(args) -> int:
+    """Filtered run-journal timeline (by job and/or event class)."""
+    from repro.obs import export
+    events = _load_journal_or_die(args.run_dir)
+    evs = export.filter_events(events, job=args.job, cls=args.cls)
+    if args.json:
+        for ev in evs:
+            print(json.dumps(ev, default=str))
+        return 0
+    if not evs:
+        print("(no matching events)")
+        return 0
+    rows = [_event_row(ev) for ev in evs]
+    print(_table(rows, ["t_ms", "dur_ms", "class", "event", "job",
+                        "detail"]))
+    return 0
+
+
+def cmd_metrics(args) -> int:
+    """Final metrics snapshot from the run journal, flat name->value."""
+    from repro.obs import export
+    events = _load_journal_or_die(args.run_dir)
+    metrics = export.metrics_from_journal(events)
+    if not metrics:
+        raise SystemExit("error: journal holds no metrics snapshot "
+                         "(run did not close its observability plane?)")
+    if args.json is not None:
+        payload = json.dumps(metrics, indent=2, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload + "\n")
+            print(f"metrics -> {args.json}")
+        return 0
+    rows = [[k, f"{v:g}" if isinstance(v, (int, float)) else str(v)]
+            for k, v in sorted(metrics.items())]
+    print(_table(rows, ["metric", "value"]))
+    return 0
 
 
 def _iter_leaves(node, prefix=""):
@@ -744,8 +864,8 @@ def build_parser() -> argparse.ArgumentParser:
                        "multi-tenant preemption/failure/migration scenario")
     p.add_argument("run_dir")
     p.add_argument("--scenario", default="mixed",
-                   choices=["preemption", "failure", "straggler", "migrate",
-                            "mixed"])
+                   choices=["preemption", "preempt", "failure", "straggler",
+                            "migrate", "mixed"])
     p.add_argument("--steps", type=int, default=10,
                    help="steps per low-priority job")
     p.add_argument("--kind", default="train",
@@ -760,6 +880,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="delta images (what the migrate transfer dedups)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="also dump the full summary JSON here")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip the observability plane (no run journal)")
+    p.add_argument("--trace-detail", action="store_true",
+                   help="also record per-chunk spans (pack compress/"
+                        "append, lazy entries) — bigger journal")
     p.set_defaults(fn=cmd_orchestrate)
 
     p = sub.add_parser("migrate", help="transfer snapshot images to a "
@@ -810,7 +935,38 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--report", default=None, metavar="PATH",
                    help="write the full report (rows, outcomes, "
                         "violations, fingerprint) here")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip the observability plane (no run journal)")
     p.set_defaults(fn=cmd_chaos_campaign)
+
+    p = sub.add_parser("trace", help="export a run's journal as Chrome "
+                       "trace-event JSON (Perfetto-loadable)")
+    p.add_argument("run_dir")
+    p.add_argument("--chrome", action="store_true",
+                   help="Chrome trace-event JSON (the default and "
+                        "currently only format)")
+    p.add_argument("-o", "--out", default=None, metavar="PATH",
+                   help="output path (default: RUN_DIR/obs/trace.json)")
+    p.set_defaults(fn=cmd_trace)
+
+    p = sub.add_parser("events", help="filtered run-journal timeline")
+    p.add_argument("run_dir")
+    p.add_argument("--job", default=None, help="only this job's events")
+    p.add_argument("--class", dest="cls", default=None,
+                   choices=["dump", "restore", "transfer", "fault", "job",
+                            "recovery", "pack", "orch", "metrics"],
+                   help="only events of this class")
+    p.add_argument("--json", action="store_true",
+                   help="one JSON object per line instead of a table")
+    p.set_defaults(fn=cmd_events)
+
+    p = sub.add_parser("metrics", help="final metrics snapshot from a "
+                       "run's journal (flat name -> value)")
+    p.add_argument("run_dir")
+    p.add_argument("--json", nargs="?", const="-", default=None,
+                   metavar="PATH",
+                   help="emit JSON (to PATH, or stdout with no PATH)")
+    p.set_defaults(fn=cmd_metrics)
     return ap
 
 

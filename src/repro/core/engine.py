@@ -41,6 +41,9 @@ import jax
 
 from repro.chaos import hooks as chaos_hooks
 from repro.core.dirty import DirtyTracker
+from repro.obs import journal as obs_journal
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core.lock import LockTimeout
 from repro.core.plugins import (CallbackPlugin, Hook, HookContext, Plugin,
                                 PluginRegistry)
@@ -231,10 +234,13 @@ class SnapshotEngine:
         self.registry.init_all("dump")
         ctx.stats["t_start"] = time.perf_counter()
         try:
-            self.registry.run(Hook.PAUSE_DEVICES, ctx)       # ① lock
+            with obs_trace.span("dump.pause", step=step):
+                self.registry.run(Hook.PAUSE_DEVICES, ctx)   # ① lock
             t_frozen = time.perf_counter()
-            self.registry.run(Hook.CHECKPOINT_DEVICES, ctx)  # ② dev→host
-            self.registry.run(Hook.DUMP_EXT_STATE, ctx)      # ③ host state
+            with obs_trace.span("dump.capture", step=step):
+                self.registry.run(Hook.CHECKPOINT_DEVICES, ctx)  # ② dev→host
+            with obs_trace.span("dump.ext_state", step=step):
+                self.registry.run(Hook.DUMP_EXT_STATE, ctx)  # ③ host state
             ctx.stats["frozen_s"] = time.perf_counter() - t_frozen
         except LockTimeout as e:
             # abort-to-running: nothing was mutated; plugins may roll back
@@ -279,25 +285,32 @@ class SnapshotEngine:
         ctx.stats["locked_total_s"] = time.perf_counter() - t_start
         path = self._snapshot_path(ctx.step)
 
+        # the writer thread has its own span context: hand it the
+        # caller's (job attribution survives the async handoff)
+        obs_ctx = obs_trace.current_context()
+
         def writer():
-            try:
-                self._write(ctx)
-                self._write_error = None           # last dump is clean
-                self.last_commit_step = ctx.step
-                self.registry.exit_all("dump", True)
-            except BaseException as e:
-                self._pending_err.append(e)
-                # surface immediately: a silently-failed async dump must
-                # not look like a committed image to anyone polling stats
-                self._write_error = repr(e)
-                self.last_stats["write_error"] = repr(e)
-                self.registry.exit_all("dump", False)
+            with obs_trace.context(**obs_ctx):
+                try:
+                    self._write(ctx)
+                    self._write_error = None       # last dump is clean
+                    self.last_commit_step = ctx.step
+                    self.registry.exit_all("dump", True)
+                except BaseException as e:
+                    self._pending_err.append(e)
+                    # surface immediately: a silently-failed async dump
+                    # must not look like a committed image to anyone
+                    # polling stats
+                    self._write_error = repr(e)
+                    self.last_stats["write_error"] = repr(e)
+                    self.registry.exit_all("dump", False)
 
         # publish the stats snapshot BEFORE the writer starts: the thread
         # keeps mutating ctx.stats (and on failure writes write_error into
         # self.last_stats), so copying after start would race both ways
         self.last_stats = dict(ctx.stats)
-        self._pending = threading.Thread(target=writer, daemon=True)
+        self._pending = threading.Thread(target=writer, daemon=True,
+                                         name="repro-async-writer")
         self._pending_ctx = ctx
         self._pending.start()
         return path
@@ -342,7 +355,8 @@ class SnapshotEngine:
         self.registry.init_all("dump")
         ctx.stats["t_begin"] = time.perf_counter()
         try:
-            self.registry.run(Hook.PAUSE_DEVICES, ctx)     # pin pause
+            with obs_trace.span("dump.pause", step=step, phase="pin"):
+                self.registry.run(Hook.PAUSE_DEVICES, ctx)  # pin pause
         except LockTimeout as e:
             self.registry.exit_all("dump", False)
             raise CheckpointAborted(str(e)) from e
@@ -417,17 +431,19 @@ class SnapshotEngine:
         t0 = time.perf_counter()
         writer = self._make_writer(ctx.step)
         try:
-            writer.write_states(ctx.device_snapshot)
-            writer.write_host_state(ctx.host_state)
-            t_serialize = time.perf_counter() - t0
-            ctx.stats["host_bytes"] = float(
-                len(pack_host_blob(ctx.host_state)))
-            path = writer.commit(topology=mesh_fingerprint(self.mesh),
-                                 stats=ctx.stats,
-                                 extra={"warnings": ctx.warnings,
-                                        "mode": self.mode,
-                                        "capture": "sync",
-                                        "incremental": self.incremental})
+            with obs_trace.span("dump.write", step=ctx.step,
+                                mode=self.mode):
+                writer.write_states(ctx.device_snapshot)
+                writer.write_host_state(ctx.host_state)
+                t_serialize = time.perf_counter() - t0
+                ctx.stats["host_bytes"] = float(
+                    len(pack_host_blob(ctx.host_state)))
+                path = writer.commit(topology=mesh_fingerprint(self.mesh),
+                                     stats=ctx.stats,
+                                     extra={"warnings": ctx.warnings,
+                                            "mode": self.mode,
+                                            "capture": "sync",
+                                            "incremental": self.incremental})
             # commit() drains the pipeline and fsyncs; only now are the
             # stage timings and reuse accounting final (so these live in
             # last_stats, not in the manifest's embedded stats)
@@ -442,15 +458,39 @@ class SnapshotEngine:
 
     def _after_commit(self, ctx: HookContext, path: str) -> str:
         if self.replicator is not None:
-            t_rep = time.perf_counter()
-            self.replicator.push(self.run_dir, ctx.step)
-            ctx.stats["replicate_s"] = time.perf_counter() - t_rep
+            with obs_trace.span("dump.replicate", step=ctx.step):
+                t_rep = time.perf_counter()
+                self.replicator.push(self.run_dir, ctx.step)
+                ctx.stats["replicate_s"] = time.perf_counter() - t_rep
             # replication counters (files/bytes copied vs skipped for the
             # dir replicator, chunks/bytes sent vs reused for the delta
             # one) ride along in the dump stats under a replica_ prefix
-            for k, v in getattr(self.replicator, "last_stats", {}).items():
+            # and mirror into the metrics registry; a replicator without
+            # last_stats used to drop them invisibly — warn once instead
+            obs_metrics.counter_add("replica.push_count")
+            rep_stats = getattr(self.replicator, "last_stats", None)
+            if rep_stats is None:
+                obs_metrics.counter_add("replica.missing_stats")
+                obs_metrics.warn_once(
+                    f"replicator-no-stats:{type(self.replicator).__name__}",
+                    f"replicator {type(self.replicator).__name__} exposes "
+                    f"no last_stats; replication counters for step "
+                    f"{ctx.step} (and later dumps) are not recorded")
+                rep_stats = {}
+            for k, v in rep_stats.items():
                 if isinstance(v, (int, float)):
                     ctx.stats[f"replica_{k}"] = v
+                    obs_metrics.counter_add(f"replica.{k}", v)
+        obs_metrics.counter_add("dump.count")
+        obs_metrics.counter_add("dump.bytes_written",
+                                ctx.stats.get("written_bytes", 0.0))
+        obs_metrics.counter_add("dump.bytes_deduped",
+                                ctx.stats.get("reused_bytes", 0.0))
+        if "frozen_s" in ctx.stats:
+            obs_metrics.observe("dump.frozen_s", ctx.stats["frozen_s"])
+        obs_journal.emit("dump", "commit", step=ctx.step,
+                         bytes=ctx.stats.get("written_bytes"),
+                         frozen_s=ctx.stats.get("frozen_s"))
         if chaos_hooks.INJECTOR is not None:
             # chaos: lost-writeback site — the image is committed (and
             # replicated), so an injected local corruption here models a
@@ -471,11 +511,19 @@ class SnapshotEngine:
         the thread stays joinable so a later call can still reap it."""
         if self._pending is not None:
             t0 = time.perf_counter()
-            self._pending.join(timeout_s)
-            if self._pending.is_alive():
-                step = (self._pending_ctx.step
-                        if self._pending_ctx is not None else None)
-                raise PendingWriteStalled(step, time.perf_counter() - t0)
+            step = (self._pending_ctx.step
+                    if self._pending_ctx is not None else None)
+            with obs_trace.span("dump.wait_pending", step=step) as sp:
+                self._pending.join(timeout_s)
+                if self._pending.is_alive():
+                    waited = time.perf_counter() - t0
+                    # the stall must be visible in the journal, not only
+                    # as the raised exception
+                    sp.set(stalled=True, waited_s=waited)
+                    obs_metrics.observe("dump.pending_stall_s", waited)
+                    obs_journal.emit("dump", "pending_stall", step=step,
+                                     waited_s=waited, timeout_s=timeout_s)
+                    raise PendingWriteStalled(step, waited)
             self._pending = None
             ctx, self._pending_ctx = self._pending_ctx, None
             if ctx is not None and not self._pending_err:
@@ -594,7 +642,9 @@ class SnapshotEngine:
         # serialized by this lock — the newest-valid scan tolerates
         # vanishing images by falling back, but an explicitly requested
         # step may still fail mid-read there.
-        with self.store.lock:
+        sp_crit = obs_trace.span("restore.critical",
+                                 mode="lazy" if lazy else "eager")
+        with sp_crit, self.store.lock:
             steps = self.store.list_steps()
             if step is None:
                 # newest *valid* image: fall back past torn/corrupt images
@@ -641,6 +691,7 @@ class SnapshotEngine:
                         reader.close()
                         raise
 
+            sp_crit.set(step=step)
             ctx = HookContext("restore", step)
             ctx.reader = reader
             ctx.manifest = reader.manifest
@@ -681,6 +732,12 @@ class SnapshotEngine:
             ctx.stats["restore_critical_s"] = (time.perf_counter()
                                                - t_restore0)
         ctx.stats["restore_mode"] = "lazy" if lazy else "eager"
+        obs_metrics.counter_add("restore.count")
+        if lazy:
+            obs_metrics.observe("restore.critical_s",
+                                ctx.stats["restore_critical_s"])
+        obs_journal.emit("restore", "resumed", step=step,
+                         mode=ctx.stats["restore_mode"])
         self.last_stats = dict(ctx.stats)
         self.last_stats["topology_mode"] = ctx.topology_map.get("mode")
         self._last_restored = ctx.restored
@@ -794,7 +851,9 @@ class ConcurrentCapture:
         self._spec_err: Optional[BaseException] = None
         self._speculated: set = set()
         self._done = False
+        self._obs_ctx = obs_trace.current_context()
         self._thread = threading.Thread(target=self._speculate,
+                                        name="repro-spec-capture",
                                         daemon=True)
 
     def _start(self) -> None:
@@ -822,38 +881,41 @@ class ConcurrentCapture:
     def _speculate(self) -> None:
         backend = self._engine.device_plugin
         t0 = time.perf_counter()
-        try:
-            for key, leaf in self._pinned.items():
-                if self._stop.is_set():
-                    break
-                if chaos_hooks.INJECTOR is not None:
-                    # chaos: mutation-storm site — a handler may mutate
-                    # the live leaf mid-speculation (it must call note())
-                    chaos_hooks.fire("engine.speculate", key=key,
-                                     leaf=leaf, note=self._tracker.note,
-                                     step=self.ctx.step,
-                                     run_dir=self._engine.run_dir)
-                state, path = key.split("::", 1)
-                try:
-                    entry = backend.capture_entry(leaf)
-                except Exception:
-                    # donated away / deleted under us: the live value is
-                    # captured at the validate pause instead
-                    self._tracker.note(key)
-                    continue
-                self._writer.put_state_entry(state, path, entry)
-                self._speculated.add(key)
-            if not self._stop.is_set():
-                # drain the pack pipeline while the job still runs: once
-                # speculation_done is set, finalize()'s own flush is a
-                # no-op and the validate pause shrinks to hash + commit
-                self._writer.flush()
-        except BaseException as e:
-            self._spec_err = e
-        finally:
-            self.ctx.stats["speculate_s"] = time.perf_counter() - t0
-            self.ctx.stats["speculated_entries"] = len(self._speculated)
-            self._spec_done.set()
+        with obs_trace.context(**self._obs_ctx), \
+                obs_trace.span("dump.speculate", step=self.ctx.step) as sp:
+            try:
+                for key, leaf in self._pinned.items():
+                    if self._stop.is_set():
+                        break
+                    if chaos_hooks.INJECTOR is not None:
+                        # chaos: mutation-storm site — a handler may mutate
+                        # the live leaf mid-speculation (it must call note())
+                        chaos_hooks.fire("engine.speculate", key=key,
+                                         leaf=leaf, note=self._tracker.note,
+                                         step=self.ctx.step,
+                                         run_dir=self._engine.run_dir)
+                    state, path = key.split("::", 1)
+                    try:
+                        entry = backend.capture_entry(leaf)
+                    except Exception:
+                        # donated away / deleted under us: the live value is
+                        # captured at the validate pause instead
+                        self._tracker.note(key)
+                        continue
+                    self._writer.put_state_entry(state, path, entry)
+                    self._speculated.add(key)
+                if not self._stop.is_set():
+                    # drain the pack pipeline while the job still runs: once
+                    # speculation_done is set, finalize()'s own flush is a
+                    # no-op and the validate pause shrinks to hash + commit
+                    self._writer.flush()
+            except BaseException as e:
+                self._spec_err = e
+            finally:
+                self.ctx.stats["speculate_s"] = time.perf_counter() - t0
+                self.ctx.stats["speculated_entries"] = len(self._speculated)
+                sp.set(entries=len(self._speculated))
+                self._spec_done.set()
 
     # ----------------------------------------------------------- finalize
     def finalize(self) -> str:
@@ -870,7 +932,9 @@ class ConcurrentCapture:
         t_val = time.perf_counter()
         try:
             ctx.roots = eng._provider()
-            eng.registry.run(Hook.PAUSE_DEVICES, ctx)   # validate pause
+            with obs_trace.span("dump.pause", step=ctx.step,
+                                phase="validate"):
+                eng.registry.run(Hook.PAUSE_DEVICES, ctx)  # validate pause
         except LockTimeout as e:
             self._cleanup(unlock=False)
             raise CheckpointAborted(str(e)) from e
@@ -881,36 +945,40 @@ class ConcurrentCapture:
             self._cleanup(unlock=True)
             raise
         try:
-            self._stop.set()
-            self._thread.join()
-            if self._spec_err is not None:
-                raise self._spec_err
-            self._writer.flush()        # speculated chunk records final
-            # the post-lock tree is the commit point
-            ctx.roots = eng._provider()
-            live = backend.flatten_keys(ctx.roots)
-            if chaos_hooks.INJECTOR is not None:
-                # chaos: validate site — burst handlers restore their
-                # mutations here so the job's own trajectory is intact
-                chaos_hooks.fire("engine.validate", step=ctx.step,
-                                 run_dir=eng.run_dir)
-            dirty = self._tracker.dirty_keys(live)
+            with obs_trace.span("dump.validate", step=ctx.step) as sp_val:
+                self._stop.set()
+                self._thread.join()
+                if self._spec_err is not None:
+                    raise self._spec_err
+                self._writer.flush()    # speculated chunk records final
+                # the post-lock tree is the commit point
+                ctx.roots = eng._provider()
+                live = backend.flatten_keys(ctx.roots)
+                if chaos_hooks.INJECTOR is not None:
+                    # chaos: validate site — burst handlers restore their
+                    # mutations here so the job's own trajectory is intact
+                    chaos_hooks.fire("engine.validate", step=ctx.step,
+                                     run_dir=eng.run_dir)
+                dirty = self._tracker.dirty_keys(live)
+                sp_val.set(dirty=len(dirty))
             recaptured = recaptured_bytes = 0
-            for key, leaf in live.items():
-                state, path = key.split("::", 1)
-                is_array = (hasattr(leaf, "shape")
-                            and hasattr(leaf, "dtype"))
-                if (key in dirty or key not in self._speculated
-                        or not is_array):
-                    nb = self._writer.reput_state_entry(
-                        state, path, backend.capture_entry(leaf))
-                    if nb:
-                        recaptured += 1
-                        recaptured_bytes += nb
-            for key in self._pinned:
-                if key not in live:      # structural drift: entry gone
+            with obs_trace.span("dump.patch", step=ctx.step) as sp_patch:
+                for key, leaf in live.items():
                     state, path = key.split("::", 1)
-                    self._writer.drop_state_entry(state, path)
+                    is_array = (hasattr(leaf, "shape")
+                                and hasattr(leaf, "dtype"))
+                    if (key in dirty or key not in self._speculated
+                            or not is_array):
+                        nb = self._writer.reput_state_entry(
+                            state, path, backend.capture_entry(leaf))
+                        if nb:
+                            recaptured += 1
+                            recaptured_bytes += nb
+                for key in self._pinned:
+                    if key not in live:  # structural drift: entry gone
+                        state, path = key.split("::", 1)
+                        self._writer.drop_state_entry(state, path)
+                sp_patch.set(recaptured=recaptured)
             eng.registry.run(Hook.DUMP_EXT_STATE, ctx)
             self._writer.write_host_state(ctx.host_state)
             ctx.stats["host_bytes"] = float(

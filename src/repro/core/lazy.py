@@ -23,6 +23,10 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import journal as obs_journal
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 Spec = str                    # "state" or "state/path-prefix"
 WorkItem = Tuple[str, str]    # (state, path)
 
@@ -148,6 +152,7 @@ class LazyMaterializer:
 
     # ------------------------------------------------------------ control
     def start(self) -> "LazyMaterializer":
+        self._obs_ctx = obs_trace.current_context()
         self._thread = threading.Thread(
             target=self._run, daemon=True,
             name="repro-lazy-materializer")
@@ -207,35 +212,55 @@ class LazyMaterializer:
     def _load_one(self, state: str, path: str) -> Any:
         return self._place(self._reader, state, path)
 
+    def _stream(self) -> None:
+        for item in self._work:
+            if self._cancelled:
+                break
+            state, path = item
+            tr = obs_trace.TRACER
+            if tr is not None and tr.detail:
+                with tr.begin("restore.entry",
+                              {"state": state, "path": path}):
+                    ok = self._stream_one(item, state, path)
+            else:
+                ok = self._stream_one(item, state, path)
+            if not ok:
+                break
+
+    def _stream_one(self, item: WorkItem, state: str, path: str) -> bool:
+        try:
+            leaf = self._load_one(state, path)
+        except BaseException as e:
+            if not self._try_heal(state, path, e):
+                self.error = e
+                self.failed_item = item
+                return False
+            try:
+                leaf = self._load_one(state, path)
+            except BaseException as e2:
+                self.error = e2
+                self.failed_item = item
+                return False
+        with self._lock:
+            insert_leaf(self._restored, state, path, leaf)
+        try:
+            self.stats["background_bytes"] += \
+                self._reader.entry_nbytes(state, path)
+        except Exception:
+            pass
+        self.stats["background_entries"] += 1
+        self._events[item].set()
+        return True
+
     def _run(self) -> None:
         t0 = time.perf_counter()
         try:
-            for item in self._work:
-                if self._cancelled:
-                    break
-                state, path = item
-                try:
-                    leaf = self._load_one(state, path)
-                except BaseException as e:
-                    if not self._try_heal(state, path, e):
-                        self.error = e
-                        self.failed_item = item
-                        break
-                    try:
-                        leaf = self._load_one(state, path)
-                    except BaseException as e2:
-                        self.error = e2
-                        self.failed_item = item
-                        break
-                with self._lock:
-                    insert_leaf(self._restored, state, path, leaf)
-                try:
-                    self.stats["background_bytes"] += \
-                        self._reader.entry_nbytes(state, path)
-                except Exception:
-                    pass
-                self.stats["background_entries"] += 1
-                self._events[item].set()
+            with obs_trace.context(**getattr(self, "_obs_ctx", {})), \
+                    obs_trace.span("restore.background",
+                                   entries=len(self._work)) as sp:
+                self._stream()
+                sp.set(placed=self.stats["background_entries"],
+                       healed=self.stats["healed_entries"])
         finally:
             self.stats["background_s"] = time.perf_counter() - t0
             for ev in self._events.values():
@@ -274,6 +299,9 @@ class LazyMaterializer:
             except Exception:
                 pass
         self.stats["healed_entries"] += 1
+        obs_metrics.counter_add("restore.heal_events")
+        obs_journal.emit("restore", "heal", state=state, path=path,
+                         error=repr(exc))
         return True
 
 
@@ -288,15 +316,17 @@ def resume_with_schedule(ctx, place_fn: Callable[[Any, str, str], Any],
     critical, background = split_schedule(
         reader, getattr(ctx, "critical_specs", None))
     t0 = time.perf_counter()
-    if threads > 1 and len(critical) > 1:
-        from concurrent.futures import ThreadPoolExecutor
-        with ThreadPoolExecutor(max_workers=threads) as ex:
-            leaves = list(ex.map(lambda it: place_fn(reader, *it),
-                                 critical))
-    else:
-        leaves = [place_fn(reader, *it) for it in critical]
-    for (state, path), leaf in zip(critical, leaves):
-        insert_leaf(ctx.restored, state, path, leaf)
+    with obs_trace.span("restore.critical_place",
+                        entries=len(critical), threads=threads):
+        if threads > 1 and len(critical) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            with ThreadPoolExecutor(max_workers=threads) as ex:
+                leaves = list(ex.map(lambda it: place_fn(reader, *it),
+                                     critical))
+        else:
+            leaves = [place_fn(reader, *it) for it in critical]
+        for (state, path), leaf in zip(critical, leaves):
+            insert_leaf(ctx.restored, state, path, leaf)
     ctx.stats["place_critical_s"] = time.perf_counter() - t0
     ctx.stats["critical_entries"] = float(len(critical))
     ctx.stats["background_entries_planned"] = float(len(background))

@@ -31,6 +31,7 @@ import msgpack
 import numpy as np
 
 from repro.chaos import hooks as chaos_hooks
+from repro.obs import trace as obs_trace
 from repro.serialization.integrity import atomic_write_json, read_json
 from repro.serialization.pack import (DEFAULT_CHUNK_BYTES, PackWriter,
                                       PackWriterV2, open_pack)
@@ -378,6 +379,12 @@ class SnapshotWriter:
     def commit(self, topology: Dict[str, Any],
                stats: Optional[Dict[str, Any]] = None,
                extra: Optional[Dict[str, Any]] = None) -> str:
+        with obs_trace.span("dump.commit", step=self.step):
+            return self._commit(topology, stats, extra)
+
+    def _commit(self, topology: Dict[str, Any],
+                stats: Optional[Dict[str, Any]],
+                extra: Optional[Dict[str, Any]]) -> str:
         self._writer.add_bytes("__meta__", pack_host_blob(self.meta))
         self.locations["__meta__"] = os.path.join(
             f"step_{self.step:08d}", self.pack_name)

@@ -1,0 +1,42 @@
+"""repro.obs — unified observability plane: spans, metrics, run journal.
+
+Three module-global sinks, each mirroring the chaos-hook pattern
+(``repro.chaos.hooks``): ``None`` until installed, and every call site
+guards with a single module-attribute load so the steady-state cost of a
+*disabled* plane is one pointer read + ``None`` check — the paper's
+zero-overhead claim survives instrumentation.
+
+  ``obs.trace``     span("dump.capture", step=...) context managers with
+                    nesting, thread attribution, monotonic timestamps.
+  ``obs.metrics``   counters / gauges / histograms behind a stable
+                    name -> schema table (METRIC_SCHEMA).
+  ``obs.journal``   append-only JSONL event log per run directory:
+                    spans, metric snapshots, chaos injections, job state
+                    transitions.
+
+``ObservabilityPlane`` bundles all three for one run directory and wires
+the tracer's sink into the journal; ``observed(run_dir)`` is the
+context-manager form the CLI uses::
+
+    from repro.obs import observed
+    with observed(run_dir):
+        ...   # dumps/restores/orchestration in here are traced
+
+Exporters (``repro.obs.export``) turn the journal back into a Chrome
+trace-event file (Perfetto-loadable), a filtered event timeline, or a
+flat metrics dict — the substrate behind ``repro trace``, ``repro
+events`` and ``repro metrics``.
+"""
+from repro.obs import journal, metrics, trace
+from repro.obs.journal import RunJournal
+from repro.obs.metrics import METRIC_SCHEMA, MetricsRegistry
+from repro.obs.plane import ObservabilityPlane, observed
+from repro.obs.trace import SPAN_SCHEMA, Span, Tracer, span
+
+__all__ = [
+    "trace", "metrics", "journal",
+    "span", "Span", "Tracer", "SPAN_SCHEMA",
+    "MetricsRegistry", "METRIC_SCHEMA",
+    "RunJournal",
+    "ObservabilityPlane", "observed",
+]

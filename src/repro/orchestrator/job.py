@@ -21,6 +21,7 @@ import os
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.obs import journal as obs_journal
 from repro.orchestrator.recovery import GoodputMeter, RecoveryLog
 from repro.serialization.integrity import atomic_write_json, read_json
 
@@ -102,7 +103,7 @@ class JobRecord:
         self.restarts = 0               # recoveries (preempt or failure)
         self.last_ckpt_step: Optional[int] = None
         self.events: List[Dict[str, Any]] = []
-        self.recovery = RecoveryLog()
+        self.recovery = RecoveryLog(job_id=spec.job_id)
         self.goodput = GoodputMeter()
         self.created_t = self.clock()
         self.finished_t: Optional[float] = None
@@ -116,6 +117,9 @@ class JobRecord:
         now = self.clock()
         self.events.append({"t": now, "from": self.state.value,
                             "to": to.value, "step": self.step, **meta})
+        obs_journal.emit("job", "transition", job=self.spec.job_id,
+                         frm=self.state.value, to=to.value,
+                         step=self.step)
         self.state = to
         if to == JobState.RESTORING:
             self.restarts += 1
@@ -173,6 +177,7 @@ class JobRecord:
         rec.finished_t = d.get("finished_t")
         rec.events = list(d.get("events", []))
         rec.recovery = RecoveryLog.from_list(d.get("recovery", []))
+        rec.recovery.job_id = rec.spec.job_id
         rec.goodput = GoodputMeter.from_dict(d.get("goodput", {}))
         return rec
 

@@ -25,6 +25,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.chaos import hooks as chaos_hooks
+from repro.obs import trace as obs_trace
 from repro.orchestrator.job import JobRecord, JobSpec, JobState
 from repro.orchestrator.scheduler import Scheduler
 from repro.orchestrator.signals import Signal, SignalChannel
@@ -211,12 +212,15 @@ class Orchestrator:
         rec.attempt += 1
         wl = self._make_workload(rec)
         t0 = self.clock()
-        try:
-            restored_step = wl.restore()
-        except FileNotFoundError:
-            # interrupted before any image existed: cold restart
-            wl.start()
-            restored_step = 0
+        # job attribution: every span the restore emits (restore.critical,
+        # restore.background, pack reads) inherits this job id
+        with obs_trace.context(job=rec.spec.job_id):
+            try:
+                restored_step = wl.restore()
+            except FileNotFoundError:
+                # interrupted before any image existed: cold restart
+                wl.start()
+                restored_step = 0
         restore_s = self.clock() - t0
         rec.step = restored_step
         meta = {"restore_wall_s": restore_s}
@@ -279,8 +283,11 @@ class Orchestrator:
                 continue
             prev_step = rec.step
             try:
-                out = wl.run_slice(self.cfg.slice_steps,
-                                   preempt=self.channel.checker(job_id))
+                # dump/pack spans emitted inside the slice (planner-driven
+                # checkpoints) carry the owning job id
+                with obs_trace.context(job=job_id):
+                    out = wl.run_slice(self.cfg.slice_steps,
+                                       preempt=self.channel.checker(job_id))
             except SnapshotWriteFailed as e:
                 # in-band abort: a background dump failed; the job stops
                 # promptly instead of trusting phantom checkpoints
@@ -398,7 +405,8 @@ class Orchestrator:
         rec.transition(JobState.FREEZING, signal=getattr(sig, "value", sig),
                        ckpt_path=out.get("ckpt_path"))
         try:
-            wl.finish()               # drain async writers: image committed
+            with obs_trace.context(job=job_id):
+                wl.finish()           # drain async writers: image committed
         except Exception as e:
             # the checkpoint-on-signal never landed: the job yields as
             # FAILED and its restore falls back to the previous image
@@ -435,8 +443,9 @@ class Orchestrator:
         dst_dir = job_dir_for(self.run_dir, job_id, plan.dst_host)
         t0 = self.clock()
         try:
-            stats = self._transfer_image(wl, src_dir, dst_dir,
-                                         plan.dst_host)
+            with obs_trace.context(job=job_id):
+                stats = self._transfer_image(wl, src_dir, dst_dir,
+                                             plan.dst_host)
         except Exception as e:
             # the image never reached the destination: stay on the source
             # host (its image is intact) and recover like a preemption

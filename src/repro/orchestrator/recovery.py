@@ -34,15 +34,34 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
+from repro.obs import journal as obs_journal
+from repro.obs import trace as obs_trace
+
 PHASES = ("detect_s", "transfer_s", "schedule_s", "restore_s",
           "restore_background_s", "replay_s")
 
 
 class RecoveryLog:
-    """Timestamped incidents for one job; at most one open at a time."""
+    """Timestamped incidents for one job; at most one open at a time.
 
-    def __init__(self) -> None:
+    Every phase mark doubles as a retroactive span (``recovery.detect``,
+    ``recovery.transfer``, ``recovery.schedule``, ``recovery.restore``,
+    ``recovery.restore_background``, ``recovery.replay``) when the obs
+    plane is installed — the incident dict stays the persisted record,
+    but the *trace* is the first-class timeline: ``repro trace --chrome``
+    shows each phase as a block, attributed to ``job_id``."""
+
+    def __init__(self, job_id: Optional[str] = None) -> None:
         self.incidents: List[Dict[str, Any]] = []
+        self.job_id = job_id
+
+    def _span(self, inc: Dict[str, Any], name: str,
+              ta: Optional[float], tb: Optional[float],
+              **attrs: Any) -> None:
+        if obs_trace.TRACER is None or ta is None or tb is None:
+            return
+        obs_trace.record(name, ta, tb, job=self.job_id,
+                         cause=inc.get("cause"), **attrs)
 
     # ------------------------------------------------------------ record
     def open(self, cause: str, t_interrupt: float, t_detect: float,
@@ -62,6 +81,11 @@ class RecoveryLog:
                "restored_step": None,
                "meta": {}}
         self.incidents.append(inc)
+        self._span(inc, "recovery.detect", t_interrupt, t_detect,
+                   step=step_at_interrupt)
+        obs_journal.emit("recovery", "incident_open", job=self.job_id,
+                         cause=cause, step=step_at_interrupt,
+                         last_ckpt_step=last_ckpt_step)
         return inc
 
     @property
@@ -76,20 +100,33 @@ class RecoveryLog:
         and schedule: the orchestrator pre-stages the image on the
         destination before the scheduler re-admits the job)."""
         if self.current is not None:
-            self.current["t_transfer_start"] = t_start
-            self.current["t_transfer_end"] = t_end
-            self.current["meta"].update(meta)
+            inc = self.current
+            inc["t_transfer_start"] = t_start
+            inc["t_transfer_end"] = t_end
+            inc["meta"].update(meta)
+            self._span(inc, "recovery.transfer", t_start, t_end)
 
     def mark_scheduled(self, t: float) -> None:
         if self.current is not None:
-            self.current["t_scheduled"] = t
+            inc = self.current
+            inc["t_scheduled"] = t
+            # transfer (if any) happens inside the detect->schedule
+            # window; the schedule span starts where it ended so the
+            # trace rows butt up instead of overlapping
+            anchor = (inc["t_transfer_end"]
+                      if inc.get("t_transfer_end") is not None
+                      else inc["t_detect"])
+            self._span(inc, "recovery.schedule", anchor, t)
 
     def mark_restored(self, t: float, restored_step: int,
                       **meta: Any) -> None:
         if self.current is not None:
-            self.current["t_restored"] = t
-            self.current["restored_step"] = restored_step
-            self.current["meta"].update(meta)
+            inc = self.current
+            inc["t_restored"] = t
+            inc["restored_step"] = restored_step
+            inc["meta"].update(meta)
+            self._span(inc, "recovery.restore", inc.get("t_scheduled"), t,
+                       restored_step=restored_step)
 
     def mark_materialized(self, t: float, **meta: Any) -> None:
         """The lazy background stream finished: the whole image is on
@@ -101,11 +138,20 @@ class RecoveryLog:
                     and inc.get("t_materialized") is None:
                 inc["t_materialized"] = t
                 inc["meta"].update(meta)
+                self._span(inc, "recovery.restore_background",
+                           inc["t_restored"], t)
                 return
 
     def mark_caught_up(self, t: float) -> None:
         if self.current is not None:
-            self.current["t_caught_up"] = t
+            inc = self.current
+            inc["t_caught_up"] = t
+            self._span(inc, "recovery.replay", inc.get("t_restored"), t,
+                       step=inc["step_at_interrupt"])
+            obs_journal.emit("recovery", "incident_closed",
+                             job=self.job_id, cause=inc["cause"],
+                             step=inc["step_at_interrupt"],
+                             restored_step=inc["restored_step"])
 
     # ------------------------------------------------------------ report
     @staticmethod

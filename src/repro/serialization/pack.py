@@ -45,6 +45,8 @@ import msgpack
 import numpy as np
 
 from repro.chaos import hooks as chaos_hooks
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 try:
     import zstandard as zstd
@@ -329,11 +331,18 @@ class PackWriterV2:
         for f in self._files:
             f.write(MAGIC2)
             f.write(struct.pack("<Q", 0))            # index placeholder
+        # named threads: span/thread attribution in the obs plane (and
+        # legible py-spy dumps) — "which stripe appender is slow" needs
+        # a stable identity per worker; they inherit the constructing
+        # thread's span context (job attribution) for detail spans
+        self._obs_ctx = obs_trace.current_context()
         self._comp_threads = [
-            threading.Thread(target=self._compress_loop, daemon=True)
-            for _ in range(workers)]
+            threading.Thread(target=self._compress_loop, daemon=True,
+                             name=f"repro-pack-compress-{i}")
+            for i in range(workers)]
         self._stripe_threads = [
-            threading.Thread(target=self._stripe_loop, args=(k,), daemon=True)
+            threading.Thread(target=self._stripe_loop, args=(k,),
+                             daemon=True, name=f"repro-pack-stripe-{k}")
             for k in range(stripes)]
         for t in self._comp_threads + self._stripe_threads:
             t.start()
@@ -351,64 +360,99 @@ class PackWriterV2:
             except queue.Full:
                 continue
 
+    def _compress_one(self, part) -> Tuple[Any, str]:
+        data, codec = part, "raw"
+        if self._compress:
+            t0 = time.perf_counter()
+            comp, cname = _compress_chunk(part, self._level)
+            if len(comp) < len(part) * 0.9:
+                data, codec = comp, cname
+            with self._stats_lock:
+                self.compress_s += time.perf_counter() - t0
+        return data, codec
+
     def _compress_loop(self) -> None:
         try:
-            while True:
-                item = self._comp_q.get()
-                if item is _DONE:
-                    return
-                rec, j, part, stripe, rcrc = item
-                if self._errors:
-                    self._chunk_done()
-                    continue                           # drain without work
-                data, codec = part, "raw"
-                if self._compress:
-                    t0 = time.perf_counter()
-                    comp, cname = _compress_chunk(part, self._level)
-                    if len(comp) < len(part) * 0.9:
-                        data, codec = comp, cname
-                    with self._stats_lock:
-                        self.compress_s += time.perf_counter() - t0
-                scrc = crc32(data)
-                self._put(self._stripe_qs[stripe],
-                          (rec, j, data, len(part), scrc, rcrc, codec))
+            with obs_trace.context(**self._obs_ctx):
+                self._compress_loop_inner()
         except BaseException as e:                     # pragma: no cover
             self._errors.append(e)
 
+    def _compress_loop_inner(self) -> None:
+        while True:
+            item = self._comp_q.get()
+            if item is _DONE:
+                return
+            rec, j, part, stripe, rcrc = item
+            if self._errors:
+                self._chunk_done()
+                continue                               # drain without work
+            # per-chunk spans only in detail mode: this loop is the
+            # hot path the disabled-overhead gate protects, so the
+            # guard is one module-attribute load
+            tr = obs_trace.TRACER
+            if tr is not None and tr.detail:
+                with tr.begin("pack.compress",
+                              {"chunk": j, "nbytes": len(part)}):
+                    data, codec = self._compress_one(part)
+            else:
+                data, codec = self._compress_one(part)
+            scrc = crc32(data)
+            self._put(self._stripe_qs[stripe],
+                      (rec, j, data, len(part), scrc, rcrc, codec))
+
+    def _append_one(self, f, k: int, rec, j: int, data, raw_n: int,
+                    scrc: int, rcrc: int, codec: str) -> None:
+        t0 = time.perf_counter()
+        off = f.tell()
+        f.write(data)
+        if chaos_hooks.INJECTOR is not None:
+            # chaos: torn-write site — a handler may corrupt the
+            # bytes just written (it must restore the file
+            # position); the stored CRC already in flight then no
+            # longer matches what is on disk
+            chaos_hooks.fire("pack.chunk", file=f, offset=off,
+                             data=data, dtype=rec["dtype"],
+                             stripe=k, base=self.base)
+        with self._stats_lock:
+            self.io_s += time.perf_counter() - t0
+            self.stripe_bytes[k] += len(data)
+        # each chunk slot is written exactly once
+        rec["chunks"][j] = {
+            "stripe": k, "offset": off, "nbytes": len(data),
+            "raw_nbytes": raw_n, "crc32": scrc, "raw_crc32": rcrc,
+            "codec": codec,
+        }
+
     def _stripe_loop(self, k: int) -> None:
         try:
-            f = self._files[k]
-            while True:
-                item = self._stripe_qs[k].get()
-                if item is _DONE:
-                    return
-                rec, j, data, raw_n, scrc, rcrc, codec = item
-                if self._errors:
-                    self._chunk_done()
-                    continue
-                t0 = time.perf_counter()
-                off = f.tell()
-                f.write(data)
-                if chaos_hooks.INJECTOR is not None:
-                    # chaos: torn-write site — a handler may corrupt the
-                    # bytes just written (it must restore the file
-                    # position); the stored CRC already in flight then no
-                    # longer matches what is on disk
-                    chaos_hooks.fire("pack.chunk", file=f, offset=off,
-                                     data=data, dtype=rec["dtype"],
-                                     stripe=k, base=self.base)
-                with self._stats_lock:
-                    self.io_s += time.perf_counter() - t0
-                    self.stripe_bytes[k] += len(data)
-                # each chunk slot is written exactly once
-                rec["chunks"][j] = {
-                    "stripe": k, "offset": off, "nbytes": len(data),
-                    "raw_nbytes": raw_n, "crc32": scrc, "raw_crc32": rcrc,
-                    "codec": codec,
-                }
-                self._chunk_done()
+            with obs_trace.context(**self._obs_ctx):
+                self._stripe_loop_inner(k)
         except BaseException as e:                     # pragma: no cover
             self._errors.append(e)
+
+    def _stripe_loop_inner(self, k: int) -> None:
+        f = self._files[k]
+        while True:
+            item = self._stripe_qs[k].get()
+            if item is _DONE:
+                return
+            rec, j, data, raw_n, scrc, rcrc, codec = item
+            if self._errors:
+                self._chunk_done()
+                continue
+            tr = obs_trace.TRACER
+            if tr is not None and tr.detail:
+                with tr.begin("pack.append",
+                              {"stripe": k, "chunk": j,
+                               "nbytes": len(data)}):
+                    self._append_one(f, k, rec, j, data, raw_n,
+                                     scrc, rcrc, codec)
+            else:
+                self._append_one(f, k, rec, j, data, raw_n,
+                                 scrc, rcrc, codec)
+            obs_metrics.counter_add("pack.chunks")
+            self._chunk_done()
 
     def _chunk_done(self) -> None:
         with self._flush_cv:
@@ -420,6 +464,12 @@ class PackWriterV2:
         (records fully populated) without closing the pack — the
         concurrent-capture validate pass needs the speculated chunk
         metadata while the stripe set stays open for re-capture."""
+        obs_metrics.gauge_set("pack.queue_depth", self._comp_q.qsize())
+        with obs_trace.span("pack.flush",
+                            outstanding=self._outstanding):
+            self._flush(timeout)
+
+    def _flush(self, timeout: Optional[float] = None) -> None:
         deadline = (time.perf_counter() + timeout) if timeout else None
         with self._flush_cv:
             while self._outstanding > 0 and not self._errors:

@@ -31,6 +31,9 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
 from repro.core.snapshot_io import MANIFEST, SnapshotStore, snapshot_dir
+from repro.obs import journal as obs_journal
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serialization.integrity import atomic_write_json, read_json
 from repro.serialization.pack import (PackReaderV2, open_pack,
                                       write_pack_v2_from_chunks)
@@ -87,13 +90,26 @@ class DeltaReplicator:
         t0 = time.perf_counter()
         stats = _fresh_stats()
         src = SnapshotStore(run_dir)
-        for s in transfer_closure(src, step):
-            self._push_step(run_dir, s, stats)
+        with obs_trace.span("transfer.push", step=step) as sp:
+            for s in transfer_closure(src, step):
+                self._push_step(run_dir, s, stats)
+            sp.set(bytes_sent=stats["bytes_sent"],
+                   chunks_sent=stats["chunks_sent"],
+                   chunks_reused=stats["chunks_reused"])
         stats["push_s"] = time.perf_counter() - t0
         stats["step"] = step
         stats["source"] = os.path.abspath(run_dir)
         self.last_stats = stats
         self.store.log_transfer(stats)
+        for k in ("bytes_sent", "bytes_reused", "chunks_sent",
+                  "chunks_reused", "corrupt_objects_healed"):
+            obs_metrics.counter_add(f"transfer.{k}", stats[k])
+        obs_journal.emit("transfer", "push", step=step,
+                         bytes_sent=stats["bytes_sent"],
+                         bytes_reused=stats["bytes_reused"],
+                         chunks_sent=stats["chunks_sent"],
+                         chunks_reused=stats["chunks_reused"],
+                         push_s=stats["push_s"])
         return stats
 
     def _push_step(self, run_dir: str, step: int,
@@ -148,21 +164,26 @@ class DeltaReplicator:
             self._copy_file(src_base, dst_base, stats)
             return
         with reader:
-            chunks = [c for _n, _j, c in reader.own_chunks()]
-            keys = [chunk_key(c) for c in chunks]
-            have = self.store.have(keys)               # negotiate
-            want = [c for c, k in zip(chunks, keys) if k not in have]
+            with obs_trace.span("transfer.negotiate") as sp:
+                chunks = [c for _n, _j, c in reader.own_chunks()]
+                keys = [chunk_key(c) for c in chunks]
+                have = self.store.have(keys)           # negotiate
+                want = [c for c, k in zip(chunks, keys) if k not in have]
+                sp.set(chunks=len(chunks), have=len(have),
+                       want=len(want))
             for c, k in zip(chunks, keys):
                 if k in have:
                     stats["chunks_reused"] += 1
                     stats["bytes_reused"] += c["nbytes"]
-            self._ship(reader, want, stats)            # striped + parallel
+            with obs_trace.span("transfer.ship", chunks=len(want)):
+                self._ship(reader, want, stats)        # striped + parallel
             footer = {"format": 2, "stripes": reader.stripes,
                       "chunk_bytes": reader.chunk_bytes,
                       "entries": reader.index}
-            write_pack_v2_from_chunks(
-                dst_base, footer,
-                fetch=lambda c: self._fetch(reader, c, stats))
+            with obs_trace.span("transfer.materialize"):
+                write_pack_v2_from_chunks(
+                    dst_base, footer,
+                    fetch=lambda c: self._fetch(reader, c, stats))
 
     def _ship(self, reader: PackReaderV2, want: List[Dict[str, Any]],
               stats: Dict[str, Any]) -> None:
