@@ -81,7 +81,8 @@ def _restore_wall(run_dir: str) -> float:
 
 
 def run(steps: int = 6, entries: int = 16, entry_kb: int = 128,
-        mutate: float = 0.25, seed: int = 0, repeats: int = 3) -> None:
+        mutate: float = 0.25, seed: int = 0, repeats: int = 3,
+        precopy: bool = False) -> None:
     from repro.core.replication import DirReplicator
     from repro.transfer import DeltaReplicator
     from repro.transfer.delta import transfer_closure
@@ -159,10 +160,76 @@ def run(steps: int = 6, entries: int = 16, entry_kb: int = 128,
               st["bytes_sent"] / max(full_bytes, 1))
         _emit("transfer.cold_vs_full.byte_ratio",
               RECORDS["transfer.cold.bytes"] / max(full_bytes, 1))
+
+        if precopy:
+            _run_precopy(src, session, final, closure, best_of, seed)
     finally:
         shutil.rmtree(src, ignore_errors=True)
         for d in scratch:
             shutil.rmtree(d, ignore_errors=True)
+
+
+def _run_precopy(src, session, final, closure, best_of, seed) -> None:
+    """Pre-copy migration blackout vs stop-and-copy blackout.
+
+    Stop-and-copy freezes the job for the entire cold push (the whole
+    chain ships inside the blackout).  Pre-copy ships the chain's history
+    as live rounds while the job keeps stepping — the blackout is only
+    the frozen residual round, which carries the final delta.  Byte
+    counts are deterministic given ``--seed``; the wall ratio
+    ``transfer.precopy.blackout_vs_stopcopy`` is the CI-gated headline
+    (residual push is O(delta), stop-and-copy is O(image)).
+    """
+    from repro.core.engine import SnapshotEngine
+    from repro.transfer import DeltaReplicator, summarize_rounds
+
+    # stop-and-copy blackout: one frozen cold push of the whole closure
+    def stopcopy(target):
+        st = DeltaReplicator(target).push(src, final)
+        return st["push_s"], st
+
+    sc_wall, sc_st, _t = best_of(stopcopy)
+    sc_bytes = sc_st["bytes_sent"]
+    _emit("transfer.stopcopy.blackout_s", sc_wall, "s")
+
+    # pre-copy: the chain prefix ships as live rounds (the job would
+    # still be stepping); only the residual round is frozen
+    def precopy_run(target):
+        rep = DeltaReplicator(target)
+        tag = f"bench-{seed}"
+        for s in closure[:-1]:
+            rep.push_round(src, s, tag)
+        resid = rep.push_round(src, final, tag, residual=True)
+        summary = summarize_rounds(rep.round_state(tag))
+        return resid["wall_s"], summary
+
+    pc_wall, summary, target = best_of(precopy_run)
+
+    # correctness, in-bench: the destination image is bit-exact and the
+    # job resumes at the migrated step (zero replay)
+    assert SnapshotEngine(target, backend="host").latest_step() == final, \
+        "pre-copy destination lost the migrated step"
+    eng_src = SnapshotEngine(src, backend="host")
+    eng_dst = SnapshotEngine(target, backend="host")
+    eng_src.attach(lambda: {"train_state": None})
+    eng_dst.attach(lambda: {"train_state": None})
+    a = eng_src.restore(step=final)["train_state"]
+    b = eng_dst.restore(step=final)["train_state"]
+    assert sorted(a) == sorted(b), "pre-copy destination entry set differs"
+    for k in a:
+        assert np.array_equal(a[k], b[k]), \
+            f"pre-copy destination not bit-exact at entry {k!r}"
+
+    _emit("transfer.precopy.rounds", summary["rounds_completed"])
+    _emit("transfer.precopy.round_bytes_total",
+          summary["precopy_bytes"], "B")
+    _emit("transfer.precopy.residual_bytes",
+          summary["residual_bytes"], "B")
+    _emit("transfer.precopy.residual_bytes_ratio",
+          summary["residual_bytes"] / max(sc_bytes, 1))
+    _emit("transfer.precopy.blackout_s", pc_wall, "s")
+    _emit("transfer.precopy.blackout_vs_stopcopy",
+          pc_wall / max(sc_wall, 1e-9))
 
 
 def main(argv=None) -> int:
@@ -176,11 +243,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repeats per mode (min wins)")
+    ap.add_argument("--precopy", action="store_true",
+                    help="also measure pre-copy migration blackout vs "
+                         "stop-and-copy (transfer.precopy.* rows)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all records as JSON (BENCH_transfer.json)")
     args = ap.parse_args(argv)
     run(steps=args.steps, entries=args.entries, entry_kb=args.entry_kb,
-        mutate=args.mutate, seed=args.seed, repeats=args.repeats)
+        mutate=args.mutate, seed=args.seed, repeats=args.repeats,
+        precopy=args.precopy)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(RECORDS, f, indent=2)

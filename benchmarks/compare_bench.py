@@ -49,6 +49,8 @@ def classify(name: str) -> str:
         return "obs_disabled"   # obs acceptance bound: absolute gate
     if "overhead_ratio" in low:
         return "obs_enabled"    # obs acceptance bound: absolute gate
+    if "blackout_vs_stopcopy" in low:
+        return "blackout"       # pre-copy acceptance bound: absolute gate
     if "speedup" in low:
         return "speedup"
     if "dedup" in low:
@@ -78,6 +80,12 @@ FROZEN_RATIO_CEILING = 0.10
 # ceilings: the ratios are the contract, not the baseline values.
 OBS_ENABLED_RATIO_CEILING = 1.03
 OBS_DISABLED_RATIO_CEILING = 1.005
+# pre-copy live migration's acceptance criterion (ISSUE 9): the frozen
+# residual push (the blackout the job observes) must stay at or below
+# this fraction of the stop-and-copy wall — the whole point of shipping
+# delta rounds while the job still steps.  Absolute, like the others:
+# the ratio is the contract.
+PRECOPY_BLACKOUT_CEILING = 0.20
 
 
 def check_metric(name: str, base: float, fresh: float,
@@ -106,6 +114,9 @@ def check_metric(name: str, base: float, fresh: float,
     if kind == "obs_disabled":                # absolute acceptance bound
         reg = fresh / base - 1
         return fresh <= OBS_DISABLED_RATIO_CEILING, reg
+    if kind == "blackout":                    # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= PRECOPY_BLACKOUT_CEILING, reg
     if kind == "speedup":                     # higher is better
         if fresh <= 0:
             return False, float("inf")
@@ -150,6 +161,13 @@ def compare_file(fresh_path: str, base_path: str, tol_bytes: float,
                     f"{name}: fresh {fv:.3f} exceeds the soft-freeze "
                     f"acceptance ceiling {FROZEN_RATIO_CEILING} "
                     f"(concurrent frozen window vs sync dump)")
+                continue
+            if kind == "blackout":
+                problems.append(
+                    f"{name}: fresh {fv:.3f} exceeds the pre-copy "
+                    f"migration blackout ceiling "
+                    f"{PRECOPY_BLACKOUT_CEILING} (frozen residual push "
+                    f"vs stop-and-copy wall)")
                 continue
             if kind in ("obs_enabled", "obs_disabled"):
                 ceil = (OBS_ENABLED_RATIO_CEILING

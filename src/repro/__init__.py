@@ -7,7 +7,8 @@ runtime (jax) is deferred until an API symbol is actually touched.
 __version__ = "0.2.0"
 
 _API = ("CheckpointOptions", "CheckpointSession", "FrozenCheckpoint",
-        "CheckReport", "OptionsError", "capabilities", "check")
+        "CheckReport", "OptionsError", "TransferPolicy", "capabilities",
+        "check")
 
 __all__ = list(_API) + ["__version__"]
 

@@ -13,7 +13,8 @@ Everything else (SnapshotEngine, plugins, backends) is mechanism; this
 package is policy + lifecycle.  The image directories it produces are
 operable offline via ``python -m repro`` (the CRIT analogue).
 """
-from repro.api.options import CheckpointOptions, OptionsError  # noqa: F401
+from repro.api.options import (CheckpointOptions,  # noqa: F401
+                               OptionsError, TransferPolicy)
 from repro.api.capabilities import (CheckReport, capabilities,  # noqa: F401
                                     check)
 from repro.api.session import (CheckpointSession,  # noqa: F401

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Dict, Optional, Tuple
 
 _MODES = ("sync", "async")
@@ -24,6 +25,16 @@ _CAPTURES = ("sync", "concurrent")
 # env-var names, one per field (the `criu_set_*` <-> CRIU_* convention)
 _ENV_PREFIX = "REPRO_CKPT_"
 
+# deprecation warnings fire once per process, keyed by what was deprecated
+_WARNED: set = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
 
 class OptionsError(ValueError):
     """An invalid CheckpointOptions field combination."""
@@ -33,6 +44,130 @@ def auto_io_threads() -> int:
     """The io_threads=0 auto-sizing policy — the single source of truth
     for every data-plane consumer (engine, snapshot writer, CLI)."""
     return min(8, max(2, os.cpu_count() or 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPolicy:
+    """How snapshot bytes reach a peer — the structured replacement for
+    the stringly ``transfer=`` / ``transfer_workers=`` knobs.
+
+    mode                "copy" (whole files, skipped when size+mtime
+                        match) or "delta" (content-addressed: only chunks
+                        missing from the peer's CAS ship — the cross-host
+                        migration path).
+    workers             parallel chunk-ship lanes for delta transfer;
+                        0 = auto-size like io_threads.
+    precopy_rounds      iterative pre-copy live migration: the maximum
+                        number of delta rounds pushed while the job keeps
+                        stepping before the residual freeze.  0 disables
+                        pre-copy (stop-and-copy, the pre-PR-9 behavior);
+                        > 0 requires mode="delta" (rounds are diffed via
+                        pack v2's per-chunk raw-CRC content hashes in the
+                        destination CAS).
+    max_blackout_ms     blackout budget: the convergence controller
+                        freezes for the residual round only once the
+                        predicted residual-push wall fits this budget
+                        (or a cap trips and it falls back to
+                        stop-and-copy).  None = freeze as soon as a
+                        round ships zero new bytes or stops shrinking.
+    residual_bytes_cap  fallback trip-wire: when the cumulative pre-copy
+                        bytes exceed this cap the controller gives up on
+                        convergence and falls back to stop-and-copy.
+                        None = no byte cap (round cap still applies).
+    """
+
+    mode: str = "copy"
+    workers: int = 0
+    precopy_rounds: int = 0
+    max_blackout_ms: Optional[float] = None
+    residual_bytes_cap: Optional[int] = None
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        if self.mode not in _TRANSFERS:
+            raise OptionsError(f"TransferPolicy.mode must be one of "
+                               f"{_TRANSFERS}, got {self.mode!r}")
+        if not isinstance(self.workers, int) or self.workers < 0:
+            raise OptionsError("TransferPolicy.workers must be an int "
+                               f">= 0, got {self.workers!r}")
+        if not isinstance(self.precopy_rounds, int) or \
+                self.precopy_rounds < 0:
+            raise OptionsError("TransferPolicy.precopy_rounds must be an "
+                               f"int >= 0, got {self.precopy_rounds!r}")
+        if self.precopy_rounds > 0 and self.mode != "delta":
+            raise OptionsError(
+                "TransferPolicy.precopy_rounds > 0 requires mode='delta': "
+                "pre-copy rounds diff against the destination CAS via "
+                "pack v2 content hashes, which a raw copy does not have")
+        if self.max_blackout_ms is not None:
+            if not isinstance(self.max_blackout_ms, (int, float)) or \
+                    self.max_blackout_ms <= 0:
+                raise OptionsError(
+                    "TransferPolicy.max_blackout_ms must be a number > 0 "
+                    f"or None, got {self.max_blackout_ms!r}")
+            if self.precopy_rounds == 0:
+                raise OptionsError(
+                    "TransferPolicy.max_blackout_ms needs pre-copy rounds "
+                    "to converge within: set precopy_rounds > 0")
+        if self.residual_bytes_cap is not None:
+            if not isinstance(self.residual_bytes_cap, int) or \
+                    self.residual_bytes_cap <= 0:
+                raise OptionsError(
+                    "TransferPolicy.residual_bytes_cap must be an int > 0 "
+                    f"or None, got {self.residual_bytes_cap!r}")
+            if self.precopy_rounds == 0:
+                raise OptionsError(
+                    "TransferPolicy.residual_bytes_cap only bounds "
+                    "pre-copy rounds: set precopy_rounds > 0")
+
+    @property
+    def precopy_enabled(self) -> bool:
+        return self.mode == "delta" and self.precopy_rounds > 0
+
+    def replace(self, **changes) -> "TransferPolicy":
+        return dataclasses.replace(self, **changes)
+
+    # ---------------------------------------------------------- spec i/o
+    # one compact "k=v,k=v" string so the whole policy rides in a single
+    # REPRO_CKPT_TRANSFER_POLICY variable (None fields omitted)
+    def to_spec(self) -> str:
+        parts = [f"mode={self.mode}", f"workers={self.workers}",
+                 f"precopy_rounds={self.precopy_rounds}"]
+        if self.max_blackout_ms is not None:
+            parts.append(f"max_blackout_ms={self.max_blackout_ms!r}")
+        if self.residual_bytes_cap is not None:
+            parts.append(f"residual_bytes_cap={self.residual_bytes_cap}")
+        return ",".join(parts)
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "TransferPolicy":
+        convs = {"mode": str, "workers": int, "precopy_rounds": int,
+                 "max_blackout_ms": float, "residual_bytes_cap": int}
+        kwargs = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise OptionsError(
+                    f"TransferPolicy spec parts must be k=v, got {part!r} "
+                    f"in {spec!r}")
+            k, v = part.split("=", 1)
+            k = k.strip()
+            if k not in convs:
+                raise OptionsError(
+                    f"unknown TransferPolicy spec key {k!r} in {spec!r}")
+            try:
+                kwargs[k] = convs[k](v.strip())
+            except ValueError as e:
+                raise OptionsError(
+                    f"bad TransferPolicy spec value for {k}: {e}") from e
+        return cls(**kwargs)
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +188,19 @@ class CheckpointOptions:
                      on-demand-parallelism optimization).
     replicate_to     peer directory for snapshot replication (Gemini-style);
                      None disables.
-    transfer         how bytes reach the replication peer: "copy" (whole
-                     files, skipped when size+mtime match) or "delta"
-                     (content-addressed: only chunks missing from the
-                     peer's CAS ship — the cross-host migration path).
-    transfer_workers parallel chunk-ship lanes for delta transfer;
-                     0 = auto-size like io_threads.
+    transfer         DEPRECATED legacy spelling of transfer_policy.mode;
+                     accepted (with a one-time DeprecationWarning) and
+                     mirrored from the resolved policy so old readers
+                     keep working.  Pass transfer_policy instead.
+    transfer_workers DEPRECATED legacy spelling of
+                     transfer_policy.workers; same shim as transfer.
+    transfer_policy  structured TransferPolicy (mode / workers /
+                     precopy_rounds / max_blackout_ms /
+                     residual_bytes_cap) governing how bytes reach the
+                     replication peer and whether migration pre-copies
+                     live rounds before the residual freeze.  None =
+                     default policy (copy, stop-and-copy), or whatever
+                     the legacy kwargs map to.
     verify_restore   CRC-verify images before restoring from them (both the
                      newest-valid scan and explicitly requested steps).
     restore_mode     "eager" (default: the whole image is materialized
@@ -102,8 +244,9 @@ class CheckpointOptions:
     lock_timeout_s: float = 10.0
     restore_threads: int = 0
     replicate_to: Optional[str] = None
-    transfer: str = "copy"
-    transfer_workers: int = 0
+    transfer: Optional[str] = None
+    transfer_workers: Optional[int] = None
+    transfer_policy: Optional[TransferPolicy] = None
     verify_restore: bool = True
     restore_mode: str = "eager"
     critical_states: Optional[Tuple[str, ...]] = None
@@ -118,7 +261,50 @@ class CheckpointOptions:
             # frozen dataclass: normalize to a hashable tuple in place
             object.__setattr__(self, "critical_states",
                                tuple(self.critical_states))
+        self._resolve_transfer_policy()
         self.validate()
+
+    def _resolve_transfer_policy(self) -> None:
+        """Fold the deprecated transfer/transfer_workers kwargs into
+        transfer_policy, then mirror the policy back onto them so legacy
+        readers (and dataclass equality across old/new spellings) keep
+        working."""
+        policy = self.transfer_policy
+        if policy is None:
+            legacy = {}
+            if self.transfer is not None:
+                legacy["mode"] = self.transfer
+            if self.transfer_workers is not None:
+                legacy["workers"] = self.transfer_workers
+            if legacy:
+                _warn_once(
+                    "options.transfer-kwargs",
+                    "CheckpointOptions(transfer=..., transfer_workers=...) "
+                    "is deprecated; pass "
+                    "transfer_policy=TransferPolicy(mode=..., workers=...) "
+                    "instead")
+            policy = TransferPolicy(**legacy)
+        else:
+            if not isinstance(policy, TransferPolicy):
+                raise OptionsError(
+                    "transfer_policy must be a TransferPolicy or None, "
+                    f"got {policy!r}")
+            if self.transfer is not None and self.transfer != policy.mode:
+                raise OptionsError(
+                    f"conflicting transfer settings: legacy "
+                    f"transfer={self.transfer!r} vs "
+                    f"transfer_policy.mode={policy.mode!r} — drop the "
+                    f"legacy kwarg")
+            if self.transfer_workers is not None and \
+                    self.transfer_workers != policy.workers:
+                raise OptionsError(
+                    f"conflicting transfer settings: legacy "
+                    f"transfer_workers={self.transfer_workers!r} vs "
+                    f"transfer_policy.workers={policy.workers!r} — drop "
+                    f"the legacy kwarg")
+        object.__setattr__(self, "transfer_policy", policy)
+        object.__setattr__(self, "transfer", policy.mode)
+        object.__setattr__(self, "transfer_workers", policy.workers)
 
     # ------------------------------------------------------------ checks
     def validate(self) -> None:
@@ -136,13 +322,10 @@ class CheckpointOptions:
                                f"got {self.restore_threads!r}")
         if self.replicate_to is not None and not self.replicate_to:
             raise OptionsError("replicate_to must be a path or None")
-        if self.transfer not in _TRANSFERS:
-            raise OptionsError(f"transfer must be one of {_TRANSFERS}, "
-                               f"got {self.transfer!r}")
-        if not isinstance(self.transfer_workers, int) or \
-                self.transfer_workers < 0:
-            raise OptionsError("transfer_workers must be an int >= 0, "
-                               f"got {self.transfer_workers!r}")
+        # transfer/transfer_workers are mirrors of transfer_policy by the
+        # time validate() runs; the policy validates itself
+        if self.transfer_policy is not None:
+            self.transfer_policy.validate()
         if self.restore_mode not in _RESTORE_MODES:
             raise OptionsError(f"restore_mode must be one of "
                                f"{_RESTORE_MODES}, got {self.restore_mode!r}")
@@ -191,6 +374,21 @@ class CheckpointOptions:
                     "pause must observe the committed bytes")
 
     def replace(self, **changes) -> "CheckpointOptions":
+        if "transfer_policy" in changes:
+            # a new policy wins outright; drop the mirrored legacy fields
+            # so _resolve_transfer_policy doesn't see a stale conflict
+            changes.setdefault("transfer", None)
+            changes.setdefault("transfer_workers", None)
+        elif "transfer" in changes or "transfer_workers" in changes:
+            # legacy-field replace: fold into the current policy so the
+            # other policy knobs (precopy_rounds, budgets) survive
+            pol_changes = {}
+            if "transfer" in changes:
+                pol_changes["mode"] = changes["transfer"]
+            if "transfer_workers" in changes:
+                pol_changes["workers"] = changes["transfer_workers"]
+            changes["transfer_policy"] = \
+                self.transfer_policy.replace(**pol_changes)
         return dataclasses.replace(self, **changes)
 
     def effective_io_threads(self) -> int:
@@ -217,6 +415,20 @@ class CheckpointOptions:
             specs = tuple(s.strip() for s in raw.split(",") if s.strip())
             return specs or None
 
+        # the structured policy var wins; the legacy vars still map (with
+        # a one-time DeprecationWarning) so old scheduler configs work
+        policy = get("TRANSFER_POLICY", TransferPolicy.from_spec, None)
+        legacy_mode = get("TRANSFER", str, None)
+        legacy_workers = get("TRANSFER_WORKERS", int, None)
+        if policy is not None:
+            legacy_mode = legacy_workers = None
+        elif legacy_mode is not None or legacy_workers is not None:
+            _warn_once(
+                "options.transfer-env",
+                f"{_ENV_PREFIX}TRANSFER / {_ENV_PREFIX}TRANSFER_WORKERS "
+                f"are deprecated; set {_ENV_PREFIX}TRANSFER_POLICY "
+                f"(e.g. 'mode=delta,workers=2') instead")
+
         return cls(
             mode=get("MODE", str, cls.mode),
             incremental=get("INCREMENTAL", as_bool, cls.incremental),
@@ -225,9 +437,9 @@ class CheckpointOptions:
             lock_timeout_s=get("LOCK_TIMEOUT_S", float, cls.lock_timeout_s),
             restore_threads=get("RESTORE_THREADS", int, cls.restore_threads),
             replicate_to=get("REPLICATE_TO", str, cls.replicate_to),
-            transfer=get("TRANSFER", str, cls.transfer),
-            transfer_workers=get("TRANSFER_WORKERS", int,
-                                 cls.transfer_workers),
+            transfer=legacy_mode,
+            transfer_workers=legacy_workers,
+            transfer_policy=policy,
             verify_restore=get("VERIFY_RESTORE", as_bool, cls.verify_restore),
             restore_mode=get("RESTORE_MODE", str, cls.restore_mode),
             critical_states=get("CRITICAL_STATES", as_specs,
@@ -248,8 +460,7 @@ class CheckpointOptions:
             _ENV_PREFIX + "KEEP": str(self.keep),
             _ENV_PREFIX + "LOCK_TIMEOUT_S": repr(self.lock_timeout_s),
             _ENV_PREFIX + "RESTORE_THREADS": str(self.restore_threads),
-            _ENV_PREFIX + "TRANSFER": self.transfer,
-            _ENV_PREFIX + "TRANSFER_WORKERS": str(self.transfer_workers),
+            _ENV_PREFIX + "TRANSFER_POLICY": self.transfer_policy.to_spec(),
             _ENV_PREFIX + "VERIFY_RESTORE": "1" if self.verify_restore
             else "0",
             _ENV_PREFIX + "RESTORE_MODE": self.restore_mode,

@@ -155,6 +155,15 @@ class CheckpointSession:
         self._feed_planner()
         return path
 
+    def checkpoint_running(self, step: int) -> str:
+        """Commit a snapshot while minimizing the pause the job observes
+        — the capture each pre-copy migration round rides on.  Under
+        ``capture="concurrent"`` the job is only paused for the pin +
+        validate windows; otherwise this is an ordinary checkpoint."""
+        path = self.engine.snapshot_while_running(step)
+        self._feed_planner()
+        return path
+
     def checkpoint_begin(self, step: int):
         """Start a soft-freeze capture (requires
         ``CheckpointOptions(capture="concurrent")``) and return its

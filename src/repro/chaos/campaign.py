@@ -31,6 +31,7 @@ import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.api import TransferPolicy
 from repro.orchestrator.job import JobSpec
 from repro.orchestrator.orchestrator import Orchestrator, OrchestratorConfig
 from repro.transfer.cas import ChunkStore, default_cas_dir
@@ -192,8 +193,9 @@ def run_campaign(run_dir: str, jobs: int = 100, hosts: int = 20,
                                capture=capture)
     cfg = OrchestratorConfig(
         capacity=max(2, min(jobs, 2 * hosts)), slice_steps=2,
-        heartbeat_deadline_s=0.05, hosts=hosts, transfer="delta",
-        transfer_workers=1, max_ticks=max_ticks)
+        heartbeat_deadline_s=0.05, hosts=hosts,
+        transfer_policy=TransferPolicy(mode="delta", workers=1),
+        max_ticks=max_ticks)
     injector = FaultInjector(plan, clock=time.perf_counter)
     orch = Orchestrator(run_dir, specs, workload_factory=factory,
                         config=cfg)

@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
-from repro.api import CheckpointOptions, CheckpointSession
+from repro.api import CheckpointOptions, CheckpointSession, TransferPolicy
 from repro.api.session import SnapshotWriteFailed
 from repro.orchestrator.job import JobSpec
 from repro.orchestrator.workloads import job_dir_for
@@ -176,7 +176,7 @@ def make_sim_factory(base_run_dir: str,
             incremental=incremental,
             capture=capture if incremental else "sync",
             replicate_to=(job_dir + "_replica") if replicate else None,
-            transfer="delta", transfer_workers=1,
+            transfer_policy=TransferPolicy(mode="delta", workers=1),
             verify_restore=True)
         return SimWorkload(spec, job_dir, options=opts, attempt=attempt)
 

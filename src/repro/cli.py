@@ -412,7 +412,9 @@ def cmd_jobs(args) -> int:
                 if b[k] is not None)
             print(f"  incident {i}:  {b['cause']}  {phases}"
                   + (f"  replayed={b['steps_replayed']}"
-                     if b["steps_replayed"] is not None else ""))
+                     if b["steps_replayed"] is not None else "")
+                  + (f"  transfer_rounds={len(b['transfer_rounds'])}"
+                     if b["transfer_rounds"] else ""))
         for e in rec.events[-8:]:
             desc = (f"{e['from']} -> {e['to']}" if "to" in e
                     else ", ".join(f"{k}={v}" for k, v in e.items()
@@ -432,6 +434,10 @@ def cmd_jobs(args) -> int:
             "exhausted": rec.exhausted,
             "incidents": rec.recovery.totals()["incidents"],
             "recovery_s": rec.recovery.totals()["total_s"],
+            # per-round migration transfer records (pre-copy rounds +
+            # frozen residual); [] for jobs that never moved hosts
+            "transfer_rounds": [r for b in rec.recovery.breakdown()
+                                for r in b["transfer_rounds"]],
         } for rec in recs], indent=2))
         return 0
     rows = []
@@ -455,19 +461,29 @@ def cmd_orchestrate(args) -> int:
     """Run a deterministic multi-tenant scenario and assert recovery."""
     import contextlib
 
-    from repro.api import CheckpointOptions
+    from repro.api import CheckpointOptions, TransferPolicy
     from repro.obs.plane import observed
     from repro.orchestrator import run_scenario
     scenario = {"preempt": "preemption"}.get(args.scenario, args.scenario)
     opts = CheckpointOptions(mode=args.mode, pack_format=args.pack_format,
                              io_threads=args.io_threads,
                              incremental=args.incremental)
+    policy = None
+    if args.max_rounds:
+        # live pre-copy migration path: delta rounds while the job steps,
+        # freeze only when the residual fits the blackout budget
+        policy = TransferPolicy(mode="delta",
+                                precopy_rounds=args.max_rounds,
+                                max_blackout_ms=args.max_blackout_ms)
+    elif args.max_blackout_ms is not None:
+        raise SystemExit("error: --max-blackout-ms needs --max-rounds")
     plane = (contextlib.nullcontext() if args.no_trace
              else observed(args.run_dir, detail=args.trace_detail))
     with plane:
         summary = run_scenario(scenario, args.run_dir, options=opts,
                                total_steps=args.steps, kind=args.kind,
-                               capacity=args.capacity, hosts=args.hosts)
+                               capacity=args.capacity, hosts=args.hosts,
+                               transfer_policy=policy)
     if not args.no_trace:
         jpath = os.path.join(args.run_dir, "obs", "journal.jsonl")
         print(f"run journal -> {jpath} "
@@ -496,6 +512,11 @@ def cmd_orchestrate(args) -> int:
                      f"{_fmt_bytes(mig.get('bytes_reused', 0))} deduped)"
                      if mig["state"] == "transferred"
                      else f"  migration {mig['state']}")
+            if mig.get("outcome"):
+                mig_s += (f"  [pre-copy {mig['outcome']}: "
+                          f"{mig.get('rounds_completed', 0)} live "
+                          f"round(s), blackout "
+                          f"{mig.get('blackout_s', 0.0)*1e3:.1f}ms]")
         print(f"  {job_id:10s} [{j['kind']}] prio {j['priority']}: "
               f"{j['state']} at {j['step']}/{j['total_steps']} "
               f"({j['restarts']} restart(s), goodput {j['goodput']:.2f})"
@@ -507,12 +528,91 @@ def cmd_orchestrate(args) -> int:
 
 
 # ---------------------------------------------------------------- migrate
+def _verify_dest(dest: str, step: int) -> None:
+    # the transferred image must be restorable *now*, while the source
+    # still exists — a corrupt target fails here, not at restore time
+    from repro.api.options import auto_io_threads
+    from repro.core.snapshot_io import SnapshotStore
+    reader = SnapshotStore(dest).reader(step, verify=True,
+                                        io_threads=auto_io_threads())
+    try:
+        reader.verify_all()
+    finally:
+        reader.close()
+
+
+def _migrate_precopy(args, store, step: int) -> int:
+    """Offline pre-copy replay: walk the image's parent chain oldest ->
+    newest as live rounds, let the convergence controller pick the freeze
+    point, and measure the frozen residual push — the blackout — as the
+    final round.  Resumable: the round ledger lives in the target CAS."""
+    from repro.api import TransferPolicy
+    from repro.transfer import (DeltaReplicator, PrecopyController,
+                                summarize_rounds)
+    from repro.transfer.delta import transfer_closure
+    policy = TransferPolicy(mode="delta", workers=args.workers,
+                            precopy_rounds=args.max_rounds,
+                            max_blackout_ms=args.max_blackout_ms)
+    rep = DeltaReplicator(args.dest, workers=args.workers)
+    tag = (f"cli-{os.path.basename(os.path.abspath(args.run_dir))}"
+           f"-{step}")
+    ctrl = PrecopyController(policy)
+    ctrl.seed(rep.round_state(tag))
+    chain = transfer_closure(store, step)
+    outcome, reason = None, ""
+    for s in chain[:-1]:                      # live rounds: the history
+        if len(ctrl.rounds) >= policy.precopy_rounds:
+            outcome, reason = "fallback", (f"round cap "
+                                           f"{policy.precopy_rounds} hit")
+            break
+        ctrl.observe(rep.push_round(args.run_dir, s, tag))
+        d = ctrl.decide()
+        if d.action != "continue":
+            outcome = "converged" if d.action == "freeze" else "fallback"
+            reason = d.reason
+            break
+    if outcome is None:
+        outcome, reason = "converged", "history exhausted"
+    # frozen residual: the target step itself — the measured blackout
+    resid = rep.push_round(args.run_dir, step, tag, residual=True)
+    ledger = rep.round_state(tag)
+    _verify_dest(args.dest, step)
+    rep.clear_rounds(tag)
+    stats = dict(resid)
+    stats.update(summarize_rounds(ledger))
+    stats["outcome"] = outcome
+    stats["reason"] = reason
+    stats["rounds"] = ledger
+    if args.json:
+        print(json.dumps(stats, indent=2, default=str))
+        return 0
+    print(f"migrated step {step}: {args.run_dir} -> {args.dest} "
+          f"(pre-copy, {outcome}: {reason})")
+    rows = [[r["round"], r["step"],
+             "residual" if r.get("residual") else "live",
+             _fmt_bytes(r["bytes_sent"]), _fmt_bytes(r["bytes_reused"]),
+             f"{r['wall_s']*1e3:.1f}ms"] for r in ledger]
+    print(_table(rows, ["round", "step", "kind", "sent", "deduped",
+                        "wall"]))
+    print(f"  pre-copied:  {_fmt_bytes(stats['precopy_bytes'])} over "
+          f"{stats['rounds_completed']} live round(s)")
+    print(f"  blackout:    {stats['blackout_s']*1e3:.1f}ms "
+          f"({_fmt_bytes(stats['residual_bytes'])} residual)")
+    print(f"  verified:    step {step} CRC-clean at destination")
+    return 0
+
+
 def cmd_migrate(args) -> int:
     """Push snapshot image(s) from a run dir to a peer store, delta or
     full-copy, then prove the transferred image restorable (CRC)."""
-    from repro.core.snapshot_io import SnapshotStore
     store = _store(args.run_dir)
     step = args.step if args.step is not None else store.latest_step()
+    if args.max_rounds and args.transfer != "delta":
+        raise SystemExit("error: --max-rounds needs --transfer delta")
+    if args.max_blackout_ms is not None and not args.max_rounds:
+        raise SystemExit("error: --max-blackout-ms needs --max-rounds")
+    if args.max_rounds:
+        return _migrate_precopy(args, store, step)
     if args.transfer == "delta":
         from repro.transfer import DeltaReplicator
         rep = DeltaReplicator(args.dest, workers=args.workers)
@@ -528,15 +628,7 @@ def cmd_migrate(args) -> int:
             for k in ("bytes_copied", "files_copied",
                       "bytes_skipped", "files_skipped"):
                 stats[k] += st[k]
-    # the transferred image must be restorable *now*, while the source
-    # still exists — a corrupt target fails here, not at restore time
-    from repro.api.options import auto_io_threads
-    reader = SnapshotStore(args.dest).reader(step, verify=True,
-                                             io_threads=auto_io_threads())
-    try:
-        reader.verify_all()
-    finally:
-        reader.close()
+    _verify_dest(args.dest, step)
     if args.json:
         print(json.dumps(stats, indent=2, default=str))
         return 0
@@ -878,6 +970,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="simulated hosts (migrate defaults to 2)")
     p.add_argument("--incremental", action="store_true",
                    help="delta images (what the migrate transfer dedups)")
+    p.add_argument("--max-rounds", type=int, default=0, metavar="N",
+                   help="migrate via live pre-copy: up to N delta rounds "
+                        "while the job steps, then a frozen residual")
+    p.add_argument("--max-blackout-ms", type=float, default=None,
+                   metavar="MS",
+                   help="freeze only once the predicted residual push "
+                        "fits this budget (needs --max-rounds)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="also dump the full summary JSON here")
     p.add_argument("--no-trace", action="store_true",
@@ -895,6 +994,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="snapshot step (default: newest)")
     p.add_argument("--transfer", default="delta",
                    choices=["delta", "copy"])
+    p.add_argument("--max-rounds", type=int, default=0, metavar="N",
+                   help="pre-copy replay: push the image's parent chain "
+                        "as up to N live rounds before the frozen "
+                        "residual (delta only)")
+    p.add_argument("--max-blackout-ms", type=float, default=None,
+                   metavar="MS",
+                   help="convergence budget for the pre-copy controller "
+                        "(needs --max-rounds)")
     p.add_argument("--workers", type=int, default=0,
                    help="parallel ship lanes (0 = auto)")
     p.add_argument("--json", action="store_true")

@@ -4,6 +4,8 @@ Public API:
   SnapshotEngine   — lock → checkpoint → dump → unlock; restore (+elastic)
   Plugin / Hook    — CRIU-style plugin hooks
   DeviceLock       — cuda-checkpoint lock/unlock analogue
+  Replicator       — the replication protocol (capability dispatch via
+                     supports_rounds, never isinstance)
   DirReplicator / MemReplicator — Gemini-style peer replication
   MultiHostCommit  — two-phase manifest commit across hosts
 """
@@ -17,6 +19,7 @@ from repro.core.backends import (DeviceBackend, BackendError,  # noqa: F401
                                  HostNumpyBackend, available_backends,
                                  create_backend, register_backend)
 from repro.core.snapshot_io import SnapshotStore  # noqa: F401
-from repro.core.replication import DirReplicator, MemReplicator  # noqa: F401
+from repro.core.replication import (DirReplicator,  # noqa: F401
+                                    MemReplicator, Replicator)
 from repro.core.multihost import (MultiHostCommit,  # noqa: F401
                                   BarrierTimeout)

@@ -132,11 +132,11 @@ class SnapshotEngine:
         self.keep = self.options.keep
         self.replicator = replicator
         if replicator is None and self.options.replicate_to:
-            if self.options.transfer == "delta":
+            policy = self.options.transfer_policy
+            if policy is not None and policy.mode == "delta":
                 from repro.transfer import DeltaReplicator
                 self.replicator = DeltaReplicator(
-                    self.options.replicate_to,
-                    workers=self.options.transfer_workers)
+                    self.options.replicate_to, workers=policy.workers)
             else:
                 from repro.core.replication import DirReplicator
                 self.replicator = DirReplicator(self.options.replicate_to)
@@ -202,6 +202,21 @@ class SnapshotEngine:
         speculate → validate → patch → commit); callers that want the
         overlap use :meth:`begin_concurrent` and step between ``begin``
         and ``finalize``."""
+        return self.snapshot_while_running(step)
+
+    def snapshot_while_running(self, step: int) -> str:
+        """Commit a snapshot of `step` while minimizing the pause the job
+        observes — the capture primitive behind each pre-copy migration
+        round (and the body of :meth:`checkpoint`, which shares it).
+
+        With ``capture="concurrent"`` this is the soft-freeze protocol
+        (the job is only paused for the pin + validate windows, and the
+        bulk speculation overlaps its next steps); otherwise it degrades
+        to an ordinary stop-the-world dump — correctness is identical,
+        only the pause differs.  Returns the snapshot directory either
+        way, so migration code can push the image without caring which
+        capture path ran.
+        """
         if self.options.capture == "concurrent":
             handle = self.begin_concurrent(step)
             handle.wait_speculated()
@@ -468,7 +483,11 @@ class SnapshotEngine:
             # and mirror into the metrics registry; a replicator without
             # last_stats used to drop them invisibly — warn once instead
             obs_metrics.counter_add("replica.push_count")
-            rep_stats = getattr(self.replicator, "last_stats", None)
+            # the Replicator protocol's `stats` property; fall back to the
+            # legacy `last_stats` attribute for third-party replicators
+            rep_stats = getattr(self.replicator, "stats", None)
+            if not isinstance(rep_stats, dict):
+                rep_stats = getattr(self.replicator, "last_stats", None)
             if rep_stats is None:
                 obs_metrics.counter_add("replica.missing_stats")
                 obs_metrics.warn_once(

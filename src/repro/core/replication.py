@@ -23,14 +23,58 @@ counters surface in ``last_stats`` (and, via the engine, in
 For cross-host transfer that dedups at *chunk* grain against a
 content-addressed store, see :class:`repro.transfer.DeltaReplicator` —
 same ``push``/``pull_latest`` contract.
+
+The contract itself is the :class:`Replicator` protocol below: engine,
+lazy-restore, and migration code dispatch on **capability**
+(``supports_rounds``), never on ``isinstance`` of a concrete replicator.
 """
 from __future__ import annotations
 
 import os
 import shutil
-from typing import Any, Dict, Optional
+from typing import (Any, Dict, Optional, Protocol, runtime_checkable)
 
 from repro.core.snapshot_io import MANIFEST, snapshot_dir
+
+
+@runtime_checkable
+class Replicator(Protocol):
+    """What the engine and the migration plane require of a replicator.
+
+    push(run_dir, step)   ship one committed snapshot to the peer; returns
+                          a stats dict (implementation-specific counters)
+                          or None.
+    pull(run_dir, step)   re-materialize one snapshot from the peer over
+                          the local copy (the heal path); returns the step
+                          or None when the peer has no such image.
+    pull_latest(run_dir)  materialize the peer's newest image; returns its
+                          step or None.
+    stats                 the last push's counters (empty dict before any
+                          push).
+    supports_rounds       capability flag: True when the replicator can
+                          run iterative pre-copy rounds (``push_round`` /
+                          ``round_state`` — only content-addressed
+                          replicators can diff round i against round i-1).
+                          Callers gate migration pre-copy on this instead
+                          of ``isinstance(rep, DeltaReplicator)``.
+    """
+
+    def push(self, run_dir: str, step: int) -> Optional[Dict[str, Any]]:
+        ...
+
+    def pull(self, run_dir: str, step: int) -> Optional[int]:
+        ...
+
+    def pull_latest(self, run_dir: str) -> Optional[int]:
+        ...
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        ...
+
+    @property
+    def supports_rounds(self) -> bool:
+        ...
 
 
 def _same_file(src: str, dst: str) -> bool:
@@ -44,10 +88,16 @@ def _same_file(src: str, dst: str) -> bool:
 
 
 class DirReplicator:
+    supports_rounds = False    # whole-file diffing: no per-chunk rounds
+
     def __init__(self, peer_dir: str):
         self.peer_dir = peer_dir
         os.makedirs(peer_dir, exist_ok=True)
         self.last_stats: Dict[str, Any] = {}
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.last_stats
 
     def push(self, run_dir: str, step: int) -> Dict[str, Any]:
         src = snapshot_dir(run_dir, step)
@@ -110,8 +160,15 @@ class DirReplicator:
 
 
 class MemReplicator:
+    supports_rounds = False
+
     def __init__(self):
         self.images: Dict[int, Dict[str, bytes]] = {}
+        self.last_stats: Dict[str, Any] = {}
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.last_stats
 
     def push(self, run_dir: str, step: int) -> None:
         src = snapshot_dir(run_dir, step)
@@ -120,15 +177,24 @@ class MemReplicator:
             with open(os.path.join(src, n), "rb") as f:
                 blob[n] = f.read()
         self.images[step] = blob
+        self.last_stats = {"files_copied": len(blob),
+                           "bytes_copied": sum(len(b) for b in
+                                               blob.values())}
 
-    def pull_latest(self, run_dir: str) -> Optional[int]:
-        if not self.images:
+    def pull(self, run_dir: str, step: int) -> Optional[int]:
+        if step not in self.images:
             return None
-        step = max(self.images)
         dst = snapshot_dir(run_dir, step)
+        if os.path.isdir(dst):
+            shutil.rmtree(dst)
         os.makedirs(dst, exist_ok=True)
         blob = self.images[step]
         for n in [n for n in blob if n != MANIFEST] + [MANIFEST]:
             with open(os.path.join(dst, n), "wb") as f:
                 f.write(blob[n])
         return step
+
+    def pull_latest(self, run_dir: str) -> Optional[int]:
+        if not self.images:
+            return None
+        return self.pull(run_dir, max(self.images))

@@ -58,6 +58,8 @@ SPAN_SCHEMA: Dict[str, tuple] = {
     "restore.entry": ("engine", "one background entry "
                                 "(detail mode only)"),
     "transfer.push": ("transfer", "full delta-replication push"),
+    "transfer.round": ("transfer", "one pre-copy migration round "
+                                   "(live or frozen residual)"),
     "transfer.negotiate": ("transfer", "CAS have/want round"),
     "transfer.ship": ("transfer", "missing chunks over the wire"),
     "transfer.materialize": ("transfer", "peer-side pack rebuild"),

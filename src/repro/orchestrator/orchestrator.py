@@ -45,22 +45,40 @@ class OrchestratorConfig:
     jit_cooldown_steps: int = 8
     idle_sleep_s: float = 0.005     # when a tick ran nothing (await detect)
     hosts: int = 1                  # simulated hosts (job dirs per host)
-    transfer: str = "delta"         # migration data path: "delta" | "copy"
-    transfer_workers: int = 0       # delta-ship lanes (0 = auto)
+    transfer: str = "delta"         # DEPRECATED: transfer_policy.mode
+    transfer_workers: int = 0       # DEPRECATED: transfer_policy.workers
+    transfer_policy: Optional[Any] = None   # api.TransferPolicy
+
+    def resolved_transfer_policy(self):
+        """The structured migration policy; legacy string knobs map into
+        a stop-and-copy TransferPolicy when no policy was given."""
+        if self.transfer_policy is not None:
+            return self.transfer_policy
+        from repro.api.options import TransferPolicy
+        return TransferPolicy(mode=self.transfer,
+                              workers=self.transfer_workers)
 
 
 @dataclasses.dataclass
 class MigrationPlan:
     """One planned live migration: checkpoint the job on its current
     host, delta-transfer the image to another host's store, restore it
-    there.  Driven by ``JobSpec.migrate_at_step``; state advances
-    pending → signalled → transferred (or failed)."""
+    there.  Driven by ``JobSpec.migrate_at_step``.
+
+    Stop-and-copy state walk: pending → signalled → transferred (or
+    failed).  With a pre-copy policy (``TransferPolicy.precopy_rounds``)
+    an extra live phase slots in — pending → **precopy** (budget-driven
+    delta rounds while the job keeps stepping, each appended to
+    ``rounds``) → signalled (the convergence controller called freeze or
+    fallback; ``outcome`` records which) → transferred/failed."""
     job_id: str
     at_step: int
     src_host: Optional[str] = None
     dst_host: Optional[str] = None
     state: str = "pending"
     stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    rounds: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    outcome: Optional[str] = None   # "converged" | "fallback" | None
 
 
 class Orchestrator:
@@ -107,6 +125,10 @@ class Orchestrator:
             s.job_id: StragglerMonitor(min_samples=4) for s in specs}
         self._last_jit: Dict[str, int] = {}
         self._crash_t: Dict[str, float] = {}
+        # live pre-copy state per migrating job: replicator + convergence
+        # controller + CAS ledger tag (the durable half lives in the
+        # destination CAS, so a killed source resumes from there)
+        self._precopy: Dict[str, Dict[str, Any]] = {}
         self.final: Dict[str, Dict[str, Any]] = {}
         self.ticks = 0
         self.t0: Optional[float] = None
@@ -390,14 +412,121 @@ class Orchestrator:
             rec.recovery.mark_caught_up(self.clock())
 
     def _maybe_signal_migration(self, rec: JobRecord) -> None:
-        """A due migration is delivered as a PREEMPT signal: the job
-        checkpoints-on-signal and yields through the normal freeze path,
-        where the pending plan routes it to :meth:`_migrate`."""
-        plan = self.migrations.get(rec.spec.job_id)
-        if (plan is not None and plan.state == "pending"
-                and rec.step >= plan.at_step):
-            plan.state = "signalled"
-            self.channel.send(rec.spec.job_id, Signal.PREEMPT)
+        """Drive a due migration.  Stop-and-copy: deliver a PREEMPT — the
+        job checkpoints-on-signal and yields through the normal freeze
+        path, where the pending plan routes it to :meth:`_migrate`.
+        With a pre-copy policy the plan first enters the live ``precopy``
+        phase: one delta round per tick while the job keeps stepping,
+        until the convergence controller calls freeze (residual fits the
+        blackout budget) or fallback (a cap tripped) — only then is the
+        PREEMPT sent, and :meth:`_migrate` pushes just the residual."""
+        job_id = rec.spec.job_id
+        plan = self.migrations.get(job_id)
+        if plan is None:
+            return
+        wl = self.workloads.get(job_id)
+        if plan.state == "pending" and rec.step >= plan.at_step:
+            policy = self.cfg.resolved_transfer_policy()
+            if (policy.precopy_enabled
+                    and getattr(wl, "session", None) is not None
+                    and len(self.hosts) >= 2):
+                self._begin_precopy(rec, wl, plan, policy)
+            else:
+                plan.state = "signalled"
+                self.channel.send(job_id, Signal.PREEMPT)
+                return
+        if plan.state == "precopy" and wl is not None:
+            self._advance_precopy(rec, wl, plan)
+
+    def _begin_precopy(self, rec: JobRecord, wl, plan: MigrationPlan,
+                       policy) -> None:
+        """Open the live pre-copy phase: pick the destination now (rounds
+        need a stable target CAS), build the round-capable replicator,
+        and seed the convergence controller from any ledger a previous
+        source incarnation left in that CAS — resumed rounds re-negotiate
+        have/want and ship nothing twice."""
+        from repro.orchestrator.workloads import host_cas_dir, job_dir_for
+        from repro.transfer import DeltaReplicator, PrecopyController
+        job_id = rec.spec.job_id
+        plan.src_host = rec.host
+        plan.dst_host = Scheduler.place(self.hosts, self._host_load(),
+                                        avoid=rec.host)
+        rep = DeltaReplicator(
+            job_dir_for(self.run_dir, job_id, plan.dst_host),
+            cas_dir=host_cas_dir(self.run_dir, plan.dst_host),
+            workers=policy.workers)
+        if not rep.supports_rounds:     # Replicator-protocol capability
+            plan.state = "signalled"    # gate, not isinstance
+            self.channel.send(job_id, Signal.PREEMPT)
+            return
+        ctrl = PrecopyController(policy)
+        tag = f"{job_id}-mig{plan.at_step}"
+        ledger = rep.round_state(tag)
+        if ledger:
+            ctrl.seed(ledger)
+            plan.rounds = [dict(r) for r in ledger
+                           if not r.get("residual")]
+        self._precopy[job_id] = {"rep": rep, "ctrl": ctrl, "tag": tag,
+                                 "errors": 0}
+        plan.state = "precopy"
+        rec.events.append({"t": self.clock(), "precopy_begin": rec.step,
+                           "dst_host": plan.dst_host,
+                           "resumed_rounds": len(plan.rounds)})
+
+    def _advance_precopy(self, rec: JobRecord, wl,
+                         plan: MigrationPlan) -> None:
+        """One live round: snapshot-while-running, push the delta to the
+        destination CAS, feed the controller, and either keep stepping or
+        send the freeze signal.  A round that dies (e.g. a CAS partition)
+        is retried next tick — the CAS ledger plus have/want negotiation
+        make the retry incremental; two consecutive failures abandon
+        convergence and fall back to stop-and-copy."""
+        from repro.orchestrator.workloads import job_dir_for
+        job_id = rec.spec.job_id
+        ctx = self._precopy[job_id]
+        src_dir = job_dir_for(self.run_dir, job_id, rec.host)
+        try:
+            with obs_trace.context(job=job_id):
+                wl.checkpoint_running(rec.step)
+                # async engines commit in the background; a round can
+                # only ship an image whose manifest has landed
+                wl.session.wait_pending()
+                rec.last_ckpt_step = rec.step
+                record = ctx["rep"].push_round(src_dir, rec.step,
+                                               ctx["tag"])
+        except Exception as e:
+            ctx["errors"] += 1
+            rec.events.append({"t": self.clock(), "step": rec.step,
+                               "precopy_round_error": repr(e)})
+            if ctx["errors"] >= 2:
+                # the transfer plane is not coming back this migration:
+                # stop iterating and take the stop-and-copy freeze
+                plan.outcome = "fallback"
+                plan.stats["fallback_reason"] = (
+                    f"{ctx['errors']} consecutive round failures: "
+                    f"{e!r}")
+                plan.state = "signalled"
+                self.channel.send(job_id, Signal.PREEMPT)
+            return
+        ctx["errors"] = 0
+        plan.rounds.append(record)
+        ctx["ctrl"].observe(record)
+        decision = ctx["ctrl"].decide()
+        rec.events.append({"t": self.clock(), "step": rec.step,
+                           "precopy_round": record["round"],
+                           "bytes_sent": record["bytes_sent"],
+                           "decision": decision.action})
+        if decision.action == "continue":
+            return
+        plan.outcome = ("converged" if decision.action == "freeze"
+                        else "fallback")
+        plan.stats.update(
+            {"decision_reason": decision.reason,
+             "predicted_residual_bytes":
+                 decision.predicted_residual_bytes,
+             "predicted_blackout_ms": decision.predicted_blackout_ms})
+        plan.state = "signalled"
+        self.channel.send(job_id, Signal.PREEMPT)
 
     def _freeze_and_yield(self, rec: JobRecord, wl, out) -> None:
         job_id = rec.spec.job_id
@@ -431,42 +560,73 @@ class Orchestrator:
         PREEMPTED with ``rec.host`` rebound — the next scheduling round
         restores it on the new host, step-exact."""
         from repro.orchestrator.workloads import job_dir_for
+        from repro.transfer.precopy import summarize_rounds
         job_id = rec.spec.job_id
         now = self.clock()
         rec.recovery.open("migration", t_interrupt=now, t_detect=now,
                           step_at_interrupt=rec.step,
                           last_ckpt_step=rec.step)
-        plan.src_host = rec.host
-        plan.dst_host = Scheduler.place(self.hosts, self._host_load(),
-                                        avoid=rec.host)
+        ctx = self._precopy.pop(job_id, None)
+        if ctx is None:
+            plan.src_host = rec.host
+            plan.dst_host = Scheduler.place(self.hosts, self._host_load(),
+                                            avoid=rec.host)
         src_dir = job_dir_for(self.run_dir, job_id, plan.src_host)
         dst_dir = job_dir_for(self.run_dir, job_id, plan.dst_host)
         t0 = self.clock()
         try:
             with obs_trace.context(job=job_id):
-                stats = self._transfer_image(wl, src_dir, dst_dir,
-                                             plan.dst_host)
+                if ctx is not None:
+                    # pre-copy handoff: the job is frozen, push only the
+                    # residual delta (everything else landed live)
+                    step = wl.session.latest_step()
+                    if step is None:
+                        raise FileNotFoundError(
+                            f"no image to migrate under {src_dir}")
+                    residual = ctx["rep"].push_round(
+                        src_dir, step, ctx["tag"], residual=True)
+                    plan.rounds.append(residual)
+                    stats = dict(ctx["rep"].stats, mode="delta-precopy",
+                                 outcome=plan.outcome,
+                                 **summarize_rounds(plan.rounds))
+                    ctx["rep"].clear_rounds(ctx["tag"])
+                else:
+                    stats = self._transfer_image(wl, src_dir, dst_dir,
+                                                 plan.dst_host)
         except Exception as e:
             # the image never reached the destination: stay on the source
-            # host (its image is intact) and recover like a preemption
+            # host (its image is intact) and recover like a preemption.
+            # A pre-copy ledger (and every landed chunk) stays in the
+            # destination CAS: a retried migration resumes the rounds.
             plan.state = "failed"
-            plan.stats = {"error": repr(e)}
+            plan.stats = dict(plan.stats, error=repr(e))
             rec.events.append({"t": self.clock(), "migration_error": repr(e)})
         else:
             plan.state = "transferred"
-            plan.stats = stats
+            plan.stats = dict(plan.stats, **stats)
+            rounds = list(plan.rounds)
+            if not rounds:
+                # stop-and-copy: the whole transfer is one frozen
+                # residual round — recorded in the same per-round shape
+                rounds = [{"round": 0, "residual": True,
+                           "bytes_sent": stats.get(
+                               "bytes_sent", stats.get("bytes_copied", 0)),
+                           "wall_s": self.clock() - t0}]
             rec.recovery.mark_transfer(
-                t0, self.clock(),
+                t0, self.clock(), rounds=rounds,
                 **{k: stats[k] for k in
                    ("bytes_sent", "bytes_reused", "bytes_copied",
-                    "chunks_sent", "chunks_reused") if k in stats})
+                    "chunks_sent", "chunks_reused",
+                    "precopy_bytes", "residual_bytes", "blackout_s",
+                    "outcome") if k in stats})
             rec.host = plan.dst_host
             rec.events.append({
                 "t": self.clock(), "step": rec.step,
                 "migrated": {"from": plan.src_host, "to": plan.dst_host,
                              "bytes_sent": stats.get("bytes_sent",
                                                      stats.get("bytes", 0)),
-                             "bytes_reused": stats.get("bytes_reused", 0)}})
+                             "bytes_reused": stats.get("bytes_reused", 0),
+                             "rounds": len(plan.rounds)}})
         rec.transition(JobState.PREEMPTED)
         self._evict(job_id)
 
@@ -491,12 +651,13 @@ class Orchestrator:
         step = wl.session.latest_step()
         if step is None:
             raise FileNotFoundError(f"no image to migrate under {src_dir}")
-        if self.cfg.transfer == "delta":
+        policy = self.cfg.resolved_transfer_policy()
+        if policy.mode == "delta":
             from repro.orchestrator.workloads import host_cas_dir
             from repro.transfer import DeltaReplicator
             rep = DeltaReplicator(
                 dst_dir, cas_dir=host_cas_dir(self.run_dir, dst_host),
-                workers=self.cfg.transfer_workers)
+                workers=policy.workers)
             return dict(rep.push(src_dir, step), mode="delta")
         # whole-file copy: the closure still has to move (an incremental
         # child is unrestorable without its parents)
@@ -555,7 +716,10 @@ class Orchestrator:
                 "host": rec.host,
                 "migration": (None if plan is None else
                               {"state": plan.state, "from": plan.src_host,
-                               "to": plan.dst_host, **plan.stats}),
+                               "to": plan.dst_host,
+                               "outcome": plan.outcome,
+                               "rounds": [dict(r) for r in plan.rounds],
+                               **plan.stats}),
                 "step": rec.step,
                 "total_steps": rec.spec.total_steps,
                 "attempts": rec.attempt + 1,

@@ -95,16 +95,27 @@ class RecoveryLog:
         return None
 
     def mark_transfer(self, t_start: float, t_end: float,
+                      rounds: Optional[List[Dict[str, Any]]] = None,
                       **meta: Any) -> None:
         """Record the cross-host image-transfer window (between detect
         and schedule: the orchestrator pre-stages the image on the
-        destination before the scheduler re-admits the job)."""
+        destination before the scheduler re-admits the job).
+
+        ``rounds`` attributes the window: one entry per transfer round
+        ({"round", "bytes_sent", "wall_s", "residual", ...}).  Pre-copy
+        migrations record every live round plus the frozen residual;
+        stop-and-copy records a single residual round.  The per-round
+        ledger is what makes a blackout regression attributable — which
+        round grew, not just that the lump sum did."""
         if self.current is not None:
             inc = self.current
             inc["t_transfer_start"] = t_start
             inc["t_transfer_end"] = t_end
+            if rounds is not None:
+                inc["transfer_rounds"] = [dict(r) for r in rounds]
             inc["meta"].update(meta)
-            self._span(inc, "recovery.transfer", t_start, t_end)
+            self._span(inc, "recovery.transfer", t_start, t_end,
+                       rounds=len(rounds) if rounds else 0)
 
     def mark_scheduled(self, t: float) -> None:
         if self.current is not None:
@@ -186,6 +197,10 @@ class RecoveryLog:
                "replay_s": gap("t_restored", "t_caught_up"),
                "total_s": gap("t_interrupt", "t_caught_up"),
                "steps_replayed": None,
+               # per-round transfer attribution (pre-copy migrations);
+               # [] for incidents recorded before rounds existed
+               "transfer_rounds": [dict(r) for r in
+                                   inc.get("transfer_rounds", [])],
                "meta": dict(inc["meta"])}
         if inc["restored_step"] is not None:
             out["steps_replayed"] = (inc["step_at_interrupt"]

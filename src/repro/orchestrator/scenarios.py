@@ -76,8 +76,14 @@ def scenario_specs(name: str, total_steps: int = 10,
 def run_scenario(name: str, run_dir: str, options=None, mesh=None,
                  total_steps: int = 10, kind: str = "train",
                  capacity: Optional[int] = None, hosts: Optional[int] = None,
-                 config: Optional[OrchestratorConfig] = None) -> Dict:
-    """Build and run one scenario; returns the orchestrator summary."""
+                 config: Optional[OrchestratorConfig] = None,
+                 transfer_policy=None) -> Dict:
+    """Build and run one scenario; returns the orchestrator summary.
+
+    ``transfer_policy`` (an :class:`repro.api.TransferPolicy`) configures
+    the migration data path of the default-built config — e.g. pre-copy
+    live migration with a blackout budget for the ``migrate`` scenario.
+    Ignored when an explicit ``config`` is passed (set it there)."""
     from repro.orchestrator.job import jobs_dir
     import os
     if os.path.isdir(jobs_dir(run_dir)):
@@ -98,7 +104,8 @@ def run_scenario(name: str, run_dir: str, options=None, mesh=None,
         n_hosts = hosts if hosts is not None else (
             2 if name == "migrate" else 1)
         config = OrchestratorConfig(capacity=cap, slice_steps=2,
-                                    hosts=n_hosts)
+                                    hosts=n_hosts,
+                                    transfer_policy=transfer_policy)
     orch = Orchestrator(run_dir, specs,
                         workload_factory=make_workload_factory(
                             run_dir, options=options, mesh=mesh),

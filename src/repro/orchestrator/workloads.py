@@ -102,6 +102,12 @@ class TrainWorkload:
     def checkpoint(self, step: int) -> str:
         return self.session.checkpoint(step)
 
+    def checkpoint_running(self, step: int) -> str:
+        """Pre-copy round capture: commit a snapshot with the smallest
+        pause the session's capture mode allows (soft-freeze pin+validate
+        under capture="concurrent", an ordinary dump otherwise)."""
+        return self.session.checkpoint_running(step)
+
     def restore(self) -> int:
         return self.trainer.restore()
 
@@ -178,6 +184,12 @@ class ServeWorkload:
 
     def checkpoint(self, step: int) -> str:
         return self.session.checkpoint(step)
+
+    def checkpoint_running(self, step: int) -> str:
+        """Pre-copy round capture: commit a snapshot with the smallest
+        pause the session's capture mode allows (soft-freeze pin+validate
+        under capture="concurrent", an ordinary dump otherwise)."""
+        return self.session.checkpoint_running(step)
 
     def restore(self) -> int:
         # a replacement server needs a started cache skeleton to restore

@@ -15,9 +15,15 @@ back somewhere else.  This package is that data path:
     (striped + parallel), then re-materializes byte-identical packs.
   * :func:`transfer_closure` — the delta-chain closure of one snapshot
     (incremental children need their parents on the target too).
+  * :class:`PrecopyController` — the live-migration convergence
+    controller: after each pre-copy round it decides continue / freeze
+    (residual fits the blackout budget) / fallback (stop-and-copy).
 """
 from repro.transfer.cas import CASCorruption, ChunkStore, chunk_key
 from repro.transfer.delta import DeltaReplicator, transfer_closure
+from repro.transfer.precopy import (PrecopyController, RoundDecision,
+                                    summarize_rounds)
 
 __all__ = ["CASCorruption", "ChunkStore", "chunk_key", "DeltaReplicator",
-           "transfer_closure"]
+           "transfer_closure", "PrecopyController", "RoundDecision",
+           "summarize_rounds"]

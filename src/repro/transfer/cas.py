@@ -33,6 +33,7 @@ from repro.serialization.integrity import crc32
 
 TRANSFER_LOG = "transfers.json"
 QUARANTINE_DIR = "quarantine"
+ROUNDS_DIR = "rounds"
 
 
 class CASCorruption(IOError):
@@ -173,6 +174,51 @@ class ChunkStore:
                             os.makedirs(qdir, exist_ok=True)
                             os.replace(path, os.path.join(qdir, name))
         return sorted(bad)
+
+    # ------------------------------------------------------- round state
+    # Pre-copy migration rounds persist their ledger *in the destination
+    # CAS* (beside the objects they shipped), so an interrupted migration
+    # resumes from the target's own record: a fresh source process reads
+    # round_state(tag), sees how far convergence got, and the next
+    # push_round re-negotiates have/want against the already-landed
+    # objects — nothing is re-sent, and the ledger survives a source kill.
+    def _rounds_path(self, tag: str) -> str:
+        safe = "".join(c if c.isalnum() or c in "._-" else "_"
+                       for c in tag)
+        return os.path.join(self.root, ROUNDS_DIR, f"{safe}.json")
+
+    def round_state(self, tag: str) -> List[Dict[str, Any]]:
+        """The persisted per-round ledger for one migration, oldest first
+        (empty when no round has completed)."""
+        path = self._rounds_path(tag)
+        if not os.path.exists(path):
+            return []
+        try:
+            with open(path) as f:
+                return list(json.load(f))
+        except Exception:
+            return []
+
+    def append_round(self, tag: str, record: Dict[str, Any]
+                     ) -> List[Dict[str, Any]]:
+        """Append one completed round to the ledger (atomic rewrite) and
+        return the updated ledger."""
+        state = self.round_state(tag)
+        state.append(dict(record, t=time.time()))
+        path = self._rounds_path(tag)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f, indent=2, default=str)
+        os.replace(tmp, path)
+        return state
+
+    def clear_rounds(self, tag: str) -> None:
+        """Drop a migration's round ledger (after a completed handoff)."""
+        try:
+            os.remove(self._rounds_path(tag))
+        except OSError:
+            pass
 
     # ------------------------------------------------------ transfer log
     def log_transfer(self, record: Dict[str, Any]) -> None:

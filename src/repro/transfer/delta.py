@@ -68,9 +68,15 @@ class DeltaReplicator:
 
     Drop-in for :class:`DirReplicator` (same ``push``/``pull_latest``
     surface, same peer-directory layout), so
-    ``CheckpointOptions(replicate_to=..., transfer="delta")`` swaps the
-    data path without touching the engine's commit ordering.
+    ``TransferPolicy(mode="delta")`` swaps the data path without touching
+    the engine's commit ordering.  ``supports_rounds`` advertises the
+    extra pre-copy surface (:meth:`push_round` / :meth:`round_state`)
+    that content-addressing makes possible — callers discover it through
+    the :class:`repro.core.replication.Replicator` protocol, never via
+    isinstance.
     """
+
+    supports_rounds = True
 
     def __init__(self, peer_dir: str, cas_dir: Optional[str] = None,
                  workers: int = 0):
@@ -82,6 +88,10 @@ class DeltaReplicator:
             workers = auto_io_threads()
         self.workers = workers
         self.last_stats: Dict[str, Any] = _fresh_stats()
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.last_stats
 
     # -------------------------------------------------------------- push
     def push(self, run_dir: str, step: int) -> Dict[str, Any]:
@@ -111,6 +121,52 @@ class DeltaReplicator:
                          chunks_reused=stats["chunks_reused"],
                          push_s=stats["push_s"])
         return stats
+
+    # ------------------------------------------------------ pre-copy rounds
+    def push_round(self, run_dir: str, step: int, tag: str,
+                   residual: bool = False) -> Dict[str, Any]:
+        """One pre-copy round: push `step`'s closure, then append the
+        round's byte/wall record to the CAS-side ledger keyed by `tag`.
+
+        The round's *delta* falls out of the ordinary push protocol —
+        chunks whose raw-CRC content hashes already landed in a previous
+        round negotiate away as ``chunks_reused``, whole steps already
+        committed on the target skip as ``steps_skipped`` — so round i
+        ships exactly what changed since round i-1.  The ledger lives in
+        the destination CAS (`round_state`), making an interrupted
+        migration resumable from the target's own record.
+        """
+        round_idx = len(self.store.round_state(tag))
+        with obs_trace.span("transfer.round", round=round_idx, step=step,
+                            residual=residual) as sp:
+            stats = self.push(run_dir, step)
+            sp.set(bytes_sent=stats["bytes_sent"],
+                   bytes_reused=stats["bytes_reused"],
+                   chunks_sent=stats["chunks_sent"])
+        record = {"round": round_idx, "step": step, "residual": residual,
+                  "bytes_sent": stats["bytes_sent"],
+                  "bytes_reused": stats["bytes_reused"],
+                  "chunks_sent": stats["chunks_sent"],
+                  "chunks_reused": stats["chunks_reused"],
+                  "wall_s": stats["push_s"]}
+        self.store.append_round(tag, record)
+        obs_metrics.counter_add("transfer.round_bytes",
+                                stats["bytes_sent"])
+        if residual:
+            obs_metrics.counter_add("transfer.residual_bytes",
+                                    stats["bytes_sent"])
+        obs_journal.emit("transfer", "round", tag=tag, round=round_idx,
+                         step=step, residual=residual,
+                         bytes_sent=stats["bytes_sent"],
+                         wall_s=stats["push_s"])
+        return record
+
+    def round_state(self, tag: str) -> List[Dict[str, Any]]:
+        """The CAS-persisted round ledger for one migration tag."""
+        return self.store.round_state(tag)
+
+    def clear_rounds(self, tag: str) -> None:
+        self.store.clear_rounds(tag)
 
     def _push_step(self, run_dir: str, step: int,
                    stats: Dict[str, Any]) -> None:

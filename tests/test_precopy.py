@@ -1,0 +1,405 @@
+"""Pre-copy live migration: TransferPolicy API, convergence controller,
+round ledger resumability, and the chaos-interleaved migration matrix.
+
+Covers the tentpole acceptance criteria:
+
+  * ``TransferPolicy`` replaces the stringly ``transfer=`` knobs with a
+    validated, env-round-trippable dataclass (old kwargs keep working
+    under a one-time DeprecationWarning);
+  * delta rounds ship only content that changed since the previous round
+    and the blackout (the frozen residual push) is a fraction of the
+    stop-and-copy wall;
+  * a fault mid-round (CAS partition, degraded I/O, source host kill)
+    never tears the destination — the round ledger in the target CAS
+    lets a fresh controller resume without re-sending landed chunks;
+  * the orchestrated ``migrate`` scenario converges bit-exact with zero
+    replay and per-round transfer records in the RecoveryLog.
+"""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import CheckpointOptions, CheckpointSession, TransferPolicy
+from repro.api.options import OptionsError
+from repro.chaos import hooks as chaos_hooks
+from repro.core.engine import SnapshotEngine
+from repro.core.snapshot_io import SnapshotStore
+from repro.transfer import (ChunkStore, DeltaReplicator, PrecopyController,
+                            RoundDecision, summarize_rounds,
+                            transfer_closure)
+
+
+def _chain(run_dir, steps=5, entries=6, entry_kb=64, seed=0):
+    rng = np.random.default_rng(seed)
+    state = {f"t{i}": rng.integers(0, 8, size=entry_kb * 256)
+             .astype(np.float32) for i in range(entries)}
+    opts = CheckpointOptions(mode="sync", incremental=True, pack_format=2)
+    s = CheckpointSession(run_dir, opts, backend="host")
+    s.attach(lambda: {"train_state": state})
+    names = sorted(state)
+    for step in range(1, steps + 1):
+        if step > 1:
+            for i in range(2):
+                k = names[(step * 2 + i) % entries]
+                state[k] = rng.integers(0, 8, size=entry_kb * 256) \
+                    .astype(np.float32)
+        s.checkpoint(step)
+    return s, state
+
+
+def _restore_state(run_dir):
+    eng = SnapshotEngine(run_dir, backend="host")
+    eng.attach(lambda: {"train_state": None})
+    return eng.restore()["train_state"]
+
+
+def _assert_state_equal(got, want):
+    assert sorted(got) == sorted(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+# ---------------------------------------------------------- TransferPolicy
+def test_transfer_policy_validates():
+    TransferPolicy().validate()                      # defaults are legal
+    p = TransferPolicy(mode="delta", precopy_rounds=4,
+                       max_blackout_ms=250.0)
+    p.validate()
+    assert p.precopy_enabled
+    with pytest.raises(OptionsError):
+        TransferPolicy(mode="rsync").validate()
+    with pytest.raises(OptionsError):
+        # pre-copy rides on the content-addressed delta path
+        TransferPolicy(mode="copy", precopy_rounds=2).validate()
+    with pytest.raises(OptionsError):
+        # a blackout budget is meaningless without rounds to converge in
+        TransferPolicy(mode="delta", max_blackout_ms=100.0).validate()
+
+
+def test_transfer_policy_spec_round_trip():
+    p = TransferPolicy(mode="delta", workers=2, precopy_rounds=8,
+                       max_blackout_ms=500.0, residual_bytes_cap=1 << 20)
+    assert TransferPolicy.from_spec(p.to_spec()) == p
+    # None fields are omitted from the spec string entirely
+    spec = TransferPolicy(mode="delta").to_spec()
+    assert "max_blackout_ms" not in spec
+
+
+def test_options_carry_policy_through_env():
+    p = TransferPolicy(mode="delta", precopy_rounds=3,
+                       max_blackout_ms=100.0)
+    opts = CheckpointOptions(transfer_policy=p)
+    env = opts.to_env()
+    assert "REPRO_CKPT_TRANSFER_POLICY" in env
+    assert "REPRO_CKPT_TRANSFER" not in env          # no legacy vars out
+    back = CheckpointOptions.from_env(env)
+    assert back.transfer_policy == p
+    # legacy mirrors stay readable for old call sites
+    assert back.transfer == "delta"
+
+
+def test_legacy_transfer_kwargs_warn_and_map():
+    import warnings
+    import repro.api.options as mod
+    mod._WARNED.discard("options.transfer-kwargs")
+    with pytest.warns(DeprecationWarning, match="transfer"):
+        opts = CheckpointOptions(transfer="delta", transfer_workers=2)
+    assert opts.transfer_policy == TransferPolicy(mode="delta", workers=2)
+    # warn-once: a second construction is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        CheckpointOptions(transfer="delta", transfer_workers=2)
+    # conflicting legacy + structured settings refuse to guess
+    with pytest.raises(OptionsError):
+        CheckpointOptions(transfer="copy",
+                          transfer_policy=TransferPolicy(mode="delta"))
+
+
+def test_replicator_protocol_capabilities(tmp_path):
+    from repro.core.replication import (DirReplicator, MemReplicator,
+                                        Replicator)
+    for rep in (DirReplicator(str(tmp_path / "d")), MemReplicator()):
+        assert isinstance(rep, Replicator)
+        assert rep.supports_rounds is False
+    rep = DeltaReplicator(str(tmp_path / "p"))
+    assert isinstance(rep, Replicator)
+    assert rep.supports_rounds is True
+
+
+# ------------------------------------------------------------- controller
+def _policy(**kw):
+    kw.setdefault("mode", "delta")
+    kw.setdefault("precopy_rounds", 8)
+    return TransferPolicy(**kw)
+
+
+def test_controller_requires_precopy_policy():
+    with pytest.raises(ValueError):
+        PrecopyController(TransferPolicy(mode="delta"))
+
+
+def test_controller_converges_on_zero_byte_round():
+    c = PrecopyController(_policy())
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    c.observe({"bytes_sent": 0, "wall_s": 0.01})
+    d = c.decide()
+    assert isinstance(d, RoundDecision)
+    assert d.action == "freeze" and "converged" in d.reason
+
+
+def test_controller_freezes_inside_blackout_budget():
+    c = PrecopyController(_policy(max_blackout_ms=500.0))
+    c.observe({"bytes_sent": 10_000_000, "wall_s": 1.0})  # 10 MB/s
+    c.observe({"bytes_sent": 1_000_000, "wall_s": 0.1})   # ~100ms residual
+    d = c.decide()
+    assert d.action == "freeze"
+    assert d.predicted_blackout_ms <= 500.0
+
+
+def test_controller_fallback_on_round_cap():
+    c = PrecopyController(_policy(precopy_rounds=2,
+                                  max_blackout_ms=0.001))
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    d = c.decide()
+    assert d.action == "fallback" and "round cap" in d.reason
+
+
+def test_controller_fallback_on_byte_cap():
+    c = PrecopyController(_policy(max_blackout_ms=0.001,
+                                  residual_bytes_cap=1500))
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    d = c.decide()
+    assert d.action == "fallback" and "cap" in d.reason
+
+
+def test_controller_freezes_when_not_shrinking_without_budget():
+    c = PrecopyController(_policy())                 # no blackout budget
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    c.observe({"bytes_sent": 1000, "wall_s": 0.1})
+    assert c.decide().action == "freeze"
+
+
+def test_controller_seed_skips_residual_rounds():
+    c = PrecopyController(_policy())
+    c.seed([{"bytes_sent": 1000, "wall_s": 0.1, "residual": False},
+            {"bytes_sent": 200, "wall_s": 0.02, "residual": True}])
+    assert len(c.rounds) == 1                        # residuals terminal
+
+
+# ----------------------------------------------------------- round ledger
+def test_round_ledger_persists_and_clears(tmp_path):
+    store = ChunkStore(str(tmp_path / "cas"))
+    assert store.round_state("mig") == []
+    store.append_round("mig", {"round": 0, "bytes_sent": 10})
+    store.append_round("mig", {"round": 1, "bytes_sent": 0})
+    led = store.round_state("mig")
+    assert [r["round"] for r in led] == [0, 1]
+    assert all("t" in r for r in led)                # stamped
+    # a second store over the same dir sees the same ledger (the CAS is
+    # the resume log — it survives the pushing process)
+    assert len(ChunkStore(str(tmp_path / "cas")).round_state("mig")) == 2
+    store.clear_rounds("mig")
+    assert store.round_state("mig") == []
+
+
+def test_push_round_ships_only_deltas_and_records(tmp_path):
+    src, state = _chain(str(tmp_path / "src"))
+    rep = DeltaReplicator(str(tmp_path / "peer"))
+    closure = transfer_closure(src.store, 5)
+    recs = [rep.push_round(str(tmp_path / "src"), s, "mig")
+            for s in closure[:-1]]
+    resid = rep.push_round(str(tmp_path / "src"), 5, "mig", residual=True)
+    assert [r["round"] for r in recs + [resid]] == list(range(len(closure)))
+    # every live round after the first ships strictly less than the full
+    # image: the CAS dedups unchanged content across rounds
+    assert all(r["bytes_sent"] < recs[0]["bytes_sent"] + 1
+               for r in recs[1:])
+    assert resid["residual"] and resid["bytes_sent"] < recs[0]["bytes_sent"]
+    summary = summarize_rounds(rep.round_state("mig"))
+    assert summary["rounds_completed"] == len(closure) - 1
+    assert summary["residual_bytes"] == resid["bytes_sent"]
+    _assert_state_equal(_restore_state(str(tmp_path / "peer")), state)
+
+
+# ------------------------------------------------- chaos migration matrix
+class _Injector:
+    """Minimal chaos injector: fire `exc` on the Nth hit of `site`."""
+
+    def __init__(self, site, nth, exc=None, delay_s=0.0):
+        self.site, self.nth, self.exc, self.delay_s = site, nth, exc, delay_s
+        self.hits = 0
+
+    def on(self, site, **ctx):
+        if site != self.site:
+            return None
+        self.hits += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if self.exc is not None and self.hits == self.nth:
+            raise self.exc
+        return None
+
+
+@pytest.mark.parametrize("fault", ["none", "cas_partition", "degraded_io",
+                                   "host_kill"])
+def test_precopy_survives_midround_faults(tmp_path, fault):
+    """The matrix: a fault mid-round must leave the destination untorn
+    and the migration resumable from the CAS-side round ledger — landed
+    chunks are never re-sent, and the final image is bit-exact."""
+    src, state = _chain(str(tmp_path / "src"))
+    peer = str(tmp_path / "peer")
+    closure = transfer_closure(src.store, 5)
+    tag = "mig"
+
+    rep = DeltaReplicator(peer, workers=1)           # deterministic order
+    aborted_round = None
+    if fault == "cas_partition":
+        inj = _Injector("cas.put", nth=3, exc=IOError("cas partition"))
+        chaos_hooks.install(inj)
+        try:
+            with pytest.raises(IOError, match="cas partition"):
+                for s in closure[:-1]:
+                    rep.push_round(str(tmp_path / "src"), s, tag)
+            aborted_round = len(rep.round_state(tag))
+        finally:
+            chaos_hooks.uninstall()
+        # diagnosable abort: no image committed, no torn ledger entry
+        assert SnapshotStore(peer).list_steps() == []
+        assert aborted_round == 0                    # round never landed
+    elif fault == "degraded_io":
+        inj = _Injector("cas.put", nth=0, delay_s=0.002)
+        chaos_hooks.install(inj)
+        try:
+            for s in closure[:-1]:
+                rep.push_round(str(tmp_path / "src"), s, tag)
+        finally:
+            chaos_hooks.uninstall()
+        assert inj.hits > 0                          # delay really applied
+    elif fault == "host_kill":
+        # the pushing host dies after two live rounds; its in-memory
+        # replicator and controller state are gone
+        for s in closure[:2]:
+            rep.push_round(str(tmp_path / "src"), s, tag)
+        del rep
+    else:
+        for s in closure[:-1]:
+            rep.push_round(str(tmp_path / "src"), s, tag)
+
+    # a fresh replicator (new process, same target) resumes: the CAS
+    # ledger seeds the controller and landed chunks negotiate away
+    rep2 = DeltaReplicator(peer, workers=1)
+    ctrl = PrecopyController(TransferPolicy(mode="delta",
+                                            precopy_rounds=16))
+    ledger_before = rep2.round_state(tag)
+    ctrl.seed(ledger_before)
+    done = {r["step"] for r in ledger_before}
+    reused = 0
+    first_resumed_stats = None
+    for s in closure[:-1]:
+        if s in done:
+            continue
+        rec = rep2.push_round(str(tmp_path / "src"), s, tag)
+        if first_resumed_stats is None:
+            first_resumed_stats = dict(rep2.stats)
+        reused += rec["chunks_reused"]
+    resid = rep2.push_round(str(tmp_path / "src"), 5, tag, residual=True)
+    if fault == "cas_partition":
+        # the chunks that landed before the link dropped negotiate away
+        assert reused > 0
+    if fault == "host_kill":
+        # whole steps committed by the dead host's rounds skip entirely
+        assert first_resumed_stats["steps_skipped"] >= 2
+        # round numbering continued from the persisted ledger
+        assert resid["round"] == len(rep2.round_state(tag)) - 1
+        assert len(ledger_before) == 2
+    _assert_state_equal(_restore_state(peer), state)
+    # destination committed the full chain — nothing torn
+    assert SnapshotStore(peer).list_steps() == closure
+
+
+# ------------------------------------------------------- orchestrated run
+@pytest.mark.slow
+def test_migrate_scenario_precopy_bounded_blackout(tmp_path):
+    """Orchestrated pre-copy migration: live rounds while the job steps,
+    bounded blackout, zero replay, bit-exact vs an unmigrated run, and
+    per-round transfer records in the RecoveryLog + jobs --json."""
+    from repro.cli import main
+    from repro.orchestrator import JobSpec, run_scenario
+    from repro.orchestrator.workloads import TrainWorkload
+    total = 8
+    run = str(tmp_path / "orch")
+    opts = CheckpointOptions(mode="sync", incremental=True, pack_format=2)
+    policy = TransferPolicy(mode="delta", precopy_rounds=4,
+                            max_blackout_ms=2000.0)
+    summary = run_scenario("migrate", run, options=opts,
+                           total_steps=total, transfer_policy=policy)
+    assert summary["all_done"]
+    j = summary["jobs"]["mover"]
+    assert j["step"] == total
+    mig = j["migration"]
+    assert mig["state"] == "transferred"
+    assert mig["outcome"] in ("converged", "fallback")
+    assert mig["rounds"], "per-round records missing from the plan"
+    assert any(r["residual"] for r in mig["rounds"])
+    live = [r for r in mig["rounds"] if not r["residual"]]
+    assert mig["rounds_completed"] == len(live) >= 1
+    # the blackout is the residual push only — bounded by the budget
+    assert mig["blackout_s"] * 1000.0 <= policy.max_blackout_ms
+    (inc,) = [i for i in j["recovery"] if i["cause"] == "migration"]
+    assert inc["steps_replayed"] == 0                # zero replay
+    assert inc["transfer_rounds"] == mig["rounds"]
+    # bit-exact vs the same job never migrated
+    ref = TrainWorkload(JobSpec("ref", total_steps=total),
+                        str(tmp_path / "ref"), mesh=None, options=opts)
+    ref.start()
+    while not ref.done:
+        ref.run_slice(2)
+    ref.finish()
+    assert j["digest"] == ref.digest()
+    # offline exposure: repro jobs --json carries the round records
+    import io
+    from contextlib import redirect_stdout
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        assert main(["jobs", run, "--json"]) == 0
+    rows = json.loads(buf.getvalue())
+    (row,) = [r for r in rows if r["job"] == "mover"]
+    assert row["transfer_rounds"] == mig["rounds"]
+
+
+# ------------------------------------------------------------------- CLI
+def test_migrate_cli_precopy_mode(tmp_path, capsys):
+    from repro.cli import main
+    src, state = _chain(str(tmp_path / "src"))
+    peer = str(tmp_path / "peer")
+    assert main(["migrate", str(tmp_path / "src"), peer,
+                 "--max-rounds", "8", "--max-blackout-ms", "60000",
+                 "--json"]) == 0
+    stats = json.loads(capsys.readouterr().out)
+    assert stats["outcome"] in ("converged", "fallback")
+    assert stats["rounds_completed"] >= 1
+    assert stats["residual_bytes"] > 0
+    assert stats["rounds"][-1]["residual"]
+    _assert_state_equal(_restore_state(peer), state)
+    # human-readable variant prints the round table + blackout line
+    assert main(["migrate", str(tmp_path / "src"),
+                 str(tmp_path / "peer2"), "--max-rounds", "8"]) == 0
+    out = capsys.readouterr().out
+    assert "blackout" in out and "CRC-clean" in out
+
+
+def test_migrate_cli_precopy_flag_validation(tmp_path):
+    from repro.cli import main
+    _chain(str(tmp_path / "src"))
+    with pytest.raises(SystemExit, match="--transfer delta"):
+        main(["migrate", str(tmp_path / "src"), str(tmp_path / "p"),
+              "--transfer", "copy", "--max-rounds", "4"])
+    with pytest.raises(SystemExit, match="--max-rounds"):
+        main(["migrate", str(tmp_path / "src"), str(tmp_path / "p"),
+              "--max-blackout-ms", "100"])
