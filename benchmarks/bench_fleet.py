@@ -1,0 +1,144 @@
+"""Serving-fleet fan-out bench: K decode replicas from one image.
+
+The serving-scale claim behind the paper's fast-restore story: one
+committed ``DecodeServer`` image fans out into K replicas (default 50)
+across simulated hosts, each boot paying only a warm-CAS negotiation and
+a params-critical lazy restore.  Headline gated metrics:
+
+  fleet.restore_bytes_vs_image   total delta-replication bytes across
+                                 all K boots over the bytes of one
+                                 committed image.  Absolute ceiling 2.0
+                                 (the ISSUE's acceptance bound): K
+                                 replicas must cost less than two full
+                                 restores, i.e. CAS dedup makes fan-out
+                                 sub-linear in K.
+  fleet.ttft_vs_solo             warm-replica median time-to-first-token
+                                 over a solo cold boot of the same image
+                                 onto a fresh host (delta push + eager
+                                 restore + one token) — the no-fleet
+                                 alternative each replica is replacing.
+                                 Absolute ceiling 2.0; a ratio of two
+                                 walls from the same run, so runner
+                                 speed cancels.
+
+Byte metrics (image bytes, total/per-replica restore bytes) are
+deterministic at fixed seed and baseline-gated at the usual bytes
+tolerance; TTFT percentiles are informational wall clock.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+RECORDS: dict = {}
+
+
+def _emit(name, value, unit=""):
+    from benchmarks.common import emit
+    emit(name, value, unit)
+    RECORDS[name] = value
+
+
+def _solo_cold_boot_s(fleet, host: str = "solo") -> float:
+    """Wall for the no-fleet path: push the image to a fresh host (cold
+    CAS) and eager-restore a standalone server to its first token."""
+    import os
+
+    from repro.api import CheckpointOptions
+    from repro.orchestrator.workloads import host_cas_dir, job_dir_for
+    from repro.runtime.server import DecodeServer
+    from repro.transfer import DeltaReplicator
+    rep_dir = job_dir_for(fleet.run_dir, "solo", host)
+    t0 = time.perf_counter()
+    DeltaReplicator(rep_dir,
+                    cas_dir=host_cas_dir(fleet.run_dir, host)
+                    ).push(fleet.source_dir, fleet.image_step)
+    srv = DecodeServer(fleet.cfg, fleet.policy, fleet.mesh, rep_dir,
+                       max_seq=fleet.config.max_seq,
+                       options=CheckpointOptions(restore_mode="eager"),
+                       model=fleet.model)
+    srv.restore(step=fleet.image_step)
+    srv.decode(1)
+    wall = time.perf_counter() - t0
+    shutil.rmtree(os.path.join(fleet.run_dir, host), ignore_errors=True)
+    return wall
+
+
+def run_fleet_bench(replicas: int = 50, hosts: int = 2,
+                    seed: int = 0) -> dict:
+    from repro.orchestrator.fleet import FleetConfig, ServingFleet
+
+    d = tempfile.mkdtemp(prefix="bench_fleet_")
+    try:
+        cfg = FleetConfig(replicas=replicas, hosts=hosts, seed=seed,
+                          max_replicas=replicas + 16)
+        fleet = ServingFleet(d, cfg)
+        img = fleet.build_source_image()
+        _emit("fleet.image_bytes", img["bytes"], "bytes")
+        # solo cold-boot reference before the fleet warms any host CAS
+        solo_s = min(_solo_cold_boot_s(fleet) for _ in range(3))
+        _emit("fleet.solo_cold_boot_ms", solo_s * 1e3, "ms")
+
+        fleet.boot_fleet()
+        k = max(1, len(fleet.serving()))
+        fleet.serve_trace([1, 1, 3 * k, 3 * k, 1, 0, 0, 0])
+        s = fleet.summary()
+
+        _emit("fleet.replicas", s["replicas"], "count")
+        _emit("fleet.hosts", len(s["hosts"]), "count")
+        _emit("fleet.total_restore_bytes", s["total_restore_bytes"],
+              "bytes")
+        _emit("fleet.restore_bytes_per_replica",
+              s["restore_bytes_per_replica"], "bytes")
+        _emit("fleet.restore_bytes_vs_image",
+              s["restore_bytes_vs_image"], "x")
+        _emit("fleet.dedup_ratio", s["dedup_ratio"], "x")
+        _emit("fleet.ttft_p50_ms", s["ttft_p50_s"] * 1e3, "ms")
+        _emit("fleet.ttft_p99_ms", s["ttft_p99_s"] * 1e3, "ms")
+        # warm replicas (zero new chunks shipped) are the fan-out story;
+        # every replica after each host's first qualifies at K >> hosts
+        warm = sorted(r.ttft_s for r in fleet.replicas
+                      if r.ttft_s is not None
+                      and r.transfer.get("bytes_sent", 1) == 0)
+        if not warm:
+            raise AssertionError(
+                "no warm-CAS replica boots — dedup is not happening")
+        _emit("fleet.warm_replicas", len(warm), "count")
+        warm_p50 = warm[len(warm) // 2]
+        _emit("fleet.warm_ttft_p50_ms", warm_p50 * 1e3, "ms")
+        _emit("fleet.ttft_vs_solo", warm_p50 / solo_s, "x")
+        _emit("fleet.requests_served", s["requests_served"], "count")
+        _emit("fleet.autoscale_boots", s["autoscale_boots"], "count")
+        _emit("fleet.goodput", s["goodput_requests_per_replica_tick"],
+              "req/replica-tick")
+        if s["requests_unserved"]:
+            raise AssertionError(
+                f"{s['requests_unserved']} request(s) unserved — the "
+                f"fleet wedged; metrics would be bogus")
+        return dict(RECORDS)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--replicas", type=int, default=50)
+    ap.add_argument("--hosts", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all records as JSON (BENCH_fleet.json)")
+    args = ap.parse_args(argv)
+
+    run_fleet_bench(args.replicas, args.hosts, args.seed)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RECORDS, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

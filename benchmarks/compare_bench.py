@@ -51,6 +51,10 @@ def classify(name: str) -> str:
         return "obs_enabled"    # obs acceptance bound: absolute gate
     if "blackout_vs_stopcopy" in low:
         return "blackout"       # pre-copy acceptance bound: absolute gate
+    if "restore_bytes_vs_image" in low:
+        return "fleet_bytes"    # fleet fan-out bound: absolute gate
+    if "ttft_vs_solo" in low:
+        return "fleet_ttft"     # fleet TTFT bound: absolute gate
     if "speedup" in low:
         return "speedup"
     if "dedup" in low:
@@ -86,6 +90,13 @@ OBS_DISABLED_RATIO_CEILING = 1.005
 # delta rounds while the job still steps.  Absolute, like the others:
 # the ratio is the contract.
 PRECOPY_BLACKOUT_CEILING = 0.20
+# serving-fleet acceptance criteria (ISSUE 10), both absolute ceilings:
+# booting K replicas from one image must ship less than 2x the image's
+# bytes in total (CAS dedup makes fan-out sub-linear in K), and a
+# warm-CAS replica's median time-to-first-token may cost at most 2x a
+# solo cold boot of the same image (push + eager restore + one token).
+FLEET_RESTORE_BYTES_CEILING = 2.0
+FLEET_TTFT_RATIO_CEILING = 2.0
 
 
 def check_metric(name: str, base: float, fresh: float,
@@ -117,6 +128,12 @@ def check_metric(name: str, base: float, fresh: float,
     if kind == "blackout":                    # absolute acceptance bound
         reg = fresh / base - 1
         return fresh <= PRECOPY_BLACKOUT_CEILING, reg
+    if kind == "fleet_bytes":                 # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= FLEET_RESTORE_BYTES_CEILING, reg
+    if kind == "fleet_ttft":                  # absolute acceptance bound
+        reg = fresh / base - 1
+        return fresh <= FLEET_TTFT_RATIO_CEILING, reg
     if kind == "speedup":                     # higher is better
         if fresh <= 0:
             return False, float("inf")
@@ -168,6 +185,18 @@ def compare_file(fresh_path: str, base_path: str, tol_bytes: float,
                     f"migration blackout ceiling "
                     f"{PRECOPY_BLACKOUT_CEILING} (frozen residual push "
                     f"vs stop-and-copy wall)")
+                continue
+            if kind == "fleet_bytes":
+                problems.append(
+                    f"{name}: fresh {fv:.3f} exceeds the fleet fan-out "
+                    f"ceiling {FLEET_RESTORE_BYTES_CEILING} (total "
+                    f"restore bytes vs one image — CAS dedup broke)")
+                continue
+            if kind == "fleet_ttft":
+                problems.append(
+                    f"{name}: fresh {fv:.3f} exceeds the fleet TTFT "
+                    f"ceiling {FLEET_TTFT_RATIO_CEILING} (warm-replica "
+                    f"median TTFT vs a solo cold boot)")
                 continue
             if kind in ("obs_enabled", "obs_disabled"):
                 ceil = (OBS_ENABLED_RATIO_CEILING

@@ -428,6 +428,15 @@ class CheckpointOptions:
                 f"{_ENV_PREFIX}TRANSFER / {_ENV_PREFIX}TRANSFER_WORKERS "
                 f"are deprecated; set {_ENV_PREFIX}TRANSFER_POLICY "
                 f"(e.g. 'mode=delta,workers=2') instead")
+            # fold into a policy here so the constructor's kwargs shim
+            # doesn't fire a *second* deprecation for the same env vars
+            legacy = {}
+            if legacy_mode is not None:
+                legacy["mode"] = legacy_mode
+            if legacy_workers is not None:
+                legacy["workers"] = legacy_workers
+            policy = TransferPolicy(**legacy)
+            legacy_mode = legacy_workers = None
 
         return cls(
             mode=get("MODE", str, cls.mode),

@@ -256,6 +256,24 @@ class FaultInjector:
             self._record(ev, step=self.current_ckpt_step, key=key)
         return None
 
+    # -- fleet path -----------------------------------------------------
+    def _on_fleet_boot(self, replica, host=None, **_):
+        """host_kill at a fleet boot site: the replica's host dies
+        mid-boot.  Matches a pending host_kill targeting the replica id
+        or (via ``detail={"host": ...}``) the whole simulated host; the
+        fleet quarantines the dead replica and keeps serving."""
+        with self.lock:
+            for ev in self.config.events:
+                if (ev.kind == "host_kill" and ev.state == "pending"
+                        and (ev.job_id == replica
+                             or ev.detail.get("host") == host)):
+                    self._record(ev, replica=replica, host=host)
+                    break
+            else:
+                return None
+        raise ChaosInjectedFault(
+            f"chaos: host {host} killed while booting replica {replica}")
+
     # -- signal path ----------------------------------------------------
     def _on_signal_send(self, channel, job_id, sig, **_):
         """Armed signal events: duplicate or defer this delivery."""

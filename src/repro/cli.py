@@ -527,6 +527,55 @@ def cmd_orchestrate(args) -> int:
     return 1 if bad else 0
 
 
+# ------------------------------------------------------------ serve-fleet
+def cmd_serve_fleet(args) -> int:
+    """Boot K decode replicas from one image and serve a bursty trace."""
+    import contextlib
+
+    from repro.obs.plane import observed
+    from repro.orchestrator.fleet import FleetConfig, run_fleet
+    cfg = FleetConfig(replicas=args.replicas, hosts=args.hosts,
+                      restore_mode=args.restore_mode, seed=args.seed,
+                      max_replicas=max(args.max_replicas, args.replicas))
+    trace = None
+    if args.trace:
+        trace = [int(x) for x in args.trace.split(",")]
+    plane = (contextlib.nullcontext() if args.no_trace
+             else observed(args.run_dir))
+    with plane:
+        summary = run_fleet(args.run_dir, cfg, trace=trace)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+    print(f"fleet: {summary['replicas']} replica(s) over "
+          f"{len(summary['hosts'])} host(s) from one "
+          f"{_fmt_bytes(summary['image_bytes'])} image "
+          f"({args.restore_mode} restore)")
+    print(f"  restore bytes: {_fmt_bytes(summary['total_restore_bytes'])} "
+          f"total = {summary['restore_bytes_vs_image']:.2f}x image "
+          f"({_fmt_bytes(summary['restore_bytes_per_replica'])}/replica, "
+          f"dedup ratio {summary['dedup_ratio']:.2f})")
+    p50, p99 = summary["ttft_p50_s"], summary["ttft_p99_s"]
+    if p50 is not None:
+        print(f"  TTFT: p50 {p50*1e3:.1f}ms  p99 {p99*1e3:.1f}ms")
+    print(f"  served {summary['requests_served']}/"
+          f"{summary['requests_arrived']} request(s) in "
+          f"{summary['ticks']} tick(s), goodput "
+          f"{summary['goodput_requests_per_replica_tick']:.2f} "
+          f"req/replica-tick, {summary['autoscale_boots']} autoscale "
+          f"boot(s), {summary['drains']} drain(s)")
+    for rep in summary["per_replica"]:
+        if rep["status"] == "dead":
+            print(f"  {rep['rid']} [{rep['host']}] quarantined: "
+                  f"{rep['diagnosis']}", file=sys.stderr)
+    bad = summary["requests_unserved"] > 0 or summary["dead"] > 0
+    if bad:
+        print(f"error: {summary['dead']} dead replica(s), "
+              f"{summary['requests_unserved']} unserved request(s)",
+              file=sys.stderr)
+    return 1 if bad else 0
+
+
 # ---------------------------------------------------------------- migrate
 def _verify_dest(dest: str, step: int) -> None:
     # the transferred image must be restorable *now*, while the source
@@ -986,6 +1035,29 @@ def build_parser() -> argparse.ArgumentParser:
                         "append, lazy entries) — bigger journal")
     p.set_defaults(fn=cmd_orchestrate)
 
+    p = sub.add_parser("serve-fleet", help="boot K decode replicas from "
+                       "one committed image (CAS dedup + lazy restore) "
+                       "and drive a bursty autoscaling request trace")
+    p.add_argument("run_dir")
+    p.add_argument("--replicas", type=int, default=8,
+                   help="initial fan-out (autoscale may add more)")
+    p.add_argument("--hosts", type=int, default=2,
+                   help="simulated hosts; one shared CAS each")
+    p.add_argument("--restore-mode", default="lazy",
+                   choices=["lazy", "eager"],
+                   help="lazy = params-critical cold boot (default)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--max-replicas", type=int, default=64,
+                   help="autoscale ceiling")
+    p.add_argument("--trace", default=None, metavar="N,N,...",
+                   help="arrivals per tick (default: a burst shaped "
+                        "to the fleet size)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also dump the full summary JSON here")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip the observability plane (no run journal)")
+    p.set_defaults(fn=cmd_serve_fleet)
+
     p = sub.add_parser("migrate", help="transfer snapshot images to a "
                        "peer store (content-addressed delta by default)")
     p.add_argument("run_dir", help="source run directory")
@@ -1061,7 +1133,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--job", default=None, help="only this job's events")
     p.add_argument("--class", dest="cls", default=None,
                    choices=["dump", "restore", "transfer", "fault", "job",
-                            "recovery", "pack", "orch", "metrics"],
+                            "recovery", "pack", "orch", "fleet", "metrics"],
                    help="only events of this class")
     p.add_argument("--json", action="store_true",
                    help="one JSON object per line instead of a table")

@@ -54,6 +54,16 @@ METRIC_SCHEMA: Dict[str, tuple] = {
     # schema row.
     "replica.*": ("counter", "mixed", "replicator last_stats mirror"),
     "chaos.injections": ("counter", "events", "faults actually armed"),
+    "fleet.replicas_booted": ("counter", "replicas",
+                              "fleet boots attempted"),
+    "fleet.replicas_serving": ("gauge", "replicas",
+                               "replicas currently serving"),
+    "fleet.ttft_s": ("histogram", "s",
+                     "per-replica time-to-first-token"),
+    "fleet.restore_bytes": ("counter", "bytes",
+                            "delta bytes shipped booting replicas"),
+    "fleet.requests_served": ("counter", "requests",
+                              "requests completed by the fleet"),
 }
 
 

@@ -70,6 +70,10 @@ SPAN_SCHEMA: Dict[str, tuple] = {
     "recovery.restore_background": ("orchestrator",
                                     "resume -> fully materialized"),
     "recovery.replay": ("orchestrator", "restored step -> caught up"),
+    "fleet.boot": ("orchestrator", "image -> serving replica "
+                                   "(the TTFT window)"),
+    "fleet.serve": ("orchestrator", "bursty request trace against the "
+                                    "fleet (autoscale inside)"),
 }
 
 

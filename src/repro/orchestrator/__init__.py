@@ -12,6 +12,8 @@ measurable per scenario (the paper's multi-tenant framing, reproduced).
     summary = run_scenario("preemption", run_dir)
     assert summary["all_done"]
 """
+from repro.orchestrator.fleet import (FleetConfig, Replica,  # noqa: F401
+                                      ServingFleet, run_fleet)
 from repro.orchestrator.job import (InvalidTransition, JobRecord,  # noqa: F401
                                     JobSpec, JobState, list_job_records)
 from repro.orchestrator.orchestrator import (MigrationPlan,  # noqa: F401

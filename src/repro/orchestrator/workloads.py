@@ -192,10 +192,9 @@ class ServeWorkload:
         return self.session.checkpoint_running(step)
 
     def restore(self) -> int:
-        # a replacement server needs a started cache skeleton to restore
-        # into (typed restore); the prefill is re-executed, the snapshot
-        # then overwrites cache + cursor token-exact
-        self.start()
+        # cold boot: the image carries params, cache, and cursor; the
+        # server derives abstract skeletons from the model — no prefill
+        # re-execution on a replacement node
         self.server.restore()
         return self.step
 

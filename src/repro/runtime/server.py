@@ -26,10 +26,13 @@ class DecodeServer:
                  run_dir: str, max_seq: int = 256,
                  compute_dtype=jnp.float32,
                  options: Optional[CheckpointOptions] = None,
-                 session: Optional[CheckpointSession] = None):
+                 session: Optional[CheckpointSession] = None,
+                 model=None):
         self.cfg = cfg
-        self.model = build_model(cfg, policy, mesh,
-                                 compute_dtype=compute_dtype, remat=False)
+        # `model=` lets a fleet of replicas share one model (and one jit
+        # cache) instead of recompiling per server
+        self.model = model if model is not None else build_model(
+            cfg, policy, mesh, compute_dtype=compute_dtype, remat=False)
         self.max_seq = max_seq
         self.params = None
         self.cache = None
@@ -54,8 +57,12 @@ class DecodeServer:
             lambda: {"pos": self.pos,
                      "tokens": self.tokens},
             self._restore_cursor)
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
+        jits = getattr(self.model, "_decode_server_jit", None)
+        if jits is None:
+            jits = (jax.jit(self.model.prefill),
+                    jax.jit(self.model.decode_step))
+            self.model._decode_server_jit = jits
+        self._prefill, self._decode = jits
 
     def _restore_cursor(self, st):
         self.pos = st["pos"]
@@ -166,19 +173,44 @@ class DecodeServer:
         self._finish_lazy_restore()
         return self.session.checkpoint(tag)
 
+    def _boot_template(self, template):
+        """Fill missing template subtrees with abstract skeletons.
+
+        Cold boot: by the time this runs, ``session.restore`` has already
+        replayed the ``decode_cursor`` host state, so the live batch size
+        comes from the restored tokens; the model supplies abstract
+        params/cache trees and ``retree`` only needs their structure.
+        """
+        if template["params"] is None:
+            template = dict(template, params=self.model.init_abstract())
+        if template["cache"] is None:
+            if self.tokens is None:
+                raise RuntimeError(
+                    "cold restore needs the decode_cursor host state in "
+                    "the image to size the cache skeleton")
+            B = int(np.asarray(self.tokens).shape[0])
+            template = dict(template,
+                            cache=self.model.cache_abstract(B, self.max_seq))
+        return template
+
     def restore(self, params_template=None, step: Optional[int] = None):
+        """Resume a generation from its image — warm or cold.
+
+        A warm server (started, or loaded with params) restores into its
+        live trees; a cold one (fresh object, nothing loaded) derives
+        abstract skeletons from the model once the snapshot's host state
+        has replayed the decode cursor — no prefill re-execution, no
+        hand-crafted cache skeleton.
+        """
         template = {"params": self.params if self.params is not None
                     else params_template,
                     "cache": self.cache}
-        if template["cache"] is None:
-            # rebuild an abstract cache skeleton for typed restore
-            raise RuntimeError("restore() requires a started server or "
-                               "use engine.restore() raw view")
+        engine = self.session.engine
         if self.session.options.restore_mode == "lazy":
             # resume-before-read: params place now, the KV cache streams
             # behind the server and is joined before the first decode step
             restored = self.session.restore(step=step, wait="critical")
-            engine = self.session.engine
+            template = self._boot_template(template)
             raw = restored.get("serve_state", {})
             try:
                 self.params = engine.retree(template["params"],
@@ -193,6 +225,13 @@ class DecodeServer:
                 self._pending_cache_template = template["cache"]
             else:
                 self.cache = engine.retree(template["cache"], raw["cache"])
+            return self.pos
+        if template["params"] is None or template["cache"] is None:
+            raw = self.session.restore(step=step, wait="all")
+            template = self._boot_template(template)
+            serve = raw["serve_state"]
+            self.params = engine.retree(template["params"], serve["params"])
+            self.cache = engine.retree(template["cache"], serve["cache"])
             return self.pos
         restored = self.session.restore_into(template, state="serve_state",
                                              step=step)

@@ -188,9 +188,15 @@ def test_killed_materializer_mid_stream_then_eager_retry(run_dir,
     s.checkpoint(2)
 
     killed = threading.Event()
+    gate = threading.Event()
     orig = LazyMaterializer._load_one
 
     def dying(self, state_name, path):
+        # hold the background stream until the test decides its fate —
+        # without the gate, a warm process can finish the whole stream
+        # before killed is even set (criticals don't pass through here,
+        # so restore() cannot deadlock on it)
+        gate.wait(30)
         if killed.is_set():
             raise IOError("materializer killed mid-stream")
         return orig(self, state_name, path)
@@ -199,6 +205,7 @@ def test_killed_materializer_mid_stream_then_eager_retry(run_dir,
     r = _session(run_dir, {"state": None}, **LAZY)
     r.restore()
     killed.set()                             # kill the stream mid-flight
+    gate.set()
     with pytest.raises(LazyRestoreError, match="killed mid-stream"):
         r.restore_barrier()
     monkeypatch.setattr(LazyMaterializer, "_load_one", orig)

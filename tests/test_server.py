@@ -46,6 +46,48 @@ def test_snapshot_mid_generation_token_exact(arch, tmp_path, mesh1):
     np.testing.assert_array_equal(expected, got)
 
 
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-2.7b"])
+def test_cold_boot_restore_token_exact(arch, tmp_path, mesh1):
+    """A *fresh* server — nothing loaded, never started — restores
+    straight from the image: the decode cursor sizes an abstract cache
+    skeleton, no prefill re-execution (the fleet fan-out path)."""
+    run = str(tmp_path / "srv")
+    srv, cfg = make_server(arch, run, mesh1)
+    batch = _prompt(cfg)
+    srv.start(batch)
+    srv.decode(3)
+    srv.checkpoint(0)
+    expected = srv.decode(4).copy()
+
+    srv2 = DecodeServer(get_smoke_config(arch), POLICY, mesh1, run,
+                        max_seq=64)
+    srv2.restore()                          # cold: no start(), no load()
+    assert srv2.pos == srv.pos - 4
+    got = srv2.decode(4)
+    np.testing.assert_array_equal(expected, got)
+
+
+def test_cold_boot_restore_lazy_token_exact(tmp_path, mesh1):
+    """Cold boot under lazy restore: params place first, the cache
+    skeleton is abstract until the first decode joins the stream."""
+    from repro.api import CheckpointOptions
+    run = str(tmp_path / "srv")
+    srv, cfg = make_server("qwen1.5-0.5b", run, mesh1)
+    batch = _prompt(cfg)
+    srv.start(batch)
+    srv.decode(3)
+    srv.checkpoint(0)
+    expected = srv.decode(4).copy()
+
+    srv2 = DecodeServer(cfg, POLICY, mesh1, run, max_seq=64,
+                        options=CheckpointOptions(restore_mode="lazy"))
+    srv2.restore()
+    assert srv2.params is not None          # critical set placed
+    got = srv2.decode(4)                    # first decode joins the stream
+    np.testing.assert_array_equal(expected, got)
+    assert not srv2.session.lazy_pending
+
+
 def test_greedy_decode_matches_model_argmax(tmp_path, mesh1):
     srv, cfg = make_server("qwen1.5-0.5b", str(tmp_path / "s"), mesh1)
     batch = _prompt(cfg, B=1, S=8)

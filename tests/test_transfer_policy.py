@@ -1,0 +1,153 @@
+"""TransferPolicy edge-case matrix: the shim's untested corners.
+
+PR 9 landed the structured policy with a legacy-kwarg/env shim;
+test_precopy covers validation basics, spec round-trips, and the kwargs
+conflict.  This closes the rest: the structured env var overriding the
+legacy env spellings (silently — the old vars are *ignored*, not
+merged), the full invalid-field rejection matrix of ``from_spec``,
+residual_bytes_cap rules, and that each deprecation path warns exactly
+once per process.
+"""
+import warnings
+
+import pytest
+
+import repro.api.options as options_mod
+from repro.api import CheckpointOptions, TransferPolicy
+from repro.api.options import OptionsError
+
+ENV = "REPRO_CKPT_"
+
+
+@pytest.fixture
+def fresh_warnings():
+    """Reset the warn-once registry for the keys under test."""
+    options_mod._WARNED.discard("options.transfer-kwargs")
+    options_mod._WARNED.discard("options.transfer-env")
+    yield
+    options_mod._WARNED.discard("options.transfer-kwargs")
+    options_mod._WARNED.discard("options.transfer-env")
+
+
+# ------------------------------------------------------- env precedence
+def test_env_policy_overrides_legacy_env_vars(fresh_warnings):
+    """REPRO_CKPT_TRANSFER_POLICY wins outright: the legacy vars are
+    dropped (not merged, not a conflict) and no deprecation fires."""
+    env = {ENV + "TRANSFER_POLICY": "mode=delta,workers=3",
+           ENV + "TRANSFER": "copy",            # would conflict if read
+           ENV + "TRANSFER_WORKERS": "7"}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # any warning -> failure
+        opts = CheckpointOptions.from_env(env)
+    assert opts.transfer_policy == TransferPolicy(mode="delta", workers=3)
+    # the legacy mirrors reflect the policy, not the ignored env vars
+    assert opts.transfer == "delta"
+    assert opts.transfer_workers == 3
+
+
+def test_env_legacy_vars_alone_still_map_with_warning(fresh_warnings):
+    env = {ENV + "TRANSFER": "delta", ENV + "TRANSFER_WORKERS": "2"}
+    with pytest.warns(DeprecationWarning, match="TRANSFER_POLICY"):
+        opts = CheckpointOptions.from_env(env)
+    assert opts.transfer_policy == TransferPolicy(mode="delta", workers=2)
+
+
+def test_env_policy_overrides_legacy_kwargs_via_replace(fresh_warnings):
+    """An env-sourced policy applied over legacy-kwarg options wins: the
+    stale kwarg mirrors are dropped rather than raising a conflict."""
+    with pytest.warns(DeprecationWarning):
+        legacy = CheckpointOptions(transfer="copy", transfer_workers=1)
+    env_policy = CheckpointOptions.from_env(
+        {ENV + "TRANSFER_POLICY": "mode=delta,workers=4"}).transfer_policy
+    merged = legacy.replace(transfer_policy=env_policy)
+    assert merged.transfer_policy == env_policy
+    assert merged.transfer == "delta"
+    assert merged.transfer_workers == 4
+
+
+# ------------------------------------------------- from_spec rejection
+@pytest.mark.parametrize("spec, match", [
+    ("mode=delta,turbo=1", "unknown TransferPolicy spec key"),
+    ("bogus", "must be k=v"),
+    ("mode=delta,,workers", "must be k=v"),
+    ("workers=two", "bad TransferPolicy spec value for workers"),
+    ("precopy_rounds=1.5", "bad TransferPolicy spec value"),
+    ("max_blackout_ms=soon", "bad TransferPolicy spec value"),
+    ("residual_bytes_cap=1e6", "bad TransferPolicy spec value"),
+    ("mode=teleport", "mode must be one of"),
+    ("mode=copy,precopy_rounds=2", "requires mode='delta'"),
+])
+def test_from_spec_rejects_invalid(spec, match):
+    with pytest.raises(OptionsError, match=match):
+        TransferPolicy.from_spec(spec)
+
+
+def test_from_spec_tolerates_whitespace_and_empty_parts():
+    pol = TransferPolicy.from_spec(" mode = delta , workers = 2 ,")
+    assert pol == TransferPolicy(mode="delta", workers=2)
+
+
+def test_spec_roundtrip_with_all_fields():
+    pol = TransferPolicy(mode="delta", workers=2, precopy_rounds=3,
+                         max_blackout_ms=50.0, residual_bytes_cap=1 << 20)
+    assert TransferPolicy.from_spec(pol.to_spec()) == pol
+
+
+# ------------------------------------------------- field validation
+@pytest.mark.parametrize("kw, match", [
+    (dict(workers=-1), "workers must be an int"),
+    (dict(workers=1.5), "workers must be an int"),
+    (dict(precopy_rounds=-2), "precopy_rounds must be an int"),
+    (dict(mode="delta", max_blackout_ms=0), "must be a number > 0"),
+    (dict(mode="delta", max_blackout_ms=-5.0), "must be a number > 0"),
+    (dict(mode="delta", precopy_rounds=1, residual_bytes_cap=0),
+     "residual_bytes_cap must be an int > 0"),
+    (dict(mode="delta", precopy_rounds=1, residual_bytes_cap=2.5),
+     "residual_bytes_cap must be an int > 0"),
+    (dict(mode="delta", residual_bytes_cap=1024),
+     "set precopy_rounds > 0"),
+    (dict(mode="delta", max_blackout_ms=10.0),
+     "set precopy_rounds > 0"),
+])
+def test_field_validation_matrix(kw, match):
+    with pytest.raises(OptionsError, match=match):
+        TransferPolicy(**kw)
+
+
+def test_policy_must_be_policy_instance():
+    with pytest.raises(OptionsError, match="must be a TransferPolicy"):
+        CheckpointOptions(transfer_policy="mode=delta")
+
+
+# ------------------------------------------------- warn-once semantics
+def test_kwargs_deprecation_fires_exactly_once(fresh_warnings):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        CheckpointOptions(transfer="delta")
+        CheckpointOptions(transfer="copy", transfer_workers=2)
+        CheckpointOptions(transfer_workers=1)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "transfer_policy=TransferPolicy" in str(dep[0].message)
+
+
+def test_env_deprecation_fires_exactly_once(fresh_warnings):
+    env = {ENV + "TRANSFER": "delta"}
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        CheckpointOptions.from_env(env)
+        CheckpointOptions.from_env({ENV + "TRANSFER_WORKERS": "3"})
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "TRANSFER_POLICY" in str(dep[0].message)
+
+
+def test_env_and_kwargs_paths_warn_independently(fresh_warnings):
+    """The two deprecation paths are keyed separately: using both legacy
+    spellings in one process yields one warning *each*."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        CheckpointOptions(transfer="delta")
+        CheckpointOptions.from_env({ENV + "TRANSFER": "delta"})
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 2

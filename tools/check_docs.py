@@ -29,8 +29,9 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SKIP_MARK = "<!-- check_docs: skip -->"
-PLACEHOLDERS = ("RUN_DIR", "ORCH_RUN", "PEER_STORE", "CHAOS_RUN")
-SLOW_TOKENS = ("orchestrate", "migrate", "chaos")
+PLACEHOLDERS = ("RUN_DIR", "ORCH_RUN", "PEER_STORE", "CHAOS_RUN",
+                "FLEET_RUN")
+SLOW_TOKENS = ("orchestrate", "migrate", "chaos", "serve-fleet")
 RUNNABLE_PREFIXES = ("python -m repro", "python -m benchmarks")
 
 FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
